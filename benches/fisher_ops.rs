@@ -1,0 +1,52 @@
+//! Benchmarks for the Fisher-approximation operations on a
+//! paper-scale architecture (the MNIST autoencoder): statistics
+//! computation, inverse refresh (task 5), preconditioner application
+//! (task 6) for both structures.
+
+use kfac::backend::{ModelBackend, RustBackend};
+use kfac::bench::{bench, default_budget};
+use kfac::coordinator::trainer::Problem;
+use kfac::fisher::stats::KfacStats;
+use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
+use kfac::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let problem = Problem::MnistAe;
+    let arch = problem.arch();
+    println!("arch {:?} ({} params)", arch.widths, arch.num_params());
+    let ds = problem.dataset(256, 0);
+    let mut backend = RustBackend::new(arch.clone());
+    let params = arch.sparse_init(&mut Rng::new(1));
+    let (x, y) = (ds.x.clone(), ds.y.clone());
+
+    bench("grad_and_stats_m256", budget, || {
+        std::hint::black_box(backend.grad_and_stats(&params, &x, &y, 32, 7));
+    });
+
+    let (_, grad, raw) = backend.grad_and_stats(&params, &x, &y, 256, 7);
+    let mut stats = KfacStats::new(&arch);
+    stats.update(&raw);
+    let gamma = 1.0;
+
+    bench("blockdiag_build(mnist_ae)", budget, || {
+        std::hint::black_box(BlockDiagInverse::build(&stats.s, gamma));
+    });
+    bench("tridiag_build(mnist_ae)", budget, || {
+        std::hint::black_box(TridiagInverse::build(&stats.s, gamma));
+    });
+
+    let bd = BlockDiagInverse::build(&stats.s, gamma);
+    let tri = TridiagInverse::build(&stats.s, gamma);
+    bench("blockdiag_apply(mnist_ae)", budget, || {
+        std::hint::black_box(bd.apply(&grad));
+    });
+    bench("tridiag_apply(mnist_ae)", budget, || {
+        std::hint::black_box(tri.apply(&grad));
+    });
+
+    bench("fvp_quad_2dirs_m64", budget, || {
+        let d2 = grad.scale(0.5);
+        std::hint::black_box(backend.fvp_quad(&params, &x, 64, &[&grad, &d2]));
+    });
+}

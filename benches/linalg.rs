@@ -1,0 +1,51 @@
+//! Micro-benchmarks for the dense linear-algebra substrate (the L3 hot
+//! paths). Run with `cargo bench --bench linalg`.
+
+use kfac::bench::{bench, default_budget};
+use kfac::linalg::{chol::spd_inverse, KronPairInverse, Mat, SymEig};
+use kfac::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let mut rng = Rng::new(0);
+
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (1000, 257, 100), (401, 401, 401)] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let flops = (2 * m * k * n) as f64;
+        let r = bench(&format!("matmul_{m}x{k}x{n}"), budget, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        r.report_throughput("GFLOP/s", flops);
+    }
+
+    for n in [101usize, 257, 401] {
+        let x = Mat::randn(n + 8, n, 1.0, &mut rng);
+        let spd = x.matmul_tn(&x).add_diag(0.5);
+        bench(&format!("spd_inverse_{n}"), budget, || {
+            std::hint::black_box(spd_inverse(&spd));
+        });
+        bench(&format!("sym_eig_{n}"), budget, || {
+            std::hint::black_box(SymEig::new(&spd));
+        });
+    }
+
+    // Appendix-B structured inverse: build (amortized, every T3 iters)
+    // vs apply (every iteration).
+    let na = 101;
+    let nb = 40;
+    let xa = Mat::randn(na + 4, na, 1.0, &mut rng);
+    let a = xa.matmul_tn(&xa).add_diag(1.0);
+    let xb = Mat::randn(nb + 4, nb, 1.0, &mut rng);
+    let b = xb.matmul_tn(&xb).add_diag(1.0);
+    let c = a.scale(0.3);
+    let d = b.scale(0.4);
+    bench(&format!("kron_pair_inverse_build_{na}x{nb}"), budget, || {
+        std::hint::black_box(KronPairInverse::new(&a, &b, &c, &d, -1.0));
+    });
+    let kpi = KronPairInverse::new(&a, &b, &c, &d, -1.0);
+    let v = Mat::randn(nb, na, 1.0, &mut rng);
+    bench(&format!("kron_pair_inverse_apply_{na}x{nb}"), budget, || {
+        std::hint::black_box(kpi.apply(&v));
+    });
+}

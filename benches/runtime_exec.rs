@@ -1,0 +1,47 @@
+//! PJRT runtime benchmarks: per-program execution latency of the AOT
+//! artifacts (requires `make artifacts`; skips gracefully otherwise).
+
+use kfac::backend::{ModelBackend, PjrtBackend};
+use kfac::bench::{bench, default_budget};
+use kfac::linalg::Mat;
+use kfac::rng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_exec: no artifacts/ — run `make artifacts` first; skipping");
+        return;
+    }
+    let budget = default_budget();
+    for name in ["tiny_ae", "mnist_ae"] {
+        let mut backend = match PjrtBackend::new(&dir, name) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("skipping {name}: {e:#}");
+                continue;
+            }
+        };
+        let arch = backend.arch().clone();
+        let mut rng = Rng::new(1);
+        let params = arch.glorot_init(&mut rng);
+        let c = backend.chunk_size();
+        let x = Mat::randn(c, arch.widths[0], 0.5, &mut rng);
+        let y = Mat::from_fn(c, *arch.widths.last().unwrap(), |_, _| rng.bernoulli(0.3));
+
+        bench(&format!("pjrt_{name}_fwd_loss_chunk{c}"), budget, || {
+            std::hint::black_box(backend.loss(&params, &x, &y));
+        });
+        bench(&format!("pjrt_{name}_grad_chunk{c}"), budget, || {
+            std::hint::black_box(backend.grad(&params, &x, &y));
+        });
+        bench(&format!("pjrt_{name}_grad_stats_chunk{c}"), budget, || {
+            std::hint::black_box(backend.grad_and_stats(&params, &x, &y, c, 7));
+        });
+        let v = arch.glorot_init(&mut rng);
+        let u = arch.glorot_init(&mut rng);
+        bench(&format!("pjrt_{name}_fvp2_chunk{c}"), budget, || {
+            std::hint::black_box(backend.fvp_quad(&params, &x, c, &[&v, &u]));
+        });
+    }
+}

@@ -1,0 +1,78 @@
+"""AOT lowering: JAX/Pallas programs -> HLO **text** artifacts.
+
+For every model in ``model.REGISTRY`` and every program in
+``model.program_specs``, jit-lower to StableHLO, convert to an
+XlaComputation with ``return_tuple=True``, and dump the HLO text to
+``artifacts/<arch>/<program>.hlo.txt``; finally write
+``artifacts/manifest.json`` describing shapes/losses/chunks for the
+Rust runtime.
+
+HLO *text* (not serialized ``HloModuleProto``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+pinned xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(md: model.ModelDef, out_dir: str) -> dict:
+    """Lower all programs for one model; returns the manifest entry."""
+    arch_dir = os.path.join(out_dir, md.name)
+    os.makedirs(arch_dir, exist_ok=True)
+    programs = {}
+    for prog_name, (fn, specs) in model.program_specs(md).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        rel = f"{md.name}/{prog_name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        programs[prog_name] = rel
+        print(f"  {rel}: {len(text) // 1024} KiB", flush=True)
+    return md.manifest_entry(programs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated arch names (default: all)",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for md in model.REGISTRY:
+        if only is not None and md.name not in only:
+            continue
+        print(f"lowering {md.name} (widths={list(md.widths)})", flush=True)
+        entries.append(lower_model(md, args.out))
+
+    manifest = {"version": 1, "archs": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+    return None
+
+
+if __name__ == "__main__":
+    sys.exit(main())

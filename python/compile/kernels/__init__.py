@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The per-iteration dense hot spots of K-FAC, written as tiled Pallas
+kernels and lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls; the interpret lowering emits plain HLO ops
+with identical numerics — see DESIGN.md §Hardware-Adaptation).
+
+- ``matmul``: the tiled GEMM every other kernel rides on
+  (128x128 MXU-aligned output tiles, reduction loop over K).
+- ``linear``: fused layer forward ``act(abar @ W^T)``.
+- ``cov``: weighted second moments ``(w*x)^T y`` (Fisher-factor stats).
+- ``precond``: Kronecker preconditioner application ``Ginv V Ainv``.
+
+``ref.py`` holds the pure-jnp oracles used by the pytest suite.
+"""
+
+from . import cov, linear, matmul, precond, ref  # noqa: F401

@@ -1,0 +1,16 @@
+"""Weighted second-moment kernel: ``(w * x)^T y`` (sums, not means).
+
+These are the Fisher-factor statistics of paper Section 5
+(``A_{i,j} = E[abar_i abar_j^T]``, ``G_{i,j} = E[g_i g_j^T]``), computed
+as weighted sums so the Rust coordinator can combine fixed-shape chunks
+exactly and divide by the true row count.
+"""
+
+from . import matmul
+
+
+def cov(x, y, w):
+    """``(x * w[:, None]).T @ y`` via the tiled GEMM kernel."""
+    assert x.shape[0] == y.shape[0] == w.shape[0]
+    xw = x * w[:, None]
+    return matmul.matmul_tn(xw, y)

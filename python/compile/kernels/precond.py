@@ -1,0 +1,14 @@
+"""Kronecker preconditioner application (paper Section 4.2):
+
+``U = Ginv @ V @ Ainv`` — the `(A (x) B)^-1 vec(V) = vec(B^-1 V A^-1)`
+vec-trick realized as two tiled GEMMs. This is the per-layer hot spot
+of applying the block-diagonal inverse Fisher to a gradient.
+"""
+
+from . import matmul
+
+
+def kron_apply(ginv, v, ainv):
+    """``ginv @ v @ ainv`` with `v` shaped like a weight matrix."""
+    assert ginv.shape[1] == v.shape[0] and v.shape[1] == ainv.shape[0]
+    return matmul.matmul(matmul.matmul(ginv, v), ainv)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the pytest ground truth)."""
+
+import jax.numpy as jnp
+
+_ACTS = {
+    "tanh": jnp.tanh,
+    "logistic": lambda s: 1.0 / (1.0 + jnp.exp(-s)),
+    "relu": lambda s: jnp.maximum(s, 0.0),
+    "identity": lambda s: s,
+}
+
+
+def matmul(x, y, activation=None):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    return activation(out) if activation is not None else out
+
+
+def linear_fwd(abar, w, act="identity"):
+    return _ACTS[act](jnp.dot(abar, w.T))
+
+
+def cov(x, y, w):
+    return jnp.dot((x * w[:, None]).T, y)
+
+
+def kron_apply(ginv, v, ainv):
+    return jnp.dot(jnp.dot(ginv, v), ainv)

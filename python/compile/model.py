@@ -1,0 +1,371 @@
+"""Layer-2 JAX model: the paper's feed-forward networks with manual
+forward/backward (Algorithm 1), Fisher-factor statistics (Section 5)
+and exact-Fisher quadratic forms (Appendix C), built on the Pallas
+kernels and lowered AOT per architecture by ``aot.py``.
+
+Conventions (mirroring the Rust `nn` module exactly):
+
+- batches are row-major (`[m, d]`, one case per row);
+- homogeneous coordinates: `abar = [a, 1]`, bias = last column of `W`;
+- the output nonlinearity lives in the loss (`z` = natural parameters);
+- every program output is a **weighted sum** over the per-row 0/1 mask
+  `w`, so the Rust coordinator can chunk arbitrary mini-batches through
+  fixed-shape executables exactly.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from . import prng
+from .kernels import cov as kcov
+from .kernels import linear as klinear
+from .kernels import matmul as kmatmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Architecture + lowering metadata for one model variant."""
+
+    name: str
+    widths: Tuple[int, ...]
+    acts: Tuple[str, ...]  # one per layer; last must be "identity"
+    loss: str  # sigmoid_ce | softmax_ce | squared_error
+    chunk: int  # rows per compiled executable
+
+    def __post_init__(self):
+        assert len(self.widths) == len(self.acts) + 1
+        assert self.acts[-1] == "identity"
+        assert self.loss in ("sigmoid_ce", "softmax_ce", "squared_error")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.acts)
+
+    def weight_shapes(self) -> List[Tuple[int, int]]:
+        return [
+            (self.widths[i + 1], self.widths[i] + 1)
+            for i in range(self.num_layers)
+        ]
+
+    def manifest_entry(self, programs: Dict[str, str]) -> dict:
+        return {
+            "name": self.name,
+            "widths": list(self.widths),
+            "acts": list(self.acts),
+            "loss": self.loss,
+            "chunk": self.chunk,
+            "programs": programs,
+        }
+
+
+# ---------------------------------------------------------------------------
+# forward / backward (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _append_ones(a):
+    return jnp.concatenate([a, jnp.ones((a.shape[0], 1), jnp.float32)], axis=1)
+
+
+def _act_deriv(name, s, a):
+    if name == "tanh":
+        return 1.0 - a * a
+    if name == "logistic":
+        return a * (1.0 - a)
+    if name == "relu":
+        return (s > 0.0).astype(jnp.float32)
+    return jnp.ones_like(s)
+
+
+def forward(md: ModelDef, params, x):
+    """Returns (abars, ss): `abars[i]` feeds layer i; `z = ss[-1]`."""
+    abars, ss = [_append_ones(x)], []
+    for i in range(md.num_layers):
+        s = kmatmul.matmul_nt(abars[i], params[i])  # pre-activations
+        ss.append(s)
+        if i + 1 < md.num_layers:
+            act = klinear.act_fn(md.acts[i])
+            a = act(s) if act is not None else s
+            abars.append(_append_ones(a))
+    return abars, ss
+
+
+def backward(md: ModelDef, params, abars, ss, dz):
+    """Per-case pre-activation derivatives `gs` from output derivs `dz`."""
+    l = md.num_layers
+    gs = [None] * l
+    gs[l - 1] = dz
+    for i in reversed(range(l - 1)):
+        da = kmatmul.matmul(gs[i + 1], params[i + 1][:, :-1])
+        act = klinear.act_fn(md.acts[i])
+        a = act(ss[i]) if act is not None else ss[i]
+        gs[i] = da * _act_deriv(md.acts[i], ss[i], a)
+    return gs
+
+
+def grad_sums(md: ModelDef, abars, gs):
+    """Weight-gradient **sums** `dW_i = g_i^T abar_{i-1}` (mask folded
+    into `gs` upstream)."""
+    return [kmatmul.matmul_tn(gs[i], abars[i]) for i in range(md.num_layers)]
+
+
+# ---------------------------------------------------------------------------
+# losses (natural-parameter exp-family; per-case values)
+# ---------------------------------------------------------------------------
+
+
+def predict(md: ModelDef, z):
+    if md.loss == "sigmoid_ce":
+        return 1.0 / (1.0 + jnp.exp(-z))
+    if md.loss == "softmax_ce":
+        zm = z - jnp.max(z, axis=1, keepdims=True)
+        e = jnp.exp(zm)
+        return e / jnp.sum(e, axis=1, keepdims=True)
+    return z
+
+
+def per_case_loss(md: ModelDef, z, y):
+    if md.loss == "sigmoid_ce":
+        sp = jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        return jnp.sum(sp - y * z, axis=1)
+    if md.loss == "softmax_ce":
+        zm = z - jnp.max(z, axis=1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(zm), axis=1, keepdims=True)) - zm
+        return jnp.sum(y * lse, axis=1)
+    return 0.5 * jnp.sum((z - y) ** 2, axis=1)
+
+
+def per_case_error(md: ModelDef, z, y):
+    if md.loss == "softmax_ce":
+        return (jnp.argmax(z, axis=1) != jnp.argmax(y, axis=1)).astype(jnp.float32)
+    p = predict(md, z)
+    return jnp.sum((p - y) ** 2, axis=1)
+
+
+def sample_targets(md: ModelDef, z, seed):
+    """Targets from the model's predictive distribution (Section 5)."""
+    p = predict(md, z)
+    if md.loss == "sigmoid_ce":
+        return prng.bernoulli(seed, p, stream=1)
+    if md.loss == "softmax_ce":
+        return prng.categorical_onehot(seed, z, stream=1)
+    return z + prng.normal(seed, z.shape, stream=1)
+
+
+def fr_quad_sum(md: ModelDef, z, jz1, jz2, w):
+    """Σ_cases w · jz1^T F_R(z) jz2 (Appendix C inner products)."""
+    if md.loss == "squared_error":
+        return jnp.sum(w[:, None] * jz1 * jz2)
+    p = predict(md, z)
+    if md.loss == "sigmoid_ce":
+        return jnp.sum(w[:, None] * p * (1.0 - p) * jz1 * jz2)
+    sab = jnp.sum(p * jz1 * jz2, axis=1)
+    sa = jnp.sum(p * jz1, axis=1)
+    sb = jnp.sum(p * jz2, axis=1)
+    return jnp.sum(w * (sab - sa * sb))
+
+
+# ---------------------------------------------------------------------------
+# the four AOT programs (see rust/src/backend/pjrt.rs for the contract)
+# ---------------------------------------------------------------------------
+
+
+def make_fwd_loss(md: ModelDef):
+    def fwd_loss(*args):
+        l = md.num_layers
+        params, (x, y, w) = list(args[:l]), args[l:]
+        _, ss = forward(md, params, x)
+        z = ss[-1]
+        return (
+            jnp.sum(w * per_case_loss(md, z, y)),
+            jnp.sum(w * per_case_error(md, z, y)),
+        )
+
+    return fwd_loss
+
+
+def make_grad(md: ModelDef):
+    def grad(*args):
+        l = md.num_layers
+        params, (x, y, w) = list(args[:l]), args[l:]
+        abars, ss = forward(md, params, x)
+        z = ss[-1]
+        dz = (predict(md, z) - y) * w[:, None]
+        gs = backward(md, params, abars, ss, dz)
+        dws = grad_sums(md, abars, gs)
+        return (
+            jnp.sum(w * per_case_loss(md, z, y)),
+            jnp.sum(w * per_case_error(md, z, y)),
+            *dws,
+        )
+
+    return grad
+
+
+def make_grad_stats(md: ModelDef):
+    def grad_stats(*args):
+        l = md.num_layers
+        params, (x, y, w, seed) = list(args[:l]), args[l:]
+        abars, ss = forward(md, params, x)
+        z = ss[-1]
+        # supervised gradient (mask folded into dz)
+        dz = (predict(md, z) - y) * w[:, None]
+        gs = backward(md, params, abars, ss, dz)
+        dws = grad_sums(md, abars, gs)
+        # Fisher statistics: extra backward pass with sampled targets
+        ys = sample_targets(md, z, seed)
+        dz_s = (predict(md, z) - ys) * w[:, None]
+        gs_s = backward(md, params, abars, ss, dz_s)
+        aa = [kcov.cov(abars[i], abars[i], w) for i in range(l)]
+        aa_off = [kcov.cov(abars[i], abars[i + 1], w) for i in range(l - 1)]
+        # gs_s already carries one factor of w (w²=w for 0/1 masks)
+        ones = jnp.ones_like(w)
+        gg = [kcov.cov(gs_s[i], gs_s[i], ones) for i in range(l)]
+        gg_off = [kcov.cov(gs_s[i], gs_s[i + 1], ones) for i in range(l - 1)]
+        return (
+            jnp.sum(w * per_case_loss(md, z, y)),
+            jnp.sum(w * per_case_error(md, z, y)),
+            *dws,
+            *aa,
+            *aa_off,
+            *gg,
+            *gg_off,
+        )
+
+    return grad_stats
+
+
+def _jvp_z(md: ModelDef, params, abars, ss, dirs):
+    """Linearized forward pass: dz/dθ · v from cached activations."""
+    l = md.num_layers
+    jabar = jnp.zeros_like(abars[0])
+    jz = None
+    for i in range(l):
+        js = kmatmul.matmul_nt(abars[i], dirs[i]) + kmatmul.matmul_nt(
+            jabar, params[i]
+        )
+        if i + 1 < l:
+            act = klinear.act_fn(md.acts[i])
+            a = act(ss[i]) if act is not None else ss[i]
+            ja = js * _act_deriv(md.acts[i], ss[i], a)
+            jabar = jnp.concatenate(
+                [ja, jnp.zeros((ja.shape[0], 1), jnp.float32)], axis=1
+            )
+        else:
+            jz = js
+    return jz
+
+
+def make_fvp2(md: ModelDef):
+    def fvp2(*args):
+        l = md.num_layers
+        params = list(args[:l])
+        x, w = args[l], args[l + 1]
+        v = list(args[l + 2 : l + 2 + l])
+        u = list(args[l + 2 + l : l + 2 + 2 * l])
+        abars, ss = forward(md, params, x)
+        z = ss[-1]
+        jzv = _jvp_z(md, params, abars, ss, v)
+        jzu = _jvp_z(md, params, abars, ss, u)
+        return (
+            fr_quad_sum(md, z, jzv, jzv, w),
+            fr_quad_sum(md, z, jzv, jzu, w),
+            fr_quad_sum(md, z, jzu, jzu, w),
+        )
+
+    return fvp2
+
+
+def make_precond(md: ModelDef, layer: int):
+    """Standalone per-layer preconditioner program (L1 showcase; the
+    Rust coordinator can offload `Ginv V Ainv` for its widest layer)."""
+    from .kernels import precond as kprecond
+
+    def precond(ginv, v, ainv):
+        return (kprecond.kron_apply(ginv, v, ainv),)
+
+    return precond
+
+
+# ---------------------------------------------------------------------------
+# example-input builders (for jax.jit(...).lower)
+# ---------------------------------------------------------------------------
+
+
+def _f32(shape):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32():
+    import jax
+
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def program_specs(md: ModelDef):
+    """(program name -> (fn, example arg specs)) for AOT lowering."""
+    c = md.chunk
+    d0, dl = md.widths[0], md.widths[-1]
+    ws = [_f32(s) for s in md.weight_shapes()]
+    x, y, w = _f32((c, d0)), _f32((c, dl)), _f32((c,))
+    specs = {
+        "fwd_loss": (make_fwd_loss(md), [*ws, x, y, w]),
+        "grad": (make_grad(md), [*ws, x, y, w]),
+        "grad_stats": (make_grad_stats(md), [*ws, x, y, w, _i32()]),
+        "fvp2": (make_fvp2(md), [*ws, x, w, *ws, *ws]),
+    }
+    # preconditioner for the widest layer (a pure-L1 program)
+    widest = max(range(md.num_layers), key=lambda i: md.widths[i + 1])
+    (r, cc) = md.weight_shapes()[widest]
+    specs["precond"] = (
+        make_precond(md, widest),
+        [_f32((r, r)), _f32((r, cc)), _f32((cc, cc))],
+    )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# model registry (must stay in sync with rust Problem::arch!)
+# ---------------------------------------------------------------------------
+
+
+def _ae(name, widths, chunk, loss="sigmoid_ce"):
+    acts = tuple(["tanh"] * (len(widths) - 2) + ["identity"])
+    return ModelDef(name, tuple(widths), acts, loss, chunk)
+
+
+REGISTRY: List[ModelDef] = [
+    _ae("mnist_ae", [784, 400, 200, 100, 30, 100, 200, 400, 784], 250),
+    _ae(
+        "curves_ae",
+        [784, 200, 100, 50, 25, 12, 6, 12, 25, 50, 100, 200, 784],
+        250,
+    ),
+    _ae(
+        "faces_ae",
+        [625, 500, 250, 125, 30, 125, 250, 500, 625],
+        250,
+        loss="squared_error",
+    ),
+    ModelDef(
+        "mnist_clf",
+        (256, 20, 20, 20, 20, 10),
+        ("tanh", "tanh", "tanh", "tanh", "identity"),
+        "softmax_ce",
+        250,
+    ),
+    # tiny variants for tests / fast smoke runs
+    _ae("tiny_ae", [8, 5, 3, 5, 8], 16),
+    ModelDef("tiny_clf", (6, 5, 4), ("tanh", "identity"), "softmax_ce", 8),
+]
+
+
+def by_name(name: str) -> ModelDef:
+    for md in REGISTRY:
+        if md.name == name:
+            return md
+    raise KeyError(name)

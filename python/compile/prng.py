@@ -1,0 +1,63 @@
+"""Counter-based PRNG in pure jnp (no jax.random).
+
+The ``grad_stats`` program must sample targets from the model's
+predictive distribution *inside* the lowered HLO (paper Section 5).
+``jax.random``'s threefry can lower through CPU custom-calls on some
+jaxlib versions, which the pinned xla_extension 0.5.1 cannot execute —
+so we use a self-contained stateless generator: a SplitMix32-style
+avalanche hash of (seed, counter), which lowers to plain integer HLO
+ops everywhere. Statistical quality is far beyond what the Monte-Carlo
+Fisher estimate needs (it is averaged over thousands of draws and then
+EMA'd across iterations).
+"""
+
+import jax.numpy as jnp
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _mix(h):
+    """fmix32 finalizer (murmur3) — full avalanche on 32 bits."""
+    h = h.astype(jnp.uint32)
+    h = (h ^ (h >> jnp.uint32(16))) * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> jnp.uint32(13))) * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> jnp.uint32(16))
+
+
+def uniform(seed, shape, stream=0):
+    """u32-hash-based uniforms in [0, 1) of the given static shape.
+
+    `seed` may be a traced scalar (int32/uint32); `stream` is a static
+    int separating independent draws inside one program.
+    """
+    n = 1
+    for d in shape:
+        n *= d
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    h = _mix(idx * _GOLDEN + s * jnp.uint32(0x7FEB352D) + jnp.uint32(stream) * jnp.uint32(0x846CA68B))
+    # 24 high bits -> f32 uniform in [0,1)
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    return u.reshape(shape)
+
+
+def normal(seed, shape, stream=0):
+    """Standard normals via Box–Muller over two uniform streams."""
+    u1 = uniform(seed, shape, stream=stream * 2 + 101)
+    u2 = uniform(seed, shape, stream=stream * 2 + 102)
+    u1 = jnp.maximum(u1, jnp.float32(1e-7))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(2.0 * 3.141592653589793) * u2)
+
+
+def bernoulli(seed, p, stream=0):
+    """0/1 f32 draws with per-element probabilities `p`."""
+    return (uniform(seed, p.shape, stream=stream) < p).astype(jnp.float32)
+
+
+def categorical_onehot(seed, logits, stream=0):
+    """One-hot categorical draws per row of `logits` (Gumbel-max)."""
+    u = uniform(seed, logits.shape, stream=stream)
+    g = -jnp.log(-jnp.log(jnp.maximum(u, jnp.float32(1e-7))))
+    idx = jnp.argmax(logits + g, axis=-1)
+    return jnp.eye(logits.shape[-1], dtype=jnp.float32)[idx]

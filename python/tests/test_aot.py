@@ -1,0 +1,53 @@
+"""AOT lowering path: programs lower to parseable HLO text with the
+expected parameter/output arity, and the manifest entries are complete.
+(The Rust side's ability to *execute* these is covered by
+tests/pjrt_roundtrip.rs.)"""
+
+import json
+
+from compile import aot, model
+
+
+def test_tiny_programs_lower_to_hlo_text():
+    md = model.by_name("tiny_clf")
+    specs = model.program_specs(md)
+    assert set(specs) == {"fwd_loss", "grad", "grad_stats", "fvp2", "precond"}
+    import jax
+
+    for name, (fn, args) in specs.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        # no TPU/CPU custom-calls may appear (xla_extension 0.5.1 cannot
+        # execute them) — the whole reason for the pure-jnp PRNG
+        assert "custom-call" not in text, f"{name} contains a custom call"
+        assert "ROOT" in text
+
+
+def test_grad_stats_output_arity_matches_contract():
+    # rust/src/backend/pjrt.rs expects:
+    # loss, err, dW×l, aa×l, aa_off×(l−1), gg×l, gg_off×(l−1)
+    md = model.by_name("tiny_ae")
+    fn, args = model.program_specs(md)["grad_stats"]
+    out = fn(*[_zeros(a) for a in args])
+    l = md.num_layers
+    assert len(out) == 2 + l + l + (l - 1) + l + (l - 1)
+
+
+def _zeros(spec):
+    import jax.numpy as jnp
+    import numpy as np
+
+    return jnp.asarray(np.zeros(spec.shape, spec.dtype))
+
+
+def test_manifest_entry_shape(tmp_path):
+    md = model.by_name("tiny_clf")
+    entry = aot.lower_model(md, str(tmp_path))
+    # round-trips through json and has everything the rust parser needs
+    entry = json.loads(json.dumps(entry))
+    for key in ["name", "widths", "acts", "loss", "chunk", "programs"]:
+        assert key in entry, key
+    assert entry["widths"] == list(md.widths)
+    for rel in entry["programs"].values():
+        assert (tmp_path / rel).exists()

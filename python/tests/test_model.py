@@ -1,0 +1,189 @@
+"""Layer-2 model programs vs jax autodiff / analytic oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, prng
+
+RNG = np.random.default_rng(1)
+
+
+def make_params(md):
+    return [
+        jnp.asarray(RNG.standard_normal(s).astype(np.float32) * 0.3)
+        for s in md.weight_shapes()
+    ]
+
+
+def make_batch(md, m):
+    x = jnp.asarray(RNG.standard_normal((m, md.widths[0])).astype(np.float32))
+    if md.loss == "softmax_ce":
+        idx = RNG.integers(0, md.widths[-1], size=m)
+        y = jnp.asarray(np.eye(md.widths[-1], dtype=np.float32)[idx])
+    elif md.loss == "sigmoid_ce":
+        y = jnp.asarray(
+            (RNG.uniform(size=(m, md.widths[-1])) < 0.5).astype(np.float32)
+        )
+    else:
+        y = jnp.asarray(RNG.standard_normal((m, md.widths[-1])).astype(np.float32))
+    return x, y
+
+
+def pure_loss(md, params, x, y):
+    """Reference mean loss via plain jnp (no pallas) for jax.grad."""
+    a = jnp.concatenate([x, jnp.ones((x.shape[0], 1), jnp.float32)], 1)
+    for i in range(md.num_layers):
+        s = a @ params[i].T
+        if i + 1 < md.num_layers:
+            assert md.acts[i] == "tanh"
+            a = jnp.concatenate(
+                [jnp.tanh(s), jnp.ones((s.shape[0], 1), jnp.float32)], 1
+            )
+    return jnp.sum(model.per_case_loss(md, s, y))
+
+
+@pytest.mark.parametrize("name", ["tiny_ae", "tiny_clf"])
+def test_manual_backward_matches_jax_grad(name):
+    md = model.by_name(name)
+    params = make_params(md)
+    x, y = make_batch(md, 12)
+    w = jnp.ones(12, jnp.float32)
+    outs = model.make_grad(md)(*params, x, y, w)
+    loss, _err, dws = outs[0], outs[1], outs[2:]
+    want_loss = pure_loss(md, params, x, y)
+    np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-4)
+    want_grads = jax.grad(lambda p: pure_loss(md, p, x, y))(params)
+    for got, want in zip(dws, want_grads):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4
+        )
+
+
+def test_mask_drops_rows_exactly():
+    md = model.by_name("tiny_ae")
+    params = make_params(md)
+    x, y = make_batch(md, 10)
+    w = jnp.asarray(np.array([1] * 6 + [0] * 4, np.float32))
+    full = model.make_grad(md)(*params, x, y, w)
+    sub = model.make_grad(md)(
+        *params, x[:6].repeat(1, axis=0), y[:6], jnp.ones(6, jnp.float32)
+    ) if False else None
+    # recompute on the first 6 rows only (fresh shapes)
+    x6 = jnp.concatenate([x[:6], jnp.zeros((4, x.shape[1]))], 0).astype(jnp.float32)
+    y6 = jnp.concatenate([y[:6], jnp.zeros((4, y.shape[1]))], 0).astype(jnp.float32)
+    again = model.make_grad(md)(*params, x6, y6, w)
+    # masked rows' contents must not matter
+    np.testing.assert_allclose(float(full[0]), float(again[0]), rtol=1e-5)
+    for a, b in zip(full[2:], again[2:]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_grad_stats_shapes_and_psd():
+    md = model.by_name("tiny_ae")
+    params = make_params(md)
+    x, y = make_batch(md, 16)
+    w = jnp.ones(16, jnp.float32)
+    outs = model.make_grad_stats(md)(*params, x, y, w, jnp.int32(7))
+    l = md.num_layers
+    k = 2 + l
+    aa = outs[k : k + l]
+    aa_off = outs[k + l : k + 2 * l - 1]
+    gg = outs[k + 2 * l - 1 : k + 3 * l - 1]
+    gg_off = outs[k + 3 * l - 1 :]
+    assert len(gg_off) == l - 1
+    for i in range(l):
+        d_in, d_out = md.widths[i] + 1, md.widths[i + 1]
+        assert aa[i].shape == (d_in, d_in)
+        assert gg[i].shape == (d_out, d_out)
+        # symmetric PSD (as a sum of outer products)
+        m = np.asarray(aa[i]) / 16.0
+        np.testing.assert_allclose(m, m.T, atol=1e-5)
+        evals = np.linalg.eigvalsh(m)
+        assert evals.min() > -1e-5
+        # homogeneous corner: sum of weights
+        np.testing.assert_allclose(m[-1, -1], 1.0, rtol=1e-5)
+    for i in range(l - 1):
+        assert aa_off[i].shape == (md.widths[i] + 1, md.widths[i + 1] + 1)
+        assert gg_off[i].shape == (md.widths[i + 1], md.widths[i + 2])
+
+
+def test_gg_seed_determinism_and_variation():
+    md = model.by_name("tiny_clf")
+    params = make_params(md)
+    x, y = make_batch(md, 16)
+    w = jnp.ones(16, jnp.float32)
+    f = model.make_grad_stats(md)
+    a = f(*params, x, y, w, jnp.int32(3))
+    b = f(*params, x, y, w, jnp.int32(3))
+    c = f(*params, x, y, w, jnp.int32(4))
+    l = md.num_layers
+    # outs layout: loss, err, dW×l, aa×l, aa_off×(l−1), gg×l, gg_off×(l−1)
+    gg_idx = 2 + l + l + (l - 1) + l - 1  # last gg block
+    np.testing.assert_array_equal(np.asarray(a[gg_idx]), np.asarray(b[gg_idx]))
+    assert np.abs(np.asarray(a[gg_idx]) - np.asarray(c[gg_idx])).max() > 0
+
+
+def test_fvp_matches_finite_difference_quadratic():
+    md = model.by_name("tiny_clf")
+    params = make_params(md)
+    x, _ = make_batch(md, 8)
+    w = jnp.ones(8, jnp.float32)
+    v = [jnp.asarray(RNG.standard_normal(p.shape).astype(np.float32)) for p in params]
+    u = [jnp.asarray(RNG.standard_normal(p.shape).astype(np.float32)) for p in params]
+    vfv, vfu, ufu = model.make_fvp2(md)(*params, x, w, *v, *u)
+    # oracle: F = J^T F_R J with J from jax.jacfwd of z(params)
+    def zfun(flat):
+        ps, off = [], 0
+        for p in params:
+            n = p.size
+            ps.append(flat[off : off + n].reshape(p.shape))
+            off += n
+        a = jnp.concatenate([x, jnp.ones((x.shape[0], 1), jnp.float32)], 1)
+        for i in range(md.num_layers):
+            s = a @ ps[i].T
+            if i + 1 < md.num_layers:
+                a = jnp.concatenate(
+                    [jnp.tanh(s), jnp.ones((s.shape[0], 1), jnp.float32)], 1
+                )
+        return s
+
+    flat = jnp.concatenate([p.reshape(-1) for p in params])
+    vflat = jnp.concatenate([p.reshape(-1) for p in v])
+    uflat = jnp.concatenate([p.reshape(-1) for p in u])
+    _, jzv = jax.jvp(zfun, (flat,), (vflat,))
+    _, jzu = jax.jvp(zfun, (flat,), (uflat,))
+    z = zfun(flat)
+    want_vfv = model.fr_quad_sum(md, z, jzv, jzv, w)
+    want_vfu = model.fr_quad_sum(md, z, jzv, jzu, w)
+    want_ufu = model.fr_quad_sum(md, z, jzu, jzu, w)
+    np.testing.assert_allclose(float(vfv), float(want_vfv), rtol=1e-3)
+    np.testing.assert_allclose(float(vfu), float(want_vfu), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(ufu), float(want_ufu), rtol=1e-3)
+
+
+def test_prng_uniform_stats():
+    u = np.asarray(prng.uniform(jnp.int32(5), (20000,)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.02
+    assert abs(u.var() - 1.0 / 12.0) < 0.01
+    # different seeds decorrelate
+    v = np.asarray(prng.uniform(jnp.int32(6), (20000,)))
+    assert abs(np.corrcoef(u, v)[0, 1]) < 0.05
+
+
+def test_prng_normal_and_samplers():
+    z = np.asarray(prng.normal(jnp.int32(2), (20000,)))
+    assert abs(z.mean()) < 0.05 and abs(z.std() - 1.0) < 0.05
+    p = jnp.full((20000,), 0.3, jnp.float32)
+    b = np.asarray(prng.bernoulli(jnp.int32(3), p))
+    assert abs(b.mean() - 0.3) < 0.02
+    logits = jnp.asarray(np.log(np.array([[0.2, 0.5, 0.3]], np.float32)))
+    oh = np.asarray(
+        prng.categorical_onehot(jnp.int32(4), jnp.tile(logits, (20000, 1)))
+    )
+    # Note: identical logits rows still get independent draws (the hash
+    # counter runs over all elements).
+    freq = oh.mean(axis=0)
+    np.testing.assert_allclose(freq, [0.2, 0.5, 0.3], atol=0.03)

@@ -1,0 +1,61 @@
+//! Model-compute backends.
+//!
+//! The K-FAC coordinator (Layer 3) is generic over *where* the per-batch
+//! heavy compute happens, via [`ModelBackend`]:
+//!
+//! - [`RustBackend`] — the pure-Rust `nn` substrate (f64). Used by the
+//!   structure experiments, tests, and as a fallback; also the oracle
+//!   the PJRT path is cross-validated against.
+//! - [`PjrtBackend`](crate::backend::pjrt::PjrtBackend) — executes the
+//!   AOT-compiled JAX/Pallas HLO artifacts through the PJRT CPU client
+//!   (`rust/src/runtime`). This is the "request path": Python never
+//!   runs at training time.
+
+pub mod pjrt;
+pub mod rust_backend;
+
+pub use pjrt::PjrtBackend;
+pub use rust_backend::RustBackend;
+
+use crate::fisher::stats::RawStats;
+use crate::linalg::Mat;
+use crate::nn::{Arch, Params};
+
+/// Per-batch second-moment statistics (alias of the Fisher-factor raw
+/// statistics; see [`RawStats`]).
+pub type BatchStats = RawStats;
+
+/// The compute interface the optimizer drives.
+///
+/// All losses/gradients are **means over the mini-batch** and exclude
+/// the ℓ2 term (the optimizer owns `η`). `x`/`y` have one case per row.
+pub trait ModelBackend {
+    fn arch(&self) -> &Arch;
+
+    /// Mean loss `h(θ)` on the batch (no ℓ2).
+    fn loss(&mut self, p: &Params, x: &Mat, y: &Mat) -> f64;
+
+    /// (mean loss, mean reported error) — reconstruction error for
+    /// autoencoders/regression, 0/1 error for classification.
+    fn eval(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, f64);
+
+    /// Mean loss + gradient.
+    fn grad(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, Params);
+
+    /// Mean loss + gradient on the full batch, plus Fisher-factor
+    /// statistics computed on the first `stats_rows` rows (the τ₁ subset
+    /// of Section 8) with model-sampled targets seeded by `seed`.
+    fn grad_and_stats(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        y: &Mat,
+        stats_rows: usize,
+        seed: u64,
+    ) -> (f64, Params, BatchStats);
+
+    /// Pairwise exact-Fisher quadratic forms `dᵢᵀ F dⱼ` over the first
+    /// `fvp_rows` rows of `x` (the τ₂ subset), as a `k×k` matrix
+    /// (Appendix C trick; no damping terms included).
+    fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat;
+}

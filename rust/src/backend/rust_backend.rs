@@ -1,0 +1,104 @@
+//! Pure-Rust model backend over the `nn` substrate.
+
+use super::{BatchStats, ModelBackend};
+use crate::fisher::stats::RawStats;
+use crate::linalg::Mat;
+use crate::nn::net::Net;
+use crate::nn::{Arch, Params};
+use crate::rng::Rng;
+
+/// f64 reference backend. Deterministic given the per-call `seed`.
+pub struct RustBackend {
+    net: Net,
+}
+
+impl RustBackend {
+    pub fn new(arch: Arch) -> RustBackend {
+        RustBackend { net: Net::new(arch) }
+    }
+
+    pub fn net(&self) -> &Net {
+        &self.net
+    }
+}
+
+impl ModelBackend for RustBackend {
+    fn arch(&self) -> &Arch {
+        &self.net.arch
+    }
+
+    fn loss(&mut self, p: &Params, x: &Mat, y: &Mat) -> f64 {
+        self.net.loss(p, x, y)
+    }
+
+    fn eval(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, f64) {
+        let fwd = self.net.forward(p, x);
+        let loss = self.net.arch.loss.loss(fwd.z(), y);
+        let err = self.net.arch.loss.error(fwd.z(), y);
+        (loss, err)
+    }
+
+    fn grad(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, Params) {
+        self.net.loss_and_grad(p, x, y)
+    }
+
+    fn grad_and_stats(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        y: &Mat,
+        stats_rows: usize,
+        seed: u64,
+    ) -> (f64, Params, BatchStats) {
+        let fwd = self.net.forward(p, x);
+        let loss = self.net.arch.loss.loss(fwd.z(), y);
+        let dz = self.net.arch.loss.dz(fwd.z(), y);
+        let gs = self.net.backward(p, &fwd, &dz);
+        let grads = self.net.grads_from(&fwd, &gs);
+
+        // Statistics on the τ₁ subset with model-sampled targets
+        // (Section 5): one extra backward pass.
+        let rows = stats_rows.clamp(1, x.rows);
+        let xs = x.top_rows(rows);
+        let sfwd = self.net.forward(p, &xs);
+        let mut rng = Rng::new(seed);
+        let sgs = self.net.sampled_backward(p, &sfwd, &mut rng);
+        let stats = RawStats::from_batch(&sfwd, &sgs);
+        (loss, grads, stats)
+    }
+
+    fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat {
+        let rows = fvp_rows.clamp(1, x.rows);
+        let xs = x.top_rows(rows);
+        self.net.fvp_quad(p, &xs, dirs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Act, LossKind};
+
+    #[test]
+    fn backend_consistent_with_net() {
+        let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+        let mut be = RustBackend::new(arch.clone());
+        let mut rng = Rng::new(1);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(10, 4, 1.0, &mut rng);
+        let mut y = Mat::zeros(10, 2);
+        for r in 0..10 {
+            y.set(r, r % 2, 1.0);
+        }
+        let (l1, g) = be.grad(&p, &x, &y);
+        let l2 = be.loss(&p, &x, &y);
+        assert!((l1 - l2).abs() < 1e-14);
+        let (l3, g2, stats) = be.grad_and_stats(&p, &x, &y, 5, 7);
+        assert!((l1 - l3).abs() < 1e-14);
+        assert!(g.0[0].sub(&g2.0[0]).max_abs() < 1e-14);
+        assert_eq!(stats.aa[0].rows, 5);
+        // deterministic given seed
+        let (_, _, stats2) = be.grad_and_stats(&p, &x, &y, 5, 7);
+        assert!(stats.gg[0].sub(&stats2.gg[0]).max_abs() == 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny criterion-style benchmark harness (no external crates).
+//!
+//! Our `[[bench]]` targets use `harness = false` and call into this
+//! module: each benchmark warms up, then runs timed iterations until a
+//! wall-clock budget is spent, and reports mean / median / stddev /
+//! throughput in a stable, greppable format. The figure-level
+//! experiment binaries use [`Timer`] directly.
+
+use std::time::{Duration, Instant};
+
+/// Simple wall-clock stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<6} mean={:>12} median={:>12} stddev={:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.stddev_s),
+        );
+    }
+
+    /// Report with a derived throughput (e.g. GFLOP/s).
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+        println!(
+            "bench {:<40} iters={:<6} mean={:>12} median={:>12} {:>10.3} {unit}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            per_iter / self.median_s / 1e9,
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to the time budget.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + calibration: run once to estimate cost.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64().max(1e-9);
+    let target_iters = ((budget.as_secs_f64() / first) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(target_iters);
+    let hard_deadline = Instant::now() + budget.mul_f64(2.0);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if Instant::now() > hard_deadline {
+            break;
+        }
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: crate::util::mean(&samples),
+        median_s: crate::util::median(&samples),
+        stddev_s: crate::util::stddev(&samples),
+    };
+    res.report();
+    res
+}
+
+/// Default per-benchmark budget (override with KFAC_BENCH_BUDGET_MS).
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("KFAC_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(1500);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

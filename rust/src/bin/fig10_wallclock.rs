@@ -1,0 +1,67 @@
+//! Figure 10 — training error vs **wall-clock time** on the CURVES,
+//! MNIST and FACES autoencoder problems: K-FAC (block-tridiagonal and
+//! block-diagonal, with the exponentially increasing batch schedule of
+//! Section 13), K-FAC without momentum, and the SGD+NAG baseline.
+//!
+//! Runs on the PJRT backend (the AOT JAX/Pallas artifacts) by default —
+//! set `--backend rust` to use the pure-Rust reference backend, and
+//! `--iters / --data` (or KFAC_EXP_SCALE) to shrink the experiment.
+//! Each run is cached under results/fig10_<problem>_<variant>.csv, and
+//! fig11_periter replots the same runs per-iteration.
+
+use kfac::coordinator::cli::Args;
+use kfac::experiments::{scaled, training_curves_fig10};
+
+fn main() {
+    let args = Args::from_env();
+    let backend = args.get_or("backend", "pjrt");
+    let iters = args.get_usize("iters", scaled(80, 20));
+    let n_data = args.get_usize("data", scaled(2500, 600));
+    println!("== Figure 10: training error vs wall-clock ({backend} backend, {iters} iters, |S|={n_data}) ==");
+
+    let runs = training_curves_fig10(&backend, iters, n_data);
+
+    println!(
+        "\n{:>10} {:>18} {:>10} {:>12} {:>12}",
+        "problem", "variant", "time_s", "final_err", "err@50%time"
+    );
+    let mut by_problem: std::collections::BTreeMap<&str, Vec<(String, f64, f64)>> =
+        Default::default();
+    for (problem, vname, log) in &runs {
+        let last = log.last().unwrap();
+        let half_t = last.time_s / 2.0;
+        let half = log.iter().find(|r| r.time_s >= half_t).unwrap_or(last);
+        println!(
+            "{:>10} {:>18} {:>10.1} {:>12.5} {:>12.5}",
+            problem.name(),
+            vname,
+            last.time_s,
+            last.train_err,
+            half.train_err
+        );
+        by_problem.entry(problem.name()).or_default().push((
+            vname.clone(),
+            last.time_s,
+            last.train_err,
+        ));
+    }
+
+    // paper-shape check: on each problem, K-FAC (tridiag, momentum)
+    // reaches a lower final error than the SGD baseline.
+    println!();
+    for (pname, rows) in &by_problem {
+        let kfac = rows.iter().find(|r| r.0 == "kfac_blktridiag");
+        let sgd = rows.iter().find(|r| r.0 == "sgd");
+        if let (Some(k), Some(s)) = (kfac, sgd) {
+            println!(
+                "{pname}: kfac err {:.5} ({:.0}s) vs sgd err {:.5} ({:.0}s)  -> {}",
+                k.2,
+                k.1,
+                s.2,
+                s.1,
+                if k.2 < s.2 { "kfac wins" } else { "sgd wins (check tuning)" }
+            );
+        }
+    }
+    println!("\nper-run CSVs are in results/fig10_*.csv (time_s column = x-axis)");
+}

@@ -1,0 +1,62 @@
+//! Figure 11 — the same runs as Figure 10 plotted against **iteration**
+//! count. The paper's headline per-iteration findings to reproduce:
+//!  - K-FAC variants make orders-of-magnitude more per-iteration
+//!    progress than SGD,
+//!  - the block-tridiagonal version makes ~25–40% more per-iteration
+//!    progress than the block-diagonal version.
+//!
+//! Reuses the cached fig10 runs when present (run fig10_wallclock
+//! first, or this binary will run them itself).
+
+use kfac::coordinator::cli::Args;
+use kfac::experiments::{scaled, training_curves_fig10};
+
+fn main() {
+    let args = Args::from_env();
+    let backend = args.get_or("backend", "pjrt");
+    let iters = args.get_usize("iters", scaled(80, 20));
+    let n_data = args.get_usize("data", scaled(2500, 600));
+    println!("== Figure 11: training error vs iteration ==");
+
+    let runs = training_curves_fig10(&backend, iters, n_data);
+
+    println!(
+        "\n{:>10} {:>18} {:>8} {:>12} {:>12}",
+        "problem", "variant", "iters", "err@25%", "final_err"
+    );
+    let mut tri_vs_diag: Vec<(String, f64, f64)> = Vec::new();
+    for (problem, vname, log) in &runs {
+        let last = log.last().unwrap();
+        let q = log
+            .iter()
+            .find(|r| r.iter * 4 >= last.iter)
+            .unwrap_or(last);
+        println!(
+            "{:>10} {:>18} {:>8} {:>12.5} {:>12.5}",
+            problem.name(),
+            vname,
+            last.iter,
+            q.train_err,
+            last.train_err
+        );
+        if vname == "kfac_blktridiag" {
+            tri_vs_diag.push((problem.name().to_string(), last.train_err, f64::NAN));
+        } else if vname == "kfac_blkdiag" {
+            if let Some(e) = tri_vs_diag.iter_mut().find(|e| e.0 == problem.name()) {
+                e.2 = last.train_err;
+            }
+        }
+    }
+
+    println!("\nblock-tridiagonal vs block-diagonal (same iteration budget):");
+    for (p, tri, diag) in &tri_vs_diag {
+        if diag.is_nan() {
+            continue;
+        }
+        println!(
+            "  {p}: tridiag err {tri:.5} vs blkdiag err {diag:.5}  ({})",
+            if tri <= diag { "tridiag ahead, as in the paper" } else { "blkdiag ahead here" }
+        );
+    }
+    println!("\nper-run CSVs are in results/fig10_*.csv (iter column = x-axis)");
+}

@@ -1,0 +1,80 @@
+//! Figure 3 — the *inverse* of F̃ is approximately block-tridiagonal
+//! even though F̃ itself is not. Reproduces the right panel: a 4×4
+//! matrix of block-average |entries| of F̃⁻¹ for the middle 4 layers of
+//! the Figure-2 network, computed subject to factored Tikhonov damping.
+//!
+//! Output: block maps for F̃ and F̃⁻¹, the tridiagonal-dominance ratio,
+//! and results/fig3_inverse_blocks.csv.
+
+use kfac::coordinator::trainer::Problem;
+use kfac::experiments::{partially_train, results_dir, scaled};
+use kfac::fisher::exact::ExactBlocks;
+use kfac::linalg::Mat;
+use kfac::util::write_csv;
+
+fn band_ratio(map: &Mat) -> f64 {
+    let (mut on, mut off) = (0.0, 0.0);
+    let (mut n_on, mut n_off) = (0usize, 0usize);
+    for r in 0..map.rows {
+        for c in 0..map.cols {
+            if (r as isize - c as isize).abs() <= 1 {
+                on += map.at(r, c);
+                n_on += 1;
+            } else {
+                off += map.at(r, c);
+                n_off += 1;
+            }
+        }
+    }
+    (on / n_on as f64) / (off / n_off.max(1) as f64)
+}
+
+fn main() {
+    println!("== Figure 3: F̃ vs F̃⁻¹ block structure (middle 4 layers) ==");
+    let (backend, params, ds) = partially_train(Problem::MnistClf, scaled(600, 200), 8, 0);
+    let x = ds.x.top_rows(scaled(300, 100).min(ds.len()));
+    let eb = ExactBlocks::compute(backend.net(), &params, &x, 1, 5);
+
+    // the paper computes the inverse subject to the factored Tikhonov
+    // damping at the same γ K-FAC was using; our partial run ends near
+    // γ ≈ sqrt(λ+η) with λ ~ O(1–10) ⇒ use a comparable value.
+    let gamma = 0.3;
+    let ktilde = eb.ktilde_damped_dense(gamma);
+    let ktilde_inv = ktilde.inverse();
+
+    let map_kt = eb.block_avg_abs(&ktilde);
+    let map_inv = eb.block_avg_abs(&ktilde_inv);
+    let print_map = |name: &str, m: &Mat| {
+        println!("\n{name} (block-average |entries|):");
+        for r in 0..m.rows {
+            print!("  ");
+            for c in 0..m.cols {
+                print!(" {:>10.3e}", m.at(r, c));
+            }
+            println!();
+        }
+    };
+    print_map("F̃ (damped)", &map_kt);
+    print_map("F̃⁻¹", &map_inv);
+
+    let r_fwd = band_ratio(&map_kt);
+    let r_inv = band_ratio(&map_inv);
+    println!("\ntridiagonal-band dominance (band avg / off-band avg):");
+    println!("  F̃   : {r_fwd:.1}×");
+    println!("  F̃⁻¹ : {r_inv:.1}×");
+    println!("(paper: the inverse is strongly tridiagonal-dominant; F̃ itself is not)");
+    assert!(
+        r_inv > 2.0 * r_fwd,
+        "inverse should be much more tridiagonal-dominant than F̃ itself"
+    );
+
+    let mut rows = Vec::new();
+    for r in 0..map_inv.rows {
+        for c in 0..map_inv.cols {
+            rows.push(vec![r as f64, c as f64, map_kt.at(r, c), map_inv.at(r, c)]);
+        }
+    }
+    let path = results_dir().join("fig3_inverse_blocks.csv");
+    write_csv(&path, &["block_i", "block_j", "ktilde", "ktilde_inv"], &rows).unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,116 @@
+//! Figure 9 — per-iteration and per-training-case progress as a
+//! function of the mini-batch size m. The paper's findings to
+//! reproduce:
+//!  - K-FAC **with** momentum: per-iteration progress grows superlinearly
+//!    in m (visible as *per-case* progress improving with m),
+//!  - K-FAC **without** momentum: roughly linear in m (per-case progress
+//!    flat or worse with m),
+//!  - SGD: increasing m helps per-iteration progress much less.
+//!
+//! Uses the scaled 16×16 autoencoder (rust backend) so the sweep runs
+//! in minutes. Output: per-run CSVs + a summary table.
+
+use kfac::coordinator::trainer::TrainConfig;
+use kfac::data::mnist_like;
+use kfac::experiments::{cached_run, results_dir, run_variant_with_backend, scaled, Variant};
+use kfac::fisher::InverseKind;
+use kfac::nn::{Act, Arch};
+use kfac::optim::BatchSchedule;
+use kfac::util::write_csv;
+
+fn main() {
+    println!("== Figure 9: progress vs mini-batch size m ==");
+    let arch = Arch::autoencoder(&[256, 100, 40, 12, 40, 100, 256], Act::Tanh);
+    let n = scaled(4000, 1000);
+    let ds = mnist_like::autoencoder_dataset(n, 16, 0);
+    let iters = scaled(100, 30);
+    let ms = [125usize, 250, 500, 1000, 2000];
+
+    let mut summary: Vec<Vec<f64>> = Vec::new();
+    println!(
+        "\n{:>22} {:>6} {:>12} {:>14} {:>14}",
+        "variant", "m", "final_err", "err@iter_half", "cases_total"
+    );
+    let variants: Vec<(&str, fn() -> Variant)> = vec![
+        ("kfac_tridiag_mom", || Variant::kfac("kfac", InverseKind::BlockTridiag, true, 5.0)),
+        ("kfac_tridiag_nomom", || {
+            Variant::kfac("kfac_nm", InverseKind::BlockTridiag, false, 5.0)
+        }),
+        ("kfac_blkdiag_mom", || Variant::kfac("kfac_bd", InverseKind::BlockDiag, true, 5.0)),
+        ("sgd_nag", || Variant::sgd("sgd", 0.02, 0.99)),
+    ];
+    for (vname, mk) in variants {
+        for &m in &ms {
+            if m > n {
+                continue;
+            }
+            let tag = format!("fig9_{vname}_m{m}");
+            let cfg = TrainConfig {
+                iters,
+                schedule: BatchSchedule::Fixed(m),
+                seed: 0,
+                eval_every: 5,
+                eval_rows: 1000.min(n),
+                polyak: Some(0.99),
+            };
+            let log = cached_run(&tag, || {
+                let mut backend = kfac::backend::RustBackend::new(arch.clone());
+                run_variant_with_backend(&mut backend, &ds, &cfg, mk(), 1, &tag)
+            });
+            let last = log.last().unwrap();
+            let half = log
+                .iter()
+                .find(|r| r.iter >= iters / 2)
+                .unwrap_or(last);
+            println!(
+                "{vname:>22} {m:>6} {:>12.5} {:>14.5} {:>14.0}",
+                last.train_err, half.train_err, last.cases
+            );
+            summary.push(vec![
+                match vname {
+                    "kfac_tridiag_mom" => 0.0,
+                    "kfac_tridiag_nomom" => 1.0,
+                    "kfac_blkdiag_mom" => 2.0,
+                    _ => 3.0,
+                },
+                m as f64,
+                last.train_err,
+                half.train_err,
+                last.cases,
+            ]);
+        }
+    }
+
+    // Paper-shape check: K-FAC+momentum benefits from larger m per
+    // iteration far more than SGD does.
+    let final_err = |variant: f64, m: f64| {
+        summary
+            .iter()
+            .find(|r| r[0] == variant && r[1] == m)
+            .map(|r| r[2])
+            .unwrap_or(f64::NAN)
+    };
+    let m_max = *ms.iter().filter(|&&m| m <= n).max().unwrap() as f64;
+    let kfac_gain = final_err(0.0, 125.0) / final_err(0.0, m_max);
+    let sgd_gain = final_err(3.0, 125.0) / final_err(3.0, m_max);
+    println!(
+        "\nper-iteration benefit of 16× larger batches (err ratio small→large m):"
+    );
+    println!("  K-FAC+momentum: {kfac_gain:.2}×    SGD: {sgd_gain:.2}×");
+    if kfac_gain.is_finite() && sgd_gain.is_finite() {
+        assert!(
+            kfac_gain > sgd_gain,
+            "K-FAC should benefit more from large batches than SGD"
+        );
+        println!("OK: K-FAC's per-iteration progress scales better with m than SGD's");
+    }
+
+    let path = results_dir().join("fig9_summary.csv");
+    write_csv(
+        &path,
+        &["variant", "m", "final_err", "half_err", "cases"],
+        &summary,
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,147 @@
+//! Section 8 — the per-iteration cost model. Measures the wall-clock of
+//! each "task" (1–8 in the paper) on a mid-sized autoencoder and prints
+//! the K-FAC/SGD per-iteration cost ratio, amortized with the paper's
+//! schedule constants (τ₁ = 1/8, τ₂ = 1/4, T₁ = 5, T₂ = 20, T₃ = 20).
+//!
+//! The paper's claim to reproduce: a K-FAC iteration costs only a small
+//! constant factor (~2–3.5×) more than an SGD iteration once the
+//! inverse refresh is amortized.
+
+use kfac::backend::{ModelBackend, RustBackend};
+use kfac::bench::Timer;
+use kfac::data::mnist_like;
+use kfac::experiments::{results_dir, scaled};
+use kfac::fisher::stats::{KfacStats, RawStats};
+use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
+use kfac::nn::{Act, Arch};
+use kfac::rng::Rng;
+use kfac::util::write_csv;
+
+fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
+    // one warmup + median of reps
+    f();
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        ts.push(t.elapsed_s());
+    }
+    kfac::util::median(&ts)
+}
+
+fn main() {
+    println!("== Section 8: per-task cost model ==");
+    let arch = Arch::autoencoder(&[256, 100, 40, 12, 40, 100, 256], Act::Tanh);
+    let m = scaled(1000, 250);
+    let ds = mnist_like::autoencoder_dataset(m, 16, 0);
+    let mut backend = RustBackend::new(arch.clone());
+    let mut rng = Rng::new(1);
+    let params = arch.sparse_init(&mut rng);
+    let (x, y) = (ds.x.clone(), ds.y.clone());
+    println!("# arch {:?}, m = {m}", arch.widths);
+
+    let tau1 = 1.0 / 8.0;
+    let tau2 = 1.0 / 4.0;
+    let (t1, t2, t3) = (5.0, 20.0, 20.0);
+    let s1 = ((tau1 * m as f64).ceil() as usize).max(1);
+    let s2 = ((tau2 * m as f64).ceil() as usize).max(1);
+
+    // tasks 1+2: gradient computation (fwd+bwd+outer products) = 1 SGD step's compute
+    let t_grad = time_it(5, || {
+        let _ = backend.grad(&params, &x, &y);
+    });
+    // tasks 3+4: extra sampled-target backward + statistics (on τ₁m rows)
+    let t_gradstats = time_it(5, || {
+        let _ = backend.grad_and_stats(&params, &x, &y, s1, 7);
+    });
+    let t_stats = (t_gradstats - t_grad).max(0.0);
+
+    // build EMA'd stats for the inverse tasks
+    let (_, _, raw) = backend.grad_and_stats(&params, &x, &y, s1, 7);
+    let mut stats = KfacStats::new(&arch);
+    stats.update(&raw);
+    let gamma = 1.0;
+
+    // task 5: inverse refresh
+    let t_inv_bd = time_it(3, || {
+        let _ = BlockDiagInverse::build(&stats.s, gamma);
+    });
+    let t_inv_tri = time_it(3, || {
+        let _ = TridiagInverse::build(&stats.s, gamma);
+    });
+
+    // task 6: preconditioner application
+    let inv_bd = BlockDiagInverse::build(&stats.s, gamma);
+    let inv_tri = TridiagInverse::build(&stats.s, gamma);
+    let (_, grad) = backend.grad(&params, &x, &y);
+    let t_apply_bd = time_it(10, || {
+        let _ = inv_bd.apply(&grad);
+    });
+    let t_apply_tri = time_it(10, || {
+        let _ = inv_tri.apply(&grad);
+    });
+
+    // task 7: FVP scalars on τ₂m rows (2 directions, momentum case)
+    let d2 = grad.scale(0.5);
+    let t_fvp = time_it(5, || {
+        let _ = backend.fvp_quad(&params, &x, s2, &[&grad, &d2]);
+    });
+
+    // task 8: extra forward pass for ρ (every T₁ iterations)
+    let t_fwd = time_it(5, || {
+        let _ = backend.loss(&params, &x, &y);
+    });
+
+    println!("\nper-task wall-clock (median):");
+    println!("  1+2  gradient (≡ SGD step compute)        {:>9.1} ms", t_grad * 1e3);
+    println!("  3+4  sampled bwd + stats (τ₁m rows)       {:>9.1} ms", t_stats * 1e3);
+    println!("  5    inverse refresh  blkdiag             {:>9.1} ms", t_inv_bd * 1e3);
+    println!("  5    inverse refresh  blktridiag          {:>9.1} ms", t_inv_tri * 1e3);
+    println!("  6    precondition     blkdiag             {:>9.1} ms", t_apply_bd * 1e3);
+    println!("  6    precondition     blktridiag          {:>9.1} ms", t_apply_tri * 1e3);
+    println!("  7    FVP scalars (τ₂m rows, 2 dirs)       {:>9.1} ms", t_fvp * 1e3);
+    println!("  8    extra forward (ρ)                    {:>9.1} ms", t_fwd * 1e3);
+
+    // amortized per-iteration cost (γ adjustment triples tasks 5+6+7 on
+    // every T₂-th iteration → factor (1 + 2/T₂) on those tasks)
+    let g_adj = 1.0 + 2.0 / t2;
+    let amort = |kind: &str| -> f64 {
+        let (t_inv, t_apply) =
+            if kind == "tri" { (t_inv_tri, t_apply_tri) } else { (t_inv_bd, t_apply_bd) };
+        t_grad + t_stats + g_adj * (t_inv / t3 + t_apply + t_fvp) + t_fwd / t1
+    };
+    let kfac_bd = amort("bd");
+    let kfac_tri = amort("tri");
+    println!("\namortized per-iteration cost (τ₁=1/8, τ₂=1/4, T₁=5, T₂=20, T₃=20):");
+    println!("  SGD                {:>9.1} ms   (1.00×)", t_grad * 1e3);
+    println!("  K-FAC blkdiag      {:>9.1} ms   ({:.2}×)", kfac_bd * 1e3, kfac_bd / t_grad);
+    println!("  K-FAC blktridiag   {:>9.1} ms   ({:.2}×)", kfac_tri * 1e3, kfac_tri / t_grad);
+    println!("(paper model: K-FAC ≈ 2–3.5× the SGD iteration; tridiag > blkdiag)");
+
+    assert!(kfac_tri >= kfac_bd * 0.9, "tridiag should not be cheaper than blkdiag");
+    assert!(
+        kfac_bd / t_grad < 20.0,
+        "amortized K-FAC overhead implausibly large: {:.1}×",
+        kfac_bd / t_grad
+    );
+
+    let path = results_dir().join("sec8_cost.csv");
+    write_csv(
+        &path,
+        &["task", "ms"],
+        &[
+            vec![1.0, t_grad * 1e3],
+            vec![3.0, t_stats * 1e3],
+            vec![5.0, t_inv_bd * 1e3],
+            vec![5.5, t_inv_tri * 1e3],
+            vec![6.0, t_apply_bd * 1e3],
+            vec![6.5, t_apply_tri * 1e3],
+            vec![7.0, t_fvp * 1e3],
+            vec![8.0, t_fwd * 1e3],
+            vec![100.0, kfac_bd / t_grad],
+            vec![101.0, kfac_tri / t_grad],
+        ],
+    )
+    .unwrap();
+    println!("wrote {}", path.display());
+}

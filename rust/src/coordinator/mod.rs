@@ -1,0 +1,8 @@
+//! Training coordinator: CLI parsing, train configuration, and the
+//! training loop that composes datasets, backends and optimizers.
+
+pub mod cli;
+pub mod trainer;
+
+pub use cli::Args;
+pub use trainer::{LogRow, Problem, TrainConfig, Trainer};

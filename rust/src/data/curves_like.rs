@@ -1,0 +1,67 @@
+//! CURVES substitute: images of random cubic Bézier curves at 28×28.
+//! The original CURVES benchmark (Hinton & Salakhutdinov 2006) is itself
+//! synthetic curve images, so this generator reproduces the dataset in
+//! spirit, not just in format.
+
+use super::{blur, draw_segment, Dataset};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Render one random cubic Bézier curve.
+pub fn render_curve(side: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut img = vec![0.0; side * side];
+    // 4 control points in the (padded) unit square
+    let p: Vec<(f64, f64)> = (0..4)
+        .map(|_| (0.12 + 0.76 * rng.uniform(), 0.12 + 0.76 * rng.uniform()))
+        .collect();
+    let bez = |t: f64| {
+        let u = 1.0 - t;
+        let b = [u * u * u, 3.0 * u * u * t, 3.0 * u * t * t, t * t * t];
+        let x = b.iter().zip(&p).map(|(w, q)| w * q.0).sum::<f64>();
+        let y = b.iter().zip(&p).map(|(w, q)| w * q.1).sum::<f64>();
+        (x, y)
+    };
+    let steps = 24;
+    let mut prev = bez(0.0);
+    for i in 1..=steps {
+        let cur = bez(i as f64 / steps as f64);
+        draw_segment(&mut img, side, prev.0, prev.1, cur.0, cur.1, 0.045);
+        prev = cur;
+    }
+    img
+}
+
+/// Autoencoding dataset of curves: `x = y`, `n × side²`.
+pub fn autoencoder_dataset(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, side * side);
+    for r in 0..n {
+        let img = render_curve(side, &mut rng);
+        x.row_mut(r).copy_from_slice(&img);
+    }
+    let x = blur(&x);
+    Dataset::new(x.clone(), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_are_sparse_unit_interval_images() {
+        let ds = autoencoder_dataset(50, 28, 1);
+        assert_eq!(ds.x.cols, 784);
+        assert!(ds.x.data.iter().all(|v| (0.0..=1.0).contains(v)));
+        // curves are thin: most pixels dark
+        let frac_on = ds.x.data.iter().filter(|v| **v > 0.3).count() as f64
+            / ds.x.data.len() as f64;
+        assert!(frac_on > 0.005 && frac_on < 0.35, "frac_on={frac_on}");
+    }
+
+    #[test]
+    fn distinct_seeds_give_distinct_data() {
+        let a = autoencoder_dataset(5, 28, 1);
+        let b = autoencoder_dataset(5, 28, 2);
+        assert!(a.x.sub(&b.x).max_abs() > 0.1);
+    }
+}

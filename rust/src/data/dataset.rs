@@ -1,0 +1,99 @@
+//! In-memory dataset with shuffled mini-batching.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A labelled dataset: one case per row of `x` / `y`.
+#[derive(Clone)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Mat,
+}
+
+impl Dataset {
+    pub fn new(x: Mat, y: Mat) -> Dataset {
+        assert_eq!(x.rows, y.rows, "dataset: x/y row mismatch");
+        Dataset { x, y }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Random mini-batch of `m` rows (with replacement across calls,
+    /// without replacement within one batch; if `m >= len`, the whole
+    /// set in random order).
+    pub fn minibatch(&self, m: usize, rng: &mut Rng) -> (Mat, Mat) {
+        let n = self.len();
+        if m >= n {
+            let perm = rng.permutation(n);
+            return (self.x.gather_rows(&perm), self.y.gather_rows(&perm));
+        }
+        // sample m distinct indices via partial Fisher–Yates
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + rng.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        (self.x.gather_rows(&idx), self.y.gather_rows(&idx))
+    }
+
+    /// Split into (train, test) by a random permutation.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.len();
+        let ntr = ((n as f64) * train_frac).round() as usize;
+        let perm = rng.permutation(n);
+        let (tr, te) = perm.split_at(ntr);
+        (
+            Dataset::new(self.x.gather_rows(tr), self.y.gather_rows(tr)),
+            Dataset::new(self.x.gather_rows(te), self.y.gather_rows(te)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let x = Mat::from_fn(n, 3, |r, c| (r * 3 + c) as f64);
+        let y = Mat::from_fn(n, 1, |r, _| r as f64);
+        Dataset::new(x, y)
+    }
+
+    #[test]
+    fn minibatch_rows_are_consistent_pairs() {
+        let ds = toy(50);
+        let mut rng = Rng::new(1);
+        let (x, y) = ds.minibatch(8, &mut rng);
+        assert_eq!(x.rows, 8);
+        for r in 0..8 {
+            let id = y.at(r, 0) as usize;
+            assert_eq!(x.at(r, 0), (id * 3) as f64);
+        }
+    }
+
+    #[test]
+    fn minibatch_no_duplicates_within_batch() {
+        let ds = toy(20);
+        let mut rng = Rng::new(2);
+        let (_, y) = ds.minibatch(20, &mut rng);
+        let mut ids: Vec<usize> = (0..20).map(|r| y.at(r, 0) as usize).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = toy(100);
+        let (tr, te) = ds.split(0.8, &mut Rng::new(3));
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+}

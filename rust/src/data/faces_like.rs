@@ -1,0 +1,119 @@
+//! FACES substitute: low-rank Gaussian "eigenface" images.
+//!
+//! The Olivetti faces used by the paper are 25×25 (625-dim), real-valued
+//! and standardized; the autoencoder uses a squared-error (Gaussian)
+//! output layer. We synthesize from the same statistical family:
+//! a smooth mean face plus a random smooth low-rank basis with decaying
+//! coefficient variances plus pixel noise, then per-dimension
+//! standardization — preserving the regression/Gaussian-output code
+//! path and the spectrum shape that makes FACES the "hard" problem.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Smooth random field on a `side × side` grid (sum of random cosines).
+fn smooth_field(side: usize, waves: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut img = vec![0.0; side * side];
+    for _ in 0..waves {
+        let fx = 0.5 + 2.5 * rng.uniform();
+        let fy = 0.5 + 2.5 * rng.uniform();
+        let phx = 6.28 * rng.uniform();
+        let phy = 6.28 * rng.uniform();
+        let amp = rng.normal();
+        for y in 0..side {
+            for x in 0..side {
+                let u = x as f64 / side as f64;
+                let v = y as f64 / side as f64;
+                img[y * side + x] +=
+                    amp * (6.28 * fx * u + phx).cos() * (6.28 * fy * v + phy).cos();
+            }
+        }
+    }
+    img
+}
+
+/// Generate `n` standardized face-like images of `side²` dims.
+pub fn autoencoder_dataset(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let d = side * side;
+    let rank = 24usize;
+    // basis of smooth fields, coefficient std decaying like 1/(1+i/4)
+    let basis: Vec<Vec<f64>> = (0..rank).map(|_| smooth_field(side, 4, &mut rng)).collect();
+    let mean = smooth_field(side, 3, &mut rng);
+    let mut x = Mat::zeros(n, d);
+    for r in 0..n {
+        let row = x.row_mut(r);
+        row.copy_from_slice(&mean);
+        for (i, b) in basis.iter().enumerate() {
+            let c = rng.normal() / (1.0 + i as f64 / 4.0);
+            for (pix, bv) in row.iter_mut().zip(b.iter()) {
+                *pix += c * bv;
+            }
+        }
+        for pix in row.iter_mut() {
+            *pix += 0.1 * rng.normal();
+        }
+    }
+    // standardize per dimension
+    for c in 0..d {
+        let mut mu = 0.0;
+        for r in 0..n {
+            mu += x.at(r, c);
+        }
+        mu /= n as f64;
+        let mut var = 0.0;
+        for r in 0..n {
+            var += (x.at(r, c) - mu).powi(2);
+        }
+        var /= (n - 1).max(1) as f64;
+        let sd = var.sqrt().max(1e-8);
+        for r in 0..n {
+            let v = (x.at(r, c) - mu) / sd;
+            x.set(r, c, v);
+        }
+    }
+    Dataset::new(x.clone(), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardized_real_valued() {
+        let ds = autoencoder_dataset(300, 25, 1);
+        assert_eq!(ds.x.cols, 625);
+        // each column ~ zero mean, unit variance
+        for c in [0usize, 100, 624] {
+            let mut mu = 0.0;
+            for r in 0..300 {
+                mu += ds.x.at(r, c);
+            }
+            mu /= 300.0;
+            assert!(mu.abs() < 1e-10, "col {c} mean {mu}");
+        }
+        // has negative values (real-valued, not [0,1])
+        assert!(ds.x.data.iter().any(|v| *v < -0.5));
+    }
+
+    #[test]
+    fn low_rank_structure_present() {
+        // cross-case correlation should be far from identity
+        let ds = autoencoder_dataset(100, 25, 2);
+        let g = ds.x.matmul_nt(&ds.x);
+        let mut off = 0.0;
+        let mut count = 0;
+        for r in 0..20 {
+            for c in 0..20 {
+                if r != c {
+                    off += g.at(r, c).abs();
+                    count += 1;
+                }
+            }
+        }
+        let diag: f64 = (0..20).map(|i| g.at(i, i)).sum::<f64>() / 20.0;
+        let off_avg = off / count as f64;
+        assert!(off_avg > 0.05 * diag, "off={off_avg} diag={diag}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Procedural MNIST substitute: per-class stroke templates with elastic
+//! jitter, rendered with anti-aliased thick lines and blurred — pixel
+//! intensities in [0, 1], like MNIST after the usual /255 scaling.
+
+use super::{blur, draw_segment, Dataset};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Stroke templates (polylines in the unit square) for digits 0–9.
+fn digit_strokes(d: usize) -> Vec<Vec<(f64, f64)>> {
+    match d {
+        0 => vec![vec![
+            (0.5, 0.15),
+            (0.75, 0.3),
+            (0.75, 0.7),
+            (0.5, 0.85),
+            (0.25, 0.7),
+            (0.25, 0.3),
+            (0.5, 0.15),
+        ]],
+        1 => vec![vec![(0.35, 0.3), (0.55, 0.15), (0.55, 0.85)]],
+        2 => vec![vec![(0.27, 0.3), (0.5, 0.15), (0.72, 0.3), (0.3, 0.85), (0.75, 0.85)]],
+        3 => vec![vec![
+            (0.3, 0.2),
+            (0.7, 0.2),
+            (0.45, 0.48),
+            (0.72, 0.68),
+            (0.5, 0.87),
+            (0.28, 0.78),
+        ]],
+        4 => vec![vec![(0.65, 0.85), (0.65, 0.15), (0.25, 0.6), (0.8, 0.6)]],
+        5 => vec![vec![
+            (0.72, 0.15),
+            (0.3, 0.15),
+            (0.28, 0.5),
+            (0.65, 0.45),
+            (0.72, 0.7),
+            (0.45, 0.87),
+            (0.27, 0.78),
+        ]],
+        6 => vec![vec![
+            (0.68, 0.18),
+            (0.35, 0.4),
+            (0.28, 0.7),
+            (0.5, 0.87),
+            (0.7, 0.7),
+            (0.55, 0.5),
+            (0.3, 0.6),
+        ]],
+        7 => vec![vec![(0.25, 0.15), (0.75, 0.15), (0.45, 0.85)]],
+        8 => vec![
+            vec![(0.5, 0.15), (0.68, 0.3), (0.5, 0.48), (0.32, 0.3), (0.5, 0.15)],
+            vec![(0.5, 0.48), (0.72, 0.68), (0.5, 0.87), (0.28, 0.68), (0.5, 0.48)],
+        ],
+        9 => vec![vec![
+            (0.7, 0.4),
+            (0.45, 0.5),
+            (0.3, 0.3),
+            (0.5, 0.13),
+            (0.7, 0.3),
+            (0.68, 0.6),
+            (0.5, 0.87),
+        ]],
+        _ => unreachable!(),
+    }
+}
+
+/// Render one jittered digit as a `side*side` image row.
+pub fn render_digit(d: usize, side: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut img = vec![0.0; side * side];
+    // global affine jitter
+    let (sx, sy) = (0.85 + 0.3 * rng.uniform(), 0.85 + 0.3 * rng.uniform());
+    let (tx, ty) = (0.08 * (rng.uniform() - 0.5), 0.08 * (rng.uniform() - 0.5));
+    let rot = 0.25 * (rng.uniform() - 0.5);
+    let (cr, sr) = (rot.cos(), rot.sin());
+    let jitter = 0.03;
+    for stroke in digit_strokes(d) {
+        let pts: Vec<(f64, f64)> = stroke
+            .iter()
+            .map(|&(x, y)| {
+                // jitter control points, then affine around center
+                let (mut x, mut y) = (x + jitter * rng.normal(), y + jitter * rng.normal());
+                x = (x - 0.5) * sx;
+                y = (y - 0.5) * sy;
+                let (xr, yr) = (cr * x - sr * y, sr * x + cr * y);
+                (xr + 0.5 + tx, yr + 0.5 + ty)
+            })
+            .collect();
+        for w in pts.windows(2) {
+            draw_segment(&mut img, side, w[0].0, w[0].1, w[1].0, w[1].1, 0.055);
+        }
+    }
+    img
+}
+
+/// Classification dataset: `x` is `n × side²`, `y` is one-hot `n × 10`.
+pub fn classification_dataset(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, side * side);
+    let mut y = Mat::zeros(n, 10);
+    for r in 0..n {
+        let d = r % 10;
+        let img = render_digit(d, side, &mut rng);
+        x.row_mut(r).copy_from_slice(&img);
+        y.set(r, d, 1.0);
+    }
+    let x = blur(&x);
+    Dataset::new(x, y)
+}
+
+/// Autoencoding dataset: targets equal inputs.
+pub fn autoencoder_dataset(n: usize, side: usize, seed: u64) -> Dataset {
+    let ds = classification_dataset(n, side, seed);
+    Dataset::new(ds.x.clone(), ds.x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixels_in_unit_interval_and_nontrivial() {
+        let ds = classification_dataset(100, 16, 1);
+        assert_eq!(ds.x.cols, 256);
+        assert!(ds.x.data.iter().all(|v| (0.0..=1.0).contains(v)));
+        let mean = ds.x.sum() / ds.x.data.len() as f64;
+        assert!(mean > 0.02 && mean < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // same-class images should correlate more than cross-class ones
+        let ds = classification_dataset(200, 16, 2);
+        let corr = |a: usize, b: usize| {
+            let (ra, rb) = (ds.x.row(a), ds.x.row(b));
+            let dot: f64 = ra.iter().zip(rb).map(|(x, y)| x * y).sum();
+            let na: f64 = ra.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let nb: f64 = rb.iter().map(|v| v * v).sum::<f64>().sqrt();
+            dot / (na * nb + 1e-12)
+        };
+        // rows 0,10,20.. are class 0; row 1 is class 1
+        let same = (corr(0, 10) + corr(0, 20) + corr(10, 30)) / 3.0;
+        let diff = (corr(0, 1) + corr(0, 7) + corr(10, 3)) / 3.0;
+        assert!(same > diff, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn autoencoder_targets_equal_inputs() {
+        let ds = autoencoder_dataset(20, 16, 3);
+        assert!(ds.x.sub(&ds.y).max_abs() == 0.0);
+    }
+}

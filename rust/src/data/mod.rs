@@ -1,0 +1,95 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on MNIST, CURVES and FACES. None of those files
+//! ship with this repository, so we build procedural substitutes that
+//! exercise the identical code paths (see DESIGN.md §Substitutions):
+//!
+//! - [`mnist_like`]: stroke-template digit glyphs with elastic jitter,
+//!   at 16×16 (Fig 2 network) or 28×28 (autoencoder), intensities in
+//!   [0,1] — for sigmoid-CE autoencoding and 10-way classification.
+//! - [`curves_like`]: random cubic Bézier curves rendered at 28×28 —
+//!   the original CURVES set is itself synthetic curve images.
+//! - [`faces_like`]: low-rank Gaussian "eigenface" mixtures (625-dim,
+//!   real-valued, standardized) — for the squared-error autoencoder.
+
+pub mod curves_like;
+pub mod dataset;
+pub mod faces_like;
+pub mod mnist_like;
+
+pub use dataset::Dataset;
+
+use crate::linalg::Mat;
+
+/// Render an anti-aliased thick line segment onto a `side × side` canvas
+/// stored row-major in `img`. Coordinates in [0,1].
+pub(crate) fn draw_segment(
+    img: &mut [f64],
+    side: usize,
+    x0: f64,
+    y0: f64,
+    x1: f64,
+    y1: f64,
+    thickness: f64,
+) {
+    let s = side as f64;
+    let (px0, py0) = (x0 * (s - 1.0), y0 * (s - 1.0));
+    let (px1, py1) = (x1 * (s - 1.0), y1 * (s - 1.0));
+    let dx = px1 - px0;
+    let dy = py1 - py0;
+    let len2 = (dx * dx + dy * dy).max(1e-12);
+    let rad = thickness * s;
+    let (lo_x, hi_x) = (
+        (px0.min(px1) - rad).floor().max(0.0) as usize,
+        (px0.max(px1) + rad).ceil().min(s - 1.0) as usize,
+    );
+    let (lo_y, hi_y) = (
+        (py0.min(py1) - rad).floor().max(0.0) as usize,
+        (py0.max(py1) + rad).ceil().min(s - 1.0) as usize,
+    );
+    for gy in lo_y..=hi_y {
+        for gx in lo_x..=hi_x {
+            let (fx, fy) = (gx as f64, gy as f64);
+            // distance from pixel to segment
+            let t = (((fx - px0) * dx + (fy - py0) * dy) / len2).clamp(0.0, 1.0);
+            let (cx, cy) = (px0 + t * dx, py0 + t * dy);
+            let dist = ((fx - cx).powi(2) + (fy - cy).powi(2)).sqrt();
+            let v = (1.0 - (dist / rad)).clamp(0.0, 1.0);
+            let idx = gy * side + gx;
+            img[idx] = img[idx].max(v * v * (3.0 - 2.0 * v)); // smoothstep
+        }
+    }
+}
+
+/// 3×3 binomial blur (in place via copy).
+pub(crate) fn blur(img: &Mat) -> Mat {
+    let side = (img.cols as f64).sqrt() as usize;
+    let mut out = img.clone();
+    for r in 0..img.rows {
+        let src = img.row(r);
+        let dst = out.row_mut(r);
+        for y in 0..side {
+            for x in 0..side {
+                let mut acc = 0.0;
+                let mut wsum = 0.0;
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let (nx, ny) = (x as i64 + dx, y as i64 + dy);
+                        if nx < 0 || ny < 0 || nx >= side as i64 || ny >= side as i64 {
+                            continue;
+                        }
+                        let w = match (dx.abs(), dy.abs()) {
+                            (0, 0) => 4.0,
+                            (1, 0) | (0, 1) => 2.0,
+                            _ => 1.0,
+                        };
+                        acc += w * src[(ny as usize) * side + nx as usize];
+                        wsum += w;
+                    }
+                }
+                dst[y * side + x] = acc / wsum;
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,215 @@
+//! Shared harness code for the figure-regeneration binaries
+//! (`rust/src/bin/fig*.rs`). Each paper figure maps to one binary; the
+//! common machinery — running a set of optimizer variants on a problem
+//! and collecting training curves, and partially training a network to
+//! a given iteration for the structure/damping experiments — lives here.
+
+use crate::backend::{ModelBackend, RustBackend};
+use crate::coordinator::trainer::{log_to_csv, LogRow, Optimizer, Problem, TrainConfig, Trainer};
+use crate::fisher::InverseKind;
+use crate::nn::Params;
+use crate::optim::{KfacConfig, SgdConfig};
+use crate::rng::Rng;
+use std::path::PathBuf;
+
+/// A named optimizer variant for comparison plots.
+pub struct Variant {
+    pub name: String,
+    pub optimizer: Optimizer,
+}
+
+impl Variant {
+    pub fn kfac(name: &str, inverse: InverseKind, momentum: bool, lambda0: f64) -> Variant {
+        // λ adapted every iteration: the figure runs are 1–2 orders of
+        // magnitude shorter than the paper's, so the LM rule must settle
+        // within tens of iterations rather than hundreds (T₁ = 5 with
+        // λ₀ = 150 would leave the runs over-damped throughout).
+        let mut cfg = KfacConfig { inverse, lambda0, t1: 1, ..Default::default() };
+        cfg.momentum = momentum;
+        Variant { name: name.to_string(), optimizer: Optimizer::Kfac(cfg) }
+    }
+
+    pub fn sgd(name: &str, lr: f64, mu_max: f64) -> Variant {
+        Variant {
+            name: name.to_string(),
+            optimizer: Optimizer::Sgd(SgdConfig { lr, mu_max, ..Default::default() }),
+        }
+    }
+}
+
+/// Results directory (override with KFAC_RESULTS_DIR).
+pub fn results_dir() -> PathBuf {
+    std::env::var("KFAC_RESULTS_DIR").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Scale factor for experiment sizes (override with KFAC_EXP_SCALE, in
+/// (0, 1]; smaller = faster smoke runs).
+pub fn exp_scale() -> f64 {
+    std::env::var("KFAC_EXP_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
+}
+
+/// Scale a count by `exp_scale`, with a floor.
+pub fn scaled(n: usize, floor: usize) -> usize {
+    ((n as f64 * exp_scale()) as usize).max(floor)
+}
+
+/// Run one variant on one problem with a fresh backend/params and
+/// return the log; also writes `results/<tag>.csv`.
+pub fn run_variant(
+    problem: Problem,
+    ds: &crate::data::Dataset,
+    cfg: &TrainConfig,
+    variant: Variant,
+    seed: u64,
+    tag: &str,
+) -> Vec<LogRow> {
+    let arch = problem.arch();
+    let mut backend = RustBackend::new(arch.clone());
+    run_variant_with_backend(&mut backend, ds, cfg, variant, seed, tag)
+}
+
+/// Same, but with a caller-supplied backend (e.g. PJRT).
+pub fn run_variant_with_backend(
+    backend: &mut dyn ModelBackend,
+    ds: &crate::data::Dataset,
+    cfg: &TrainConfig,
+    variant: Variant,
+    seed: u64,
+    tag: &str,
+) -> Vec<LogRow> {
+    let arch = backend.arch().clone();
+    let mut params = arch.sparse_init(&mut Rng::new(seed));
+    let log = Trainer::new(cfg.clone(), ds).run(backend, &mut params, variant.optimizer, true);
+    let path = results_dir().join(format!("{tag}.csv"));
+    if let Err(e) = log_to_csv(&path, &log) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+    log
+}
+
+/// Parse a training-log CSV back into rows (cache hits for re-plotting
+/// binaries like fig11 that reuse fig10's runs).
+pub fn load_log(tag: &str) -> Option<Vec<LogRow>> {
+    let path = results_dir().join(format!("{tag}.csv"));
+    let (header, rows) = crate::util::read_csv(&path).ok()?;
+    if header != ["iter", "cases", "time_s", "batch_loss", "train_err", "train_loss"] {
+        return None;
+    }
+    Some(
+        rows.into_iter()
+            .map(|r| LogRow {
+                iter: r[0] as usize,
+                cases: r[1],
+                time_s: r[2],
+                batch_loss: r[3],
+                train_err: r[4],
+                train_loss: r[5],
+            })
+            .collect(),
+    )
+}
+
+/// Run-or-load: reuse `results/<tag>.csv` when present (so e.g. fig11
+/// can replot fig10's runs without re-training).
+pub fn cached_run(tag: &str, f: impl FnOnce() -> Vec<LogRow>) -> Vec<LogRow> {
+    if let Some(log) = load_log(tag) {
+        println!("# {tag}: loaded cached results/{tag}.csv ({} rows)", log.len());
+        return log;
+    }
+    f()
+}
+
+/// The Figure 10/11 experiment: all three problems × optimizer variants
+/// with the paper's exponentially increasing batch schedule for K-FAC
+/// and a fixed batch for the SGD baseline. Returns
+/// (problem, variant, log) triples; each run is cached by tag.
+pub fn training_curves_fig10(
+    backend_kind: &str,
+    iters: usize,
+    n_data: usize,
+) -> Vec<(Problem, String, Vec<LogRow>)> {
+    use crate::optim::BatchSchedule;
+    let mut out = Vec::new();
+    for problem in [Problem::CurvesAe, Problem::MnistAe, Problem::FacesAe] {
+        let ds = problem.dataset(n_data, 0);
+        let m1 = 250.min(n_data);
+        let exp_sched = BatchSchedule::exponential_reaching(m1, n_data, (iters * 3 / 4).max(2));
+        let variants: Vec<(String, Variant, BatchSchedule)> = vec![
+            (
+                "kfac_blktridiag".into(),
+                Variant::kfac("blktridiag", InverseKind::BlockTridiag, true, 5.0),
+                exp_sched.clone(),
+            ),
+            (
+                "kfac_blkdiag".into(),
+                Variant::kfac("blkdiag", InverseKind::BlockDiag, true, 5.0),
+                exp_sched.clone(),
+            ),
+            (
+                "kfac_nomom".into(),
+                Variant::kfac("nomom", InverseKind::BlockTridiag, false, 5.0),
+                BatchSchedule::Fixed(500.min(n_data)),
+            ),
+            ("sgd".into(), Variant::sgd("sgd", 0.02, 0.99), BatchSchedule::Fixed(500.min(n_data))),
+        ];
+        for (vname, variant, schedule) in variants {
+            let tag = format!("fig10_{}_{vname}", problem.name());
+            let cfg = TrainConfig {
+                iters,
+                schedule,
+                seed: 0,
+                eval_every: 5,
+                eval_rows: 1000.min(n_data),
+                polyak: Some(0.99),
+            };
+            let log = cached_run(&tag, || {
+                println!("# running {tag} ({backend_kind} backend)…");
+                match backend_kind {
+                    "pjrt" => {
+                        let dir = PathBuf::from(
+                            std::env::var("KFAC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+                        );
+                        match crate::backend::PjrtBackend::new(&dir, problem.name()) {
+                            Ok(mut b) => {
+                                run_variant_with_backend(&mut b, &ds, &cfg, variant, 1, &tag)
+                            }
+                            Err(e) => {
+                                eprintln!("# pjrt unavailable ({e:#}); falling back to rust");
+                                run_variant(problem, &ds, &cfg, variant, 1, &tag)
+                            }
+                        }
+                    }
+                    _ => run_variant(problem, &ds, &cfg, variant, 1, &tag),
+                }
+            });
+            out.push((problem, vname, log));
+        }
+    }
+    out
+}
+
+/// Partially train a network with K-FAC (rust backend, batch mode) and
+/// return (params, backend) — the setup used by Figures 2/3/5/6/7,
+/// which examine quantities "at iteration N" of a K-FAC run.
+pub fn partially_train(
+    problem: Problem,
+    n_data: usize,
+    iters: usize,
+    seed: u64,
+) -> (RustBackend, Params, crate::data::Dataset) {
+    let arch = problem.arch();
+    let ds = problem.dataset(n_data, seed);
+    let mut backend = RustBackend::new(arch.clone());
+    let mut params = arch.sparse_init(&mut Rng::new(seed ^ 0xA5));
+    let cfg = TrainConfig {
+        iters,
+        schedule: crate::optim::BatchSchedule::Fixed(n_data),
+        eval_every: usize::MAX,
+        eval_rows: 1,
+        polyak: None,
+        seed,
+    };
+    let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
+    let _ = Trainer::new(cfg, &ds).run(&mut backend, &mut params, Optimizer::Kfac(kcfg), false);
+    (backend, params, ds)
+}

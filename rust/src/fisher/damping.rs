@@ -1,0 +1,103 @@
+//! Factored Tikhonov damping (paper Section 6.3).
+//!
+//! Instead of adding `(λ+η)I` to each Kronecker block `Ā ⊗ G` (which
+//! would break the `(A⊗B)⁻¹ = A⁻¹⊗B⁻¹` identity), the paper adds
+//! `π_i γ I` to `Ā_{i-1,i-1}` and `(γ/π_i) I` to `G_{i,i}`, choosing
+//!
+//! `π_i = sqrt( (tr Ā/(d_{i-1}+1)) / (tr G/d_i) )`
+//!
+//! (average eigenvalue ratio — the trace-norm minimizer of the residual
+//! bound). The damped product then differs from the exact Tikhonov
+//! expression only by a residual whose norm the choice of π minimizes.
+
+use crate::linalg::Mat;
+
+/// Trace-norm `π` (ratio of average eigenvalues), with a guard for
+/// degenerate (zero/singular) factors.
+pub fn pi_trace(aa: &Mat, gg: &Mat) -> f64 {
+    let num = aa.trace() / aa.rows as f64;
+    let den = gg.trace() / gg.rows as f64;
+    if !(num > 0.0) || !(den > 0.0) {
+        return 1.0;
+    }
+    let pi = (num / den).sqrt();
+    if pi.is_finite() && pi > 0.0 {
+        pi
+    } else {
+        1.0
+    }
+}
+
+/// Damped factor pair `(Ā + πγI, G + (γ/π)I)`.
+pub fn damped_factors(aa: &Mat, gg: &Mat, gamma: f64) -> (Mat, Mat) {
+    let pi = pi_trace(aa, gg);
+    (aa.add_diag(pi * gamma), gg.add_diag(gamma / pi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kron::kron;
+    use crate::rng::Rng;
+
+    fn random_psd(n: usize, rng: &mut Rng) -> Mat {
+        let x = Mat::randn(n + 2, n, 1.0, rng);
+        x.matmul_tn(&x).scale(1.0 / n as f64)
+    }
+
+    #[test]
+    fn pi_is_average_eigenvalue_ratio() {
+        let aa = Mat::eye(4).scale(9.0);
+        let gg = Mat::eye(3).scale(1.0);
+        assert!((pi_trace(&aa, &gg) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pi_guards_degenerate() {
+        let z = Mat::zeros(3, 3);
+        let g = Mat::eye(2);
+        assert_eq!(pi_trace(&z, &g), 1.0);
+        assert_eq!(pi_trace(&g, &z), 1.0);
+    }
+
+    #[test]
+    fn damped_product_close_to_exact_tikhonov() {
+        // The residual between (Ā+πγI)⊗(G+γ/πI) and Ā⊗G + γ²I should be
+        // the cross terms; sanity-check the factored version dominates
+        // the exact one (PSD ordering along random directions).
+        let mut rng = Rng::new(1);
+        let aa = random_psd(4, &mut rng).add_diag(0.1);
+        let gg = random_psd(3, &mut rng).add_diag(0.1);
+        let gamma = 0.5;
+        let (ad, gd) = damped_factors(&aa, &gg, gamma);
+        let fact = kron(&ad, &gd);
+        let exact = kron(&aa, &gg).add_diag(gamma * gamma);
+        // factored = exact + π γ I⊗G + γ/π Ā⊗I  (both PSD), so
+        // fact − exact must be PSD.
+        let diff = fact.sub(&exact);
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..diff.rows).map(|_| rng.normal()).collect();
+            let dv = diff.matvec(&v);
+            let q: f64 = v.iter().zip(dv.iter()).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-10, "q={q}");
+        }
+    }
+
+    #[test]
+    fn scale_invariance_of_factored_damping() {
+        // Rescaling Ā by c and G by 1/c leaves Ā⊗G unchanged; the
+        // factored damping with trace-π must produce the same damped
+        // product (this is the reparameterization-invariance property
+        // that makes the trace norm a good choice).
+        let mut rng = Rng::new(2);
+        let aa = random_psd(4, &mut rng).add_diag(0.2);
+        let gg = random_psd(3, &mut rng).add_diag(0.2);
+        let gamma = 0.3;
+        let (ad1, gd1) = damped_factors(&aa, &gg, gamma);
+        let c = 7.0;
+        let (ad2, gd2) = damped_factors(&aa.scale(c), &gg.scale(1.0 / c), gamma);
+        let p1 = kron(&ad1, &gd1);
+        let p2 = kron(&ad2, &gd2);
+        assert!(p1.sub(&p2).max_abs() < 1e-9 * (1.0 + p1.max_abs()));
+    }
+}

@@ -1,0 +1,50 @@
+//! Kronecker-factored Fisher approximations (paper Sections 3–5).
+//!
+//! - [`stats`]: per-batch second moments `Ā_{i,j}`, `G_{i,j}` and their
+//!   online exponentially-decayed estimates (Section 5).
+//! - [`damping`]: the factored Tikhonov technique (Section 6.3) with the
+//!   trace-norm `π_i`.
+//! - [`blockdiag`]: the block-diagonal inverse `F̌⁻¹` (Section 4.2).
+//! - [`tridiag`]: the block-tridiagonal inverse `F̂⁻¹` (Section 4.3),
+//!   built from the Ψ/Σ/Λ/Ξ machinery and the Appendix-B structured
+//!   inverse.
+//! - [`exact`]: dense exact `F` and exact `F̃` over a layer range for
+//!   small networks — the substrate behind the Figure 2/3/5/6
+//!   structure experiments.
+
+pub mod blockdiag;
+pub mod damping;
+pub mod exact;
+pub mod stats;
+pub mod tridiag;
+
+pub use blockdiag::BlockDiagInverse;
+pub use stats::{KfacStats, RawStats};
+pub use tridiag::TridiagInverse;
+
+use crate::nn::Params;
+
+/// A preconditioner: applies an approximate inverse Fisher to a
+/// gradient-shaped `Params` (i.e. computes the update proposal
+/// `Δ = -F₀⁻¹ ∇h` up to sign).
+pub trait FisherInverse {
+    fn apply(&self, grads: &Params) -> Params;
+}
+
+/// Which inverse approximation the optimizer uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InverseKind {
+    /// `F̌⁻¹` — block-diagonal (Section 4.2).
+    BlockDiag,
+    /// `F̂⁻¹` — block-tridiagonal (Section 4.3).
+    BlockTridiag,
+}
+
+impl InverseKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InverseKind::BlockDiag => "blkdiag",
+            InverseKind::BlockTridiag => "blktridiag",
+        }
+    }
+}

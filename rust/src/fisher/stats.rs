@@ -1,0 +1,183 @@
+//! Fisher-factor statistics (paper Section 5).
+//!
+//! Per mini-batch we form the second moments
+//!
+//! - `aa[i]   = Ā_{i-1,i-1} = E[ā_{i-1} ā_{i-1}ᵀ]` (input side of layer i),
+//! - `aa_off[i] = Ā_{i-1,i} = E[ā_{i-1} ā_iᵀ]`,
+//! - `gg[i]   = G_{i,i} = E[g_i g_iᵀ]`,
+//! - `gg_off[i] = G_{i,i+1} = E[g_i g_{i+1}ᵀ]`,
+//!
+//! with the `g` statistics computed from a backward pass whose targets
+//! are **sampled from the model's predictive distribution** (so they
+//! estimate the standard Fisher, not the empirical one), and maintain
+//! exponentially-decayed running averages with
+//! `ε = min(1 − 1/k, 0.95)` — the estimate therefore depends on much
+//! more data than a single mini-batch, which is the key practical
+//! advantage over HF-style methods the paper emphasizes.
+
+use crate::linalg::Mat;
+use crate::nn::net::Fwd;
+use crate::nn::Arch;
+
+/// Second-moment statistics from a single mini-batch (or an EMA of them;
+/// the two share a shape).
+#[derive(Clone, Debug)]
+pub struct RawStats {
+    /// `Ā_{i-1,i-1}`, shape `(d_{i-1}+1)²`, for each layer i (0-based).
+    pub aa: Vec<Mat>,
+    /// `Ā_{i-1,i}`, shape `(d_{i-1}+1) × (d_i+1)`, for i = 0..ℓ-2.
+    pub aa_off: Vec<Mat>,
+    /// `G_{i,i}`, shape `d_i²`.
+    pub gg: Vec<Mat>,
+    /// `G_{i,i+1}`, shape `d_i × d_{i+1}`, for i = 0..ℓ-2.
+    pub gg_off: Vec<Mat>,
+}
+
+impl RawStats {
+    /// Compute from cached forward activations and (sampled-target)
+    /// backward derivatives. `gs[i]` must *not* be scaled by 1/m.
+    pub fn from_batch(fwd: &Fwd, gs: &[Mat]) -> RawStats {
+        let m = fwd.abars[0].rows as f64;
+        let l = gs.len();
+        let scale = 1.0 / m;
+        let aa: Vec<Mat> =
+            fwd.abars.iter().map(|ab| ab.matmul_tn(ab).scale(scale).symmetrize()).collect();
+        let gg: Vec<Mat> = gs.iter().map(|g| g.matmul_tn(g).scale(scale).symmetrize()).collect();
+        let aa_off: Vec<Mat> = (0..l - 1)
+            .map(|i| fwd.abars[i].matmul_tn(&fwd.abars[i + 1]).scale(scale))
+            .collect();
+        let gg_off: Vec<Mat> = (0..l - 1).map(|i| gs[i].matmul_tn(&gs[i + 1]).scale(scale)).collect();
+        RawStats { aa, aa_off, gg, gg_off }
+    }
+
+    /// Zero-initialized stats for an architecture.
+    pub fn zeros(arch: &Arch) -> RawStats {
+        let l = arch.num_layers();
+        let aa = (0..l).map(|i| Mat::zeros(arch.widths[i] + 1, arch.widths[i] + 1)).collect();
+        let gg = (0..l).map(|i| Mat::zeros(arch.widths[i + 1], arch.widths[i + 1])).collect();
+        let aa_off =
+            (0..l - 1).map(|i| Mat::zeros(arch.widths[i] + 1, arch.widths[i + 1] + 1)).collect();
+        let gg_off =
+            (0..l - 1).map(|i| Mat::zeros(arch.widths[i + 1], arch.widths[i + 2])).collect();
+        RawStats { aa, aa_off, gg, gg_off }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.aa.len()
+    }
+}
+
+/// Online exponentially-decayed estimates of the factor statistics.
+#[derive(Clone, Debug)]
+pub struct KfacStats {
+    pub s: RawStats,
+    /// Number of updates absorbed so far.
+    pub k: usize,
+}
+
+impl KfacStats {
+    pub fn new(arch: &Arch) -> KfacStats {
+        KfacStats { s: RawStats::zeros(arch), k: 0 }
+    }
+
+    /// The paper's decay schedule: `ε = min(1 − 1/k, 0.95)`.
+    pub fn epsilon(k: usize) -> f64 {
+        (1.0 - 1.0 / k as f64).min(0.95)
+    }
+
+    /// Fold in one mini-batch estimate.
+    pub fn update(&mut self, batch: &RawStats) {
+        self.k += 1;
+        let eps = Self::epsilon(self.k);
+        let blend = |dst: &mut Vec<Mat>, src: &Vec<Mat>| {
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                d.ema(eps, 1.0 - eps, s);
+            }
+        };
+        blend(&mut self.s.aa, &batch.aa);
+        blend(&mut self.s.aa_off, &batch.aa_off);
+        blend(&mut self.s.gg, &batch.gg);
+        blend(&mut self.s.gg_off, &batch.gg_off);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::net::Net;
+    use crate::nn::{Act, Arch, LossKind};
+    use crate::rng::Rng;
+
+    fn setup() -> (Net, crate::nn::Params, Mat) {
+        let arch = Arch::new(
+            vec![6, 5, 4, 3],
+            vec![Act::Tanh, Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let mut rng = Rng::new(1);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(32, 6, 1.0, &mut rng);
+        (Net::new(arch), p, x)
+    }
+
+    #[test]
+    fn shapes_match_arch() {
+        let (net, p, x) = setup();
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(2));
+        let st = RawStats::from_batch(&fwd, &gs);
+        assert_eq!(st.aa.len(), 3);
+        assert_eq!(st.aa[0].rows, 7);
+        assert_eq!(st.aa[2].rows, 5);
+        assert_eq!(st.gg[0].rows, 5);
+        assert_eq!(st.gg[2].rows, 3);
+        assert_eq!((st.aa_off[0].rows, st.aa_off[0].cols), (7, 6));
+        assert_eq!((st.gg_off[1].rows, st.gg_off[1].cols), (4, 3));
+        let z = RawStats::zeros(&net.arch);
+        for (a, b) in z.aa.iter().zip(st.aa.iter()) {
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+        for (a, b) in z.gg_off.iter().zip(st.gg_off.iter()) {
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+    }
+
+    #[test]
+    fn aa_is_psd_with_unit_corner() {
+        let (net, p, x) = setup();
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(3));
+        let st = RawStats::from_batch(&fwd, &gs);
+        for aa in &st.aa {
+            // homogeneous coordinate: E[1·1] = 1 in the bottom-right corner
+            assert!((aa.at(aa.rows - 1, aa.cols - 1) - 1.0).abs() < 1e-12);
+            // PSD: vᵀ A v >= 0 for random v
+            let mut rng = Rng::new(9);
+            for _ in 0..5 {
+                let v: Vec<f64> = (0..aa.rows).map(|_| rng.normal()).collect();
+                let av = aa.matvec(&v);
+                let q: f64 = v.iter().zip(av.iter()).map(|(a, b)| a * b).sum();
+                assert!(q >= -1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn ema_schedule() {
+        assert!((KfacStats::epsilon(1) - 0.0).abs() < 1e-15);
+        assert!((KfacStats::epsilon(2) - 0.5).abs() < 1e-15);
+        assert!((KfacStats::epsilon(100) - 0.95).abs() < 1e-15);
+    }
+
+    #[test]
+    fn first_update_takes_batch_value() {
+        let (net, p, x) = setup();
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(4));
+        let st = RawStats::from_batch(&fwd, &gs);
+        let mut ema = KfacStats::new(&net.arch);
+        ema.update(&st);
+        assert!(ema.s.aa[0].sub(&st.aa[0]).max_abs() < 1e-14);
+        assert!(ema.s.gg[1].sub(&st.gg[1]).max_abs() < 1e-14);
+    }
+}

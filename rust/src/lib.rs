@@ -1,0 +1,49 @@
+//! # K-FAC: Kronecker-factored Approximate Curvature
+//!
+//! A production-quality reproduction of *Optimizing Neural Networks with
+//! Kronecker-factored Approximate Curvature* (Martens & Grosse, ICML 2015)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1/2 (build time)**: Pallas kernels and JAX compute graphs in
+//!   `python/compile/`, AOT-lowered to HLO text artifacts.
+//! - **Layer 3 (this crate)**: the K-FAC optimizer itself — online
+//!   Kronecker-factored Fisher statistics, block-diagonal and
+//!   block-tridiagonal inverse approximations, the full damping /
+//!   re-scaling / momentum machinery of the paper — plus every substrate
+//!   it needs (dense linear algebra, a feed-forward NN reference
+//!   implementation, synthetic datasets, a PJRT runtime for the AOT
+//!   artifacts, and a training coordinator).
+//!
+//! Quick start (pure-Rust backend): see `examples/quickstart.rs`.
+
+pub mod bench;
+pub mod linalg;
+pub mod par;
+pub mod rng;
+pub mod util;
+
+pub mod nn;
+
+pub mod fisher;
+
+pub mod optim;
+
+pub mod data;
+
+pub mod backend;
+pub mod runtime;
+
+pub mod coordinator;
+
+pub mod experiments;
+
+/// Convenient re-exports for library users.
+pub mod prelude {
+    pub use crate::backend::{BatchStats, ModelBackend, RustBackend};
+    pub use crate::data::dataset::Dataset;
+    pub use crate::linalg::Mat;
+    pub use crate::nn::{Act, Arch, LossKind, Params};
+    pub use crate::optim::kfac::{Kfac, KfacConfig};
+    pub use crate::optim::sgd::{Sgd, SgdConfig};
+    pub use crate::rng::Rng;
+}

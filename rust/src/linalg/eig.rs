@@ -1,0 +1,410 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and PSD matrix functions.
+//!
+//! The block-tridiagonal inverse approximation (paper §4.3 + Appendix B)
+//! needs symmetric eigendecompositions and inverse square roots of the
+//! damped Kronecker factors. Jacobi is simple, numerically excellent for
+//! symmetric matrices, and O(n³) with a modest constant — fine for the
+//! layer-sized (≤ ~800) matrices K-FAC inverts, especially since
+//! inverses are only refreshed every `T₃` iterations.
+
+use super::Mat;
+
+/// Eigendecomposition `A = V diag(w) Vᵀ` of a symmetric matrix.
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub w: Vec<f64>,
+    /// Eigenvectors as **columns** of `v`.
+    pub v: Mat,
+}
+
+impl SymEig {
+    /// Symmetric eigendecomposition. Householder tridiagonalization +
+    /// implicit-shift QL (the classic tred2/tql2 pair) for matrices big
+    /// enough for Jacobi's constant to hurt; cyclic Jacobi below that
+    /// (and as the reference implementation the QL path is tested
+    /// against).
+    pub fn new(a: &Mat) -> SymEig {
+        if a.rows > 24 {
+            Self::new_ql(a)
+        } else {
+            Self::new_jacobi(a)
+        }
+    }
+
+    /// tred2: reduce symmetric `a` to tridiagonal (d, e) with accumulated
+    /// orthogonal transform in `z`; then tql2: implicit-shift QL on the
+    /// tridiagonal, rotating `z`'s columns into eigenvectors.
+    pub fn new_ql(a: &Mat) -> SymEig {
+        assert!(a.is_square(), "eig: non-square");
+        let n = a.rows;
+        let mut z = a.symmetrize();
+        let mut d = vec![0.0f64; n];
+        let mut e = vec![0.0f64; n];
+
+        // --- tred2 (Householder reduction, EISPACK/NR layout) ---
+        for i in (1..n).rev() {
+            let l = i - 1;
+            let mut h = 0.0;
+            if l > 0 {
+                let mut scale = 0.0;
+                for k in 0..=l {
+                    scale += z.at(i, k).abs();
+                }
+                if scale == 0.0 {
+                    e[i] = z.at(i, l);
+                } else {
+                    for k in 0..=l {
+                        let v = z.at(i, k) / scale;
+                        z.set(i, k, v);
+                        h += v * v;
+                    }
+                    let mut f = z.at(i, l);
+                    let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                    e[i] = scale * g;
+                    h -= f * g;
+                    z.set(i, l, f - g);
+                    f = 0.0;
+                    for j in 0..=l {
+                        z.set(j, i, z.at(i, j) / h);
+                        let mut g = 0.0;
+                        for k in 0..=j {
+                            g += z.at(j, k) * z.at(i, k);
+                        }
+                        for k in (j + 1)..=l {
+                            g += z.at(k, j) * z.at(i, k);
+                        }
+                        e[j] = g / h;
+                        f += e[j] * z.at(i, j);
+                    }
+                    let hh = f / (h + h);
+                    for j in 0..=l {
+                        let f = z.at(i, j);
+                        let g = e[j] - hh * f;
+                        e[j] = g;
+                        for k in 0..=j {
+                            let v = z.at(j, k) - (f * e[k] + g * z.at(i, k));
+                            z.set(j, k, v);
+                        }
+                    }
+                }
+            } else {
+                e[i] = z.at(i, l);
+            }
+            d[i] = h;
+        }
+        d[0] = 0.0;
+        e[0] = 0.0;
+        for i in 0..n {
+            if d[i] != 0.0 {
+                // accumulate transform
+                for j in 0..i {
+                    let mut g = 0.0;
+                    for k in 0..i {
+                        g += z.at(i, k) * z.at(k, j);
+                    }
+                    for k in 0..i {
+                        let v = z.at(k, j) - g * z.at(k, i);
+                        z.set(k, j, v);
+                    }
+                }
+            }
+            d[i] = z.at(i, i);
+            z.set(i, i, 1.0);
+            for j in 0..i {
+                z.set(j, i, 0.0);
+                z.set(i, j, 0.0);
+            }
+        }
+
+        // --- tql2 (implicit-shift QL with eigenvector accumulation) ---
+        for i in 1..n {
+            e[i - 1] = e[i];
+        }
+        e[n - 1] = 0.0;
+        for l in 0..n {
+            let mut iter = 0;
+            loop {
+                // find small subdiagonal element
+                let mut m = l;
+                while m + 1 < n {
+                    let dd = d[m].abs() + d[m + 1].abs();
+                    if e[m].abs() <= f64::EPSILON * dd {
+                        break;
+                    }
+                    m += 1;
+                }
+                if m == l {
+                    break;
+                }
+                iter += 1;
+                assert!(iter <= 50, "tql2: too many iterations");
+                let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+                let mut r = g.hypot(1.0);
+                let sign_r = if g >= 0.0 { r } else { -r };
+                g = d[m] - d[l] + e[l] / (g + sign_r);
+                let (mut s, mut c) = (1.0f64, 1.0f64);
+                let mut p = 0.0f64;
+                for i in (l..m).rev() {
+                    let mut f = s * e[i];
+                    let b = c * e[i];
+                    r = f.hypot(g);
+                    e[i + 1] = r;
+                    if r == 0.0 {
+                        d[i + 1] -= p;
+                        e[m] = 0.0;
+                        break;
+                    }
+                    s = f / r;
+                    c = g / r;
+                    g = d[i + 1] - p;
+                    r = (d[i] - g) * s + 2.0 * c * b;
+                    p = s * r;
+                    d[i + 1] = g + p;
+                    g = c * r - b;
+                    // accumulate eigenvectors
+                    for k in 0..n {
+                        f = z.at(k, i + 1);
+                        let v1 = s * z.at(k, i) + c * f;
+                        let v0 = c * z.at(k, i) - s * f;
+                        z.set(k, i + 1, v1);
+                        z.set(k, i, v0);
+                    }
+                }
+                if r == 0.0 && m > l {
+                    continue;
+                }
+                d[l] -= p;
+                e[l] = g;
+                e[m] = 0.0;
+            }
+        }
+
+        // sort ascending (tql2 output is unordered in general)
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+        let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+        let mut vs = Mat::zeros(n, n);
+        for (new_c, &old_c) in idx.iter().enumerate() {
+            for r in 0..n {
+                vs.set(r, new_c, z.at(r, old_c));
+            }
+        }
+        SymEig { w, v: vs }
+    }
+
+    /// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+    pub fn new_jacobi(a: &Mat) -> SymEig {
+        assert!(a.is_square(), "eig: non-square");
+        let n = a.rows;
+        let mut m = a.symmetrize();
+        let mut v = Mat::eye(n);
+        if n <= 1 {
+            return SymEig { w: (0..n).map(|i| m.at(i, i)).collect(), v };
+        }
+        let max_sweeps = 64;
+        for _sweep in 0..max_sweeps {
+            // off-diagonal Frobenius norm
+            let mut off = 0.0;
+            for r in 0..n {
+                for c in (r + 1)..n {
+                    off += m.at(r, c) * m.at(r, c);
+                }
+            }
+            let scale = m.frob_norm().max(1e-300);
+            if off.sqrt() <= 1e-14 * scale {
+                break;
+            }
+            for p in 0..n - 1 {
+                for q in p + 1..n {
+                    let apq = m.at(p, q);
+                    if apq.abs() <= 1e-300 {
+                        continue;
+                    }
+                    let app = m.at(p, p);
+                    let aqq = m.at(q, q);
+                    // rotation angle
+                    let theta = 0.5 * (aqq - app) / apq;
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // apply rotation to rows/cols p,q of m
+                    for k in 0..n {
+                        let mkp = m.at(k, p);
+                        let mkq = m.at(k, q);
+                        m.set(k, p, c * mkp - s * mkq);
+                        m.set(k, q, s * mkp + c * mkq);
+                    }
+                    for k in 0..n {
+                        let mpk = m.at(p, k);
+                        let mqk = m.at(q, k);
+                        m.set(p, k, c * mpk - s * mqk);
+                        m.set(q, k, s * mpk + c * mqk);
+                    }
+                    // accumulate eigenvectors
+                    for k in 0..n {
+                        let vkp = v.at(k, p);
+                        let vkq = v.at(k, q);
+                        v.set(k, p, c * vkp - s * vkq);
+                        v.set(k, q, s * vkp + c * vkq);
+                    }
+                }
+            }
+        }
+        // extract + sort ascending
+        let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let w: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let mut vs = Mat::zeros(n, n);
+        for (new_c, &(_, old_c)) in pairs.iter().enumerate() {
+            for r in 0..n {
+                vs.set(r, new_c, v.at(r, old_c));
+            }
+        }
+        SymEig { w, v: vs }
+    }
+
+    /// Apply a scalar function to the spectrum: `V f(diag(w)) Vᵀ`.
+    pub fn matrix_fn(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.w.len();
+        // V * diag(f(w))
+        let mut vf = self.v.clone();
+        for r in 0..n {
+            for c in 0..n {
+                vf.set(r, c, vf.at(r, c) * f(self.w[c]));
+            }
+        }
+        vf.matmul_nt(&self.v).symmetrize()
+    }
+
+    /// PSD square root (negative eigenvalues clamped to 0).
+    pub fn sqrt_psd(&self) -> Mat {
+        self.matrix_fn(|w| w.max(0.0).sqrt())
+    }
+
+    /// PSD inverse square root with floor `eps` on eigenvalues.
+    pub fn inv_sqrt_psd(&self, eps: f64) -> Mat {
+        self.matrix_fn(|w| 1.0 / w.max(eps).sqrt())
+    }
+
+    /// Reconstruct the matrix (round-trip check).
+    pub fn reconstruct(&self) -> Mat {
+        self.matrix_fn(|w| w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::spd_inverse;
+    use crate::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        Mat::randn(n, n, 1.0, rng).symmetrize()
+    }
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let x = Mat::randn(n + 3, n, 1.0, rng);
+        x.matmul_tn(&x).add_diag(0.3)
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 3, 8, 25] {
+            let a = random_sym(n, &mut rng);
+            let e = SymEig::new(&a);
+            let rec_err = e.reconstruct().sub(&a).max_abs();
+            assert!(rec_err < 1e-9 * (1.0 + a.max_abs()), "n={n} err={rec_err}");
+            let orth = e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs();
+            assert!(orth < 1e-10, "n={n} orth={orth}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_and_match_trace() {
+        let mut rng = Rng::new(2);
+        let a = random_sym(10, &mut rng);
+        let e = SymEig::new(&a);
+        for i in 1..e.w.len() {
+            assert!(e.w[i] >= e.w[i - 1]);
+        }
+        let tr: f64 = e.w.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(9, &mut rng);
+        let s = SymEig::new(&a).sqrt_psd();
+        assert!(s.matmul(&s).sub(&a).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn inv_sqrt_matches_cholesky_inverse() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(7, &mut rng);
+        let is = SymEig::new(&a).inv_sqrt_psd(1e-14);
+        let inv_via_eig = is.matmul(&is);
+        let inv_via_chol = spd_inverse(&a);
+        assert!(inv_via_eig.sub(&inv_via_chol).max_abs() < 1e-7);
+    }
+
+    #[test]
+    fn ql_matches_jacobi() {
+        let mut rng = Rng::new(77);
+        for n in [2usize, 5, 17, 40, 73] {
+            let a = random_sym(n, &mut rng);
+            let ql = SymEig::new_ql(&a);
+            let ja = SymEig::new_jacobi(&a);
+            for i in 0..n {
+                assert!(
+                    (ql.w[i] - ja.w[i]).abs() < 1e-9 * (1.0 + a.max_abs()),
+                    "n={n} eigenvalue {i}: {} vs {}",
+                    ql.w[i],
+                    ja.w[i]
+                );
+            }
+            // reconstruction + orthogonality for the QL path
+            assert!(ql.reconstruct().sub(&a).max_abs() < 1e-9 * (1.0 + a.max_abs()));
+            assert!(ql.v.matmul_tn(&ql.v).sub(&Mat::eye(n)).max_abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ql_handles_degenerate_spectra() {
+        // repeated eigenvalues and zero rows
+        let mut a = Mat::eye(10).scale(3.0);
+        a.set(9, 9, 0.0);
+        let e = SymEig::new_ql(&a);
+        assert!((e.w[0] - 0.0).abs() < 1e-12);
+        assert!((e.w[9] - 3.0).abs() < 1e-12);
+        assert!(e.reconstruct().sub(&a).max_abs() < 1e-10);
+        // rank-1
+        let v = Mat::from_fn(8, 1, |r, _| (r + 1) as f64);
+        let r1 = v.matmul_nt(&v);
+        let e = SymEig::new_ql(&r1);
+        assert!(e.reconstruct().sub(&r1).max_abs() < 1e-8 * r1.max_abs());
+    }
+
+    #[test]
+    fn property_eig_many_seeds() {
+        for seed in 0..15 {
+            let mut rng = Rng::new(100 + seed);
+            let n = 1 + rng.below(20);
+            let a = random_sym(n, &mut rng);
+            let e = SymEig::new(&a);
+            // A v_i = w_i v_i for each eigenpair
+            for i in 0..n {
+                let vi: Vec<f64> = (0..n).map(|r| e.v.at(r, i)).collect();
+                let av = a.matvec(&vi);
+                for r in 0..n {
+                    assert!(
+                        (av[r] - e.w[i] * vi[r]).abs() < 1e-8 * (1.0 + a.max_abs()),
+                        "seed={seed} n={n} i={i}"
+                    );
+                }
+            }
+        }
+    }
+}

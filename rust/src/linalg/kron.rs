@@ -1,0 +1,129 @@
+//! Kronecker-product utilities.
+//!
+//! The central identity the whole paper rides on:
+//! `(A ⊗ B) vec(X) = vec(B X Aᵀ)` with *column-stacking* `vec`.
+//! For K-FAC's blocks, `vec(DW_i) = ā_{i-1} ⊗ g_i`, so the Fisher block
+//! is `Ā ⊗ G` with `Ā` on the *input* (column) side and `G` on the
+//! *output* (row) side, and applying `(Ā ⊗ G)` to a gradient shaped as
+//! the weight matrix `V (d_out × d_in+1)` is just `G V Āᵀ`.
+//!
+//! Dense `kron` is used only by the exact-Fisher experiments on small
+//! networks (Figs 2/3/5/6); the optimizer always uses the vec-trick.
+
+use super::Mat;
+
+/// Dense Kronecker product `A ⊗ B`.
+pub fn kron(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows * b.rows, a.cols * b.cols);
+    for ia in 0..a.rows {
+        for ja in 0..a.cols {
+            let s = a.at(ia, ja);
+            if s == 0.0 {
+                continue;
+            }
+            for ib in 0..b.rows {
+                let orow = ia * b.rows + ib;
+                for jb in 0..b.cols {
+                    out.set(orow, ja * b.cols + jb, s * b.at(ib, jb));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `(A ⊗ B) vec(X) = vec(B X Aᵀ)` computed without forming `A ⊗ B`.
+/// `X` has shape `(B.cols, A.cols)`; result has shape `(B.rows, A.rows)`.
+pub fn kron_apply(a: &Mat, b: &Mat, x: &Mat) -> Mat {
+    assert_eq!(x.rows, b.cols, "kron_apply: X rows must match B cols");
+    assert_eq!(x.cols, a.cols, "kron_apply: X cols must match A cols");
+    b.matmul(&x.matmul_nt(a))
+}
+
+/// Column-stacking vec: `vec(X)` as a length `rows*cols` vector.
+/// Entry `vec(X)[c*rows + r] = X[r, c]`.
+pub fn vec_mat(x: &Mat) -> Vec<f64> {
+    let mut v = Vec::with_capacity(x.rows * x.cols);
+    for c in 0..x.cols {
+        for r in 0..x.rows {
+            v.push(x.at(r, c));
+        }
+    }
+    v
+}
+
+/// Inverse of [`vec_mat`].
+pub fn unvec(v: &[f64], rows: usize, cols: usize) -> Mat {
+    assert_eq!(v.len(), rows * cols);
+    let mut x = Mat::zeros(rows, cols);
+    for c in 0..cols {
+        for r in 0..rows {
+            x.set(r, c, v[c * rows + r]);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn kron_known_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::eye(2);
+        let k = kron(&a, &b);
+        assert_eq!(k.rows, 4);
+        assert_eq!(k.at(0, 0), 1.0);
+        assert_eq!(k.at(0, 2), 2.0);
+        assert_eq!(k.at(3, 1), 3.0); // block (1,0): a[1,0] * b[1,1]
+        assert_eq!(k.at(2, 0), 3.0);
+        assert_eq!(k.at(3, 3), 4.0);
+    }
+
+    #[test]
+    fn vec_trick_matches_dense_kron() {
+        let mut rng = Rng::new(1);
+        for &(p, q, r, s) in &[(2usize, 3usize, 4usize, 2usize), (3, 3, 3, 3), (1, 5, 2, 4)] {
+            let a = Mat::randn(p, q, 1.0, &mut rng);
+            let b = Mat::randn(r, s, 1.0, &mut rng);
+            let x = Mat::randn(s, q, 1.0, &mut rng);
+            let dense = kron(&a, &b);
+            let want = unvec(&dense.matvec(&vec_mat(&x)), r, p);
+            let got = kron_apply(&a, &b, &x);
+            assert!(got.sub(&want).max_abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn kron_inverse_identity() {
+        // (A ⊗ B)^-1 = A^-1 ⊗ B^-1
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(3, 3, 1.0, &mut rng).add(&Mat::eye(3).scale(3.0));
+        let b = Mat::randn(2, 2, 1.0, &mut rng).add(&Mat::eye(2).scale(3.0));
+        let lhs = kron(&a, &b).inverse();
+        let rhs = kron(&a.inverse(), &b.inverse());
+        assert!(lhs.sub(&rhs).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn vec_unvec_roundtrip() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(4, 6, 1.0, &mut rng);
+        assert_eq!(unvec(&vec_mat(&x), 4, 6), x);
+    }
+
+    #[test]
+    fn vec_of_outer_product_is_kron_of_vectors() {
+        // vec(g ā^T) = ā ⊗ g — the identity underlying F_{i,j} = Ā ⊗ G.
+        let g = Mat::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let abar = Mat::from_vec(2, 1, vec![5.0, 7.0]);
+        let outer = g.matmul_nt(&abar); // 3x2
+        let v = vec_mat(&outer);
+        let k = kron(&abar, &g); // 6x1
+        for i in 0..6 {
+            assert!((v[i] - k.at(i, 0)).abs() < 1e-15);
+        }
+    }
+}

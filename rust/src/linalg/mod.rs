@@ -1,0 +1,522 @@
+//! Dense linear algebra substrate (f64, row-major).
+//!
+//! Everything K-FAC needs from a LAPACK/BLAS that we do not have:
+//! threaded blocked GEMM (all four transpose variants used by the
+//! NN/Fisher code), Cholesky factorization / SPD inverses, a Jacobi
+//! symmetric eigensolver, PSD matrix square roots, Kronecker-product
+//! utilities, and the Appendix-B structured inverse of
+//! `A ⊗ B ± C ⊗ D` (see [`stein`]).
+
+pub mod chol;
+pub mod eig;
+pub mod kron;
+pub mod stein;
+
+pub use chol::Cholesky;
+pub use eig::SymEig;
+pub use stein::KronPairInverse;
+
+use crate::par;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            for r in 0..self.rows {
+                write!(f, "\n  [")?;
+                for c in 0..self.cols {
+                    write!(f, " {:9.4}", self.at(r, c))?;
+                }
+                write!(f, " ]")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    // ---------- constructors ----------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Random N(0, sigma^2) entries.
+    pub fn randn(rows: usize, cols: usize, sigma: f64, rng: &mut crate::rng::Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = sigma * rng.normal();
+        }
+        m
+    }
+
+    // ---------- element access ----------
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    // ---------- shape ops ----------
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Copy a rectangular block `[r0..r1) x [c0..c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut b = Mat::zeros(r1 - r0, c1 - c0);
+        for r in r0..r1 {
+            b.row_mut(r - r0).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        b
+    }
+
+    /// Write `src` into the block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for r in 0..src.rows {
+            let dst = &mut self.row_mut(r0 + r)[c0..c0 + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+    }
+
+    /// First `n` rows as a new matrix.
+    pub fn top_rows(&self, n: usize) -> Mat {
+        self.block(0, n.min(self.rows), 0, self.cols)
+    }
+
+    /// Rows selected by `idx` (gather).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Append a column of ones (homogeneous coordinate ā = [a; 1]).
+    pub fn append_ones_col(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols + 1);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols] = 1.0;
+        }
+        out
+    }
+
+    /// Drop the last column (inverse of `append_ones_col`).
+    pub fn drop_last_col(&self) -> Mat {
+        self.block(0, self.rows, 0, self.cols - 1)
+    }
+
+    // ---------- elementwise / vector-space ops ----------
+
+    pub fn map(&self, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v = f(*v);
+        }
+        out
+    }
+
+    pub fn zip_map(&self, other: &Mat, f: impl Fn(f64, f64) -> f64) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (v, &o) in out.data.iter_mut().zip(other.data.iter()) {
+            *v = f(*v, o);
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        self.map(|v| v * s)
+    }
+
+    /// `self += alpha * other`
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (v, &o) in self.data.iter_mut().zip(other.data.iter()) {
+            *v += alpha * o;
+        }
+    }
+
+    /// `self = beta*self + alpha*other` (the EMA update of Section 5).
+    pub fn ema(&mut self, beta: f64, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (v, &o) in self.data.iter_mut().zip(other.data.iter()) {
+            *v = beta * *v + alpha * o;
+        }
+    }
+
+    /// Add `v` to the diagonal (Tikhonov damping).
+    pub fn add_diag(&self, v: f64) -> Mat {
+        assert!(self.is_square());
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            out.data[i * self.cols + i] += v;
+        }
+        out
+    }
+
+    /// Frobenius inner product `<self, other>`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(other.data.iter()).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.data[i * self.cols + i]).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Force exact symmetry: (M + Mᵀ)/2.
+    pub fn symmetrize(&self) -> Mat {
+        assert!(self.is_square());
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                let v = 0.5 * (self.at(r, c) + self.at(c, r));
+                out.set(r, c, v);
+                out.set(c, r, v);
+            }
+        }
+        out
+    }
+
+    // ---------- GEMM family ----------
+    //
+    // All four transpose variants are implemented as `C = A' * B'` with the
+    // inner loops arranged so that the innermost access pattern over B is
+    // contiguous; row blocks of C are distributed over the thread pool.
+
+    /// `self * other`
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul: {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        let out_ptr = ParOut(out.data.as_mut_ptr());
+        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
+            let o = out_ptr;
+            for i in lo..hi {
+                // SAFETY: disjoint row ranges per worker.
+                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
+                let arow = &a[i * k..(i + 1) * k];
+                for (p, &aip) in arow.iter().enumerate() {
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *c += aip * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ * other`  (e.g. covariance updates `Xᵀ X / m`).
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data; // k x m
+        let b = &other.data; // k x n
+        let out_ptr = ParOut(out.data.as_mut_ptr());
+        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
+            let o = out_ptr;
+            for i in lo..hi {
+                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
+                for p in 0..k {
+                    let aip = a[p * m + i];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *c += aip * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `self * otherᵀ`  (e.g. layer forward `Ā Wᵀ`).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        let a = &self.data; // m x k
+        let b = &other.data; // n x k
+        let out_ptr = ParOut(out.data.as_mut_ptr());
+        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
+            let o = out_ptr;
+            for i in lo..hi {
+                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
+                let arow = &a[i * k..(i + 1) * k];
+                for (j, c) in crow.iter_mut().enumerate() {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0;
+                    for (av, bv) in arow.iter().zip(brow.iter()) {
+                        acc += av * bv;
+                    }
+                    *c = acc;
+                }
+            }
+        });
+        out
+    }
+
+    /// Matrix-vector product `self * v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(v.iter()).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// General (square, not necessarily SPD) inverse via partial-pivot
+    /// Gauss–Jordan. Used only in tests/experiments on small matrices;
+    /// the optimizer hot path uses Cholesky.
+    pub fn inverse(&self) -> Mat {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Mat::eye(n);
+        for col in 0..n {
+            // pivot
+            let mut piv = col;
+            for r in (col + 1)..n {
+                if a.at(r, col).abs() > a.at(piv, col).abs() {
+                    piv = r;
+                }
+            }
+            if a.at(piv, col).abs() < 1e-300 {
+                panic!("inverse: singular matrix at column {col}");
+            }
+            if piv != col {
+                for c in 0..n {
+                    let (x, y) = (a.at(col, c), a.at(piv, c));
+                    a.set(col, c, y);
+                    a.set(piv, c, x);
+                    let (x, y) = (inv.at(col, c), inv.at(piv, c));
+                    inv.set(col, c, y);
+                    inv.set(piv, c, x);
+                }
+            }
+            let d = 1.0 / a.at(col, col);
+            for c in 0..n {
+                a.set(col, c, a.at(col, c) * d);
+                inv.set(col, c, inv.at(col, c) * d);
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a.at(r, col);
+                if f == 0.0 {
+                    continue;
+                }
+                for c in 0..n {
+                    let v = a.at(r, c) - f * a.at(col, c);
+                    a.set(r, c, v);
+                    let v = inv.at(r, c) - f * inv.at(col, c);
+                    inv.set(r, c, v);
+                }
+            }
+        }
+        inv
+    }
+}
+
+#[derive(Clone, Copy)]
+struct ParOut(*mut f64);
+unsafe impl Send for ParOut {}
+unsafe impl Sync for ParOut {}
+
+/// Minimum rows per worker so tiny GEMMs stay single-threaded.
+fn par_row_chunk(m: usize, n: usize, k: usize) -> usize {
+    // Target >= ~64k flops per spawned chunk.
+    let flops_per_row = (2 * n * k).max(1);
+    (65_536 / flops_per_row).max(1).min(m.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 4, 5), (17, 9, 23), (64, 32, 48)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = naive_matmul(&a, &b);
+            assert!(a.matmul(&b).sub(&want).max_abs() < 1e-10);
+            assert!(a.transpose().matmul_tn(&b).sub(&want).max_abs() < 1e-10);
+            assert!(a.matmul_nt(&b.transpose()).sub(&want).max_abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transpose_involution_and_blocks() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(7, 5, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        let b = a.block(1, 4, 2, 5);
+        assert_eq!(b.rows, 3);
+        assert_eq!(b.at(0, 0), a.at(1, 2));
+        let mut z = Mat::zeros(7, 5);
+        z.set_block(1, 2, &b);
+        assert_eq!(z.at(3, 4), a.at(3, 4));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(6, 6, 1.0, &mut rng).add(&Mat::eye(6).scale(3.0));
+        let ainv = a.inverse();
+        let err = a.matmul(&ainv).sub(&Mat::eye(6)).max_abs();
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn homogeneous_column_helpers() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(3, 4, 1.0, &mut rng);
+        let ab = a.append_ones_col();
+        assert_eq!(ab.cols, 5);
+        assert!((0..3).all(|r| ab.at(r, 4) == 1.0));
+        assert_eq!(ab.drop_last_col(), a);
+    }
+
+    #[test]
+    fn ema_and_axpy() {
+        let a = Mat::filled(2, 2, 1.0);
+        let mut b = Mat::filled(2, 2, 3.0);
+        b.ema(0.5, 0.5, &a);
+        assert!((b.at(0, 0) - 2.0).abs() < 1e-15);
+        b.axpy(2.0, &a);
+        assert!((b.at(1, 1) - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        let v: Vec<f64> = (0..6).map(|i| i as f64).collect();
+        let vm = Mat::from_vec(6, 1, v.clone());
+        let want = a.matmul(&vm);
+        let got = a.matvec(&v);
+        for i in 0..4 {
+            assert!((got[i] - want.at(i, 0)).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! `kfac` CLI — train the paper's benchmark problems with K-FAC or the
+//! SGD baseline, on either the pure-Rust backend or the AOT/PJRT
+//! backend.
+//!
+//! Examples:
+//!   kfac train --problem mnist_ae --iters 200 --batch 1000
+//!   kfac train --problem curves_ae --optimizer sgd --lr 0.05
+//!   kfac train --problem mnist_ae --backend pjrt --artifacts artifacts
+//!   kfac list-archs --artifacts artifacts
+
+use kfac::backend::{ModelBackend, PjrtBackend, RustBackend};
+use kfac::coordinator::cli::Args;
+use kfac::coordinator::trainer::{log_to_csv, Optimizer, Problem, TrainConfig, Trainer};
+use kfac::fisher::InverseKind;
+use kfac::optim::{BatchSchedule, KfacConfig, SgdConfig};
+use kfac::rng::Rng;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("train") => train(&args),
+        Some("list-archs") => list_archs(&args),
+        _ => {
+            eprintln!(
+                "usage: kfac <command> [options]\n\
+                 commands:\n\
+                 \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf\n\
+                 \x20              --optimizer kfac|kfac_blkdiag|sgd  --iters N --batch M\n\
+                 \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
+                 \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
+                 \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
+                 \x20 list-archs   --artifacts DIR"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn list_archs(args: &Args) {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match kfac::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            for a in &m.archs {
+                println!(
+                    "{:<12} widths={:?} loss={} chunk={} programs={:?}",
+                    a.name,
+                    a.widths,
+                    a.loss.name(),
+                    a.chunk,
+                    a.programs.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn train(args: &Args) {
+    let problem = Problem::from_name(&args.get_or("problem", "mnist_ae"))
+        .expect("unknown --problem");
+    let iters = args.get_usize("iters", 100);
+    let n_data = args.get_usize("data", 4000);
+    let seed = args.get_usize("seed", 0) as u64;
+    let batch = args.get_usize("batch", 500);
+    let schedule = if args.get_flag("exp-schedule") {
+        BatchSchedule::exponential_reaching(batch, n_data, (iters * 3 / 4).max(2))
+    } else {
+        BatchSchedule::Fixed(batch)
+    };
+
+    let optimizer = match args.get_or("optimizer", "kfac").as_str() {
+        "kfac" | "kfac_blktridiag" => Optimizer::Kfac(KfacConfig {
+            inverse: InverseKind::BlockTridiag,
+            momentum: !args.get_flag("no-momentum"),
+            lambda0: args.get_f64("lambda0", 150.0),
+            ..Default::default()
+        }),
+        "kfac_blkdiag" => Optimizer::Kfac(KfacConfig {
+            inverse: InverseKind::BlockDiag,
+            momentum: !args.get_flag("no-momentum"),
+            lambda0: args.get_f64("lambda0", 150.0),
+            ..Default::default()
+        }),
+        "sgd" => Optimizer::Sgd(SgdConfig {
+            lr: args.get_f64("lr", 0.02),
+            mu_max: args.get_f64("mu-max", 0.99),
+            ..Default::default()
+        }),
+        other => {
+            eprintln!("unknown --optimizer {other}");
+            std::process::exit(2);
+        }
+    };
+
+    println!("# generating {} dataset (n={n_data})…", problem.name());
+    let ds = problem.dataset(n_data, seed);
+    let arch = problem.arch();
+    println!("# arch {:?} ({} params)", arch.widths, arch.num_params());
+    let cfg = TrainConfig {
+        iters,
+        schedule,
+        seed,
+        eval_every: args.get_usize("eval-every", 10),
+        eval_rows: args.get_usize("eval-rows", 1000),
+        polyak: Some(0.99),
+    };
+
+    let mut params = arch.sparse_init(&mut Rng::new(seed ^ 0xA5));
+    let log = match args.get_or("backend", "rust").as_str() {
+        "rust" => {
+            let mut backend = RustBackend::new(arch.clone());
+            Trainer::new(cfg, &ds).run(&mut backend, &mut params, optimizer, true)
+        }
+        "pjrt" => {
+            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let mut backend = PjrtBackend::new(&dir, problem.name()).unwrap_or_else(|e| {
+                eprintln!("error loading artifacts: {e:#}");
+                std::process::exit(1);
+            });
+            assert_eq!(
+                backend.arch().widths,
+                arch.widths,
+                "artifact arch mismatch — re-run `make artifacts`"
+            );
+            Trainer::new(cfg, &ds).run(&mut backend, &mut params, optimizer, true)
+        }
+        other => {
+            eprintln!("unknown --backend {other}");
+            std::process::exit(2);
+        }
+    };
+
+    let _ = params; // final parameters could be serialized here
+    if let Some(out) = args.get("out") {
+        log_to_csv(&PathBuf::from(out), &log).expect("writing log CSV");
+        println!("# wrote {out}");
+    }
+    let last = log.last().expect("no log rows");
+    println!(
+        "# done: iters={} time={:.1}s final train_err={:.5} train_loss={:.5}",
+        last.iter, last.time_s, last.train_err, last.train_loss
+    );
+}

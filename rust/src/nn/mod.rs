@@ -1,0 +1,558 @@
+//! Feed-forward neural network substrate (paper Section 2.1).
+//!
+//! Everything is batched row-major: a mini-batch of `m` cases is a
+//! `Mat` with one case per **row**, so the layer computation
+//! `s_i = W_i ā_{i-1}` (column-vector convention in the paper) becomes
+//! `S_i = Ā_{i-1} W_iᵀ` here. Homogeneous coordinates are used
+//! throughout: `ā = [a; 1]`, and the last column of each `W_i` is the
+//! bias (exactly the paper's convention).
+//!
+//! The output nonlinearity is folded into the loss ([`LossKind`]), so
+//! `z = s_ℓ` are the *natural parameters* of the predictive
+//! distribution `R_{y|z}` — the condition under which the Fisher equals
+//! the Generalized Gauss–Newton matrix (Martens 2014), which the
+//! paper's damping and re-scaling machinery relies on.
+
+pub mod net;
+
+pub use net::{Fwd, Net};
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Hidden-layer activation functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Tanh,
+    Logistic,
+    Relu,
+    Identity,
+}
+
+impl Act {
+    /// φ(s), elementwise.
+    #[inline]
+    pub fn apply(self, s: f64) -> f64 {
+        match self {
+            Act::Tanh => s.tanh(),
+            Act::Logistic => 1.0 / (1.0 + (-s).exp()),
+            Act::Relu => s.max(0.0),
+            Act::Identity => s,
+        }
+    }
+
+    /// φ'(s) expressed via (s, a = φ(s)) — avoids recomputing transcendentals.
+    #[inline]
+    pub fn deriv(self, s: f64, a: f64) -> f64 {
+        match self {
+            Act::Tanh => 1.0 - a * a,
+            Act::Logistic => a * (1.0 - a),
+            Act::Relu => {
+                if s > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Identity => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Tanh => "tanh",
+            Act::Logistic => "logistic",
+            Act::Relu => "relu",
+            Act::Identity => "identity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Act> {
+        Some(match s {
+            "tanh" => Act::Tanh,
+            "logistic" | "sigmoid" => Act::Logistic,
+            "relu" => Act::Relu,
+            "identity" | "linear" => Act::Identity,
+            _ => return None,
+        })
+    }
+}
+
+/// Predictive distribution / loss `L(y, z) = -log r(y|z)` with `z` the
+/// natural parameters (paper Section 2.1 + footnote 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// Bernoulli with logits `z`: `L = Σ softplus(z) - y z`. Used by the
+    /// MNIST/CURVES autoencoders.
+    SigmoidCe,
+    /// Multinomial with logits `z` (one-hot `y`).
+    SoftmaxCe,
+    /// Unit-variance Gaussian with mean `z`: `L = ½‖z - y‖²`. Used by
+    /// the FACES autoencoder.
+    SquaredError,
+}
+
+impl LossKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LossKind::SigmoidCe => "sigmoid_ce",
+            LossKind::SoftmaxCe => "softmax_ce",
+            LossKind::SquaredError => "squared_error",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LossKind> {
+        Some(match s {
+            "sigmoid_ce" => LossKind::SigmoidCe,
+            "softmax_ce" => LossKind::SoftmaxCe,
+            "squared_error" => LossKind::SquaredError,
+            _ => return None,
+        })
+    }
+
+    /// Mean (over rows) loss `1/m Σ L(y, z)`.
+    pub fn loss(self, z: &Mat, y: &Mat) -> f64 {
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols));
+        let m = z.rows as f64;
+        let mut total = 0.0;
+        match self {
+            LossKind::SigmoidCe => {
+                for (zi, yi) in z.data.iter().zip(y.data.iter()) {
+                    // numerically stable softplus(z) - y z
+                    let sp = if *zi > 0.0 { zi + (-zi).exp().ln_1p() } else { zi.exp().ln_1p() };
+                    total += sp - yi * zi;
+                }
+            }
+            LossKind::SoftmaxCe => {
+                for r in 0..z.rows {
+                    let zr = z.row(r);
+                    let yr = y.row(r);
+                    let mx = zr.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let lse = mx + zr.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+                    for (zi, yi) in zr.iter().zip(yr.iter()) {
+                        total += yi * (lse - zi);
+                    }
+                }
+            }
+            LossKind::SquaredError => {
+                for (zi, yi) in z.data.iter().zip(y.data.iter()) {
+                    let d = zi - yi;
+                    total += 0.5 * d * d;
+                }
+            }
+        }
+        total / m
+    }
+
+    /// Per-case loss derivative `∂L/∂z` (rows), *not* divided by m.
+    /// For all three exp-family losses this is `p(z) - y`.
+    pub fn dz(self, z: &Mat, y: &Mat) -> Mat {
+        let p = self.predict(z);
+        p.sub(y)
+    }
+
+    /// Predictive mean `E[y|z]` (σ(z), softmax(z), or z itself).
+    pub fn predict(self, z: &Mat) -> Mat {
+        match self {
+            LossKind::SigmoidCe => z.map(|v| 1.0 / (1.0 + (-v).exp())),
+            LossKind::SoftmaxCe => {
+                let mut p = z.clone();
+                for r in 0..p.rows {
+                    let row = p.row_mut(r);
+                    let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut sum = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - mx).exp();
+                        sum += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= sum;
+                    }
+                }
+                p
+            }
+            LossKind::SquaredError => z.clone(),
+        }
+    }
+
+    /// Sample targets from the predictive distribution `R_{y|z}`
+    /// (paper Section 5 — this is what makes the `G` statistics estimate
+    /// the *standard* Fisher rather than the empirical one).
+    pub fn sample(self, z: &Mat, rng: &mut Rng) -> Mat {
+        let p = self.predict(z);
+        match self {
+            LossKind::SigmoidCe => p.map_rng(rng, |rng, v| rng.bernoulli(v)),
+            LossKind::SoftmaxCe => {
+                let mut y = Mat::zeros(z.rows, z.cols);
+                for r in 0..z.rows {
+                    let k = rng.categorical(p.row(r));
+                    y.set(r, k, 1.0);
+                }
+                y
+            }
+            LossKind::SquaredError => p.map_rng(rng, |rng, v| v + rng.normal()),
+        }
+    }
+
+    /// Σ over cases of `jz1ᵀ F_R(z) jz2` where `F_R` is the Fisher of the
+    /// predictive distribution w.r.t. its natural parameters (Appendix C:
+    /// the half-cost trick computes `vᵀFu` from two linearized forward
+    /// passes and this quadratic form). *Not* divided by m.
+    pub fn fr_quad(self, z: &Mat, jz1: &Mat, jz2: &Mat) -> f64 {
+        assert_eq!((z.rows, z.cols), (jz1.rows, jz1.cols));
+        assert_eq!((z.rows, z.cols), (jz2.rows, jz2.cols));
+        match self {
+            LossKind::SquaredError => jz1.dot(jz2),
+            LossKind::SigmoidCe => {
+                let mut total = 0.0;
+                for ((zi, a), b) in z.data.iter().zip(jz1.data.iter()).zip(jz2.data.iter()) {
+                    let p = 1.0 / (1.0 + (-zi).exp());
+                    total += p * (1.0 - p) * a * b;
+                }
+                total
+            }
+            LossKind::SoftmaxCe => {
+                let p = self.predict(z);
+                let mut total = 0.0;
+                for r in 0..z.rows {
+                    let (pr, ar, br) = (p.row(r), jz1.row(r), jz2.row(r));
+                    let mut sab = 0.0;
+                    let mut sa = 0.0;
+                    let mut sb = 0.0;
+                    for i in 0..pr.len() {
+                        sab += pr[i] * ar[i] * br[i];
+                        sa += pr[i] * ar[i];
+                        sb += pr[i] * br[i];
+                    }
+                    total += sab - sa * sb;
+                }
+                total
+            }
+        }
+    }
+
+    /// Apply `F_R(z)` to a batch of vectors (rows). Needed for the exact
+    /// small-network Fisher in the structure experiments.
+    pub fn fr_apply(self, z: &Mat, v: &Mat) -> Mat {
+        match self {
+            LossKind::SquaredError => v.clone(),
+            LossKind::SigmoidCe => {
+                let p = self.predict(z);
+                v.zip_map(&p, |vi, pi| vi * pi * (1.0 - pi))
+            }
+            LossKind::SoftmaxCe => {
+                let p = self.predict(z);
+                let mut out = Mat::zeros(v.rows, v.cols);
+                for r in 0..v.rows {
+                    let (pr, vr) = (p.row(r), v.row(r));
+                    let dot: f64 = pr.iter().zip(vr.iter()).map(|(a, b)| a * b).sum();
+                    for c in 0..v.cols {
+                        out.set(r, c, pr[c] * (vr[c] - dot));
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Mean per-case "error" for reporting: reconstruction error
+    /// (squared distance between predictive mean and target) for
+    /// autoencoders/regression, 0/1 error for classification.
+    pub fn error(self, z: &Mat, y: &Mat) -> f64 {
+        match self {
+            LossKind::SoftmaxCe => {
+                let mut wrong = 0usize;
+                for r in 0..z.rows {
+                    let argmax = |row: &[f64]| {
+                        row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+                    };
+                    if argmax(z.row(r)) != argmax(y.row(r)) {
+                        wrong += 1;
+                    }
+                }
+                wrong as f64 / z.rows as f64
+            }
+            _ => {
+                let p = self.predict(z);
+                let d = p.sub(y);
+                d.dot(&d) / z.rows as f64
+            }
+        }
+    }
+}
+
+impl Mat {
+    /// Elementwise map with RNG access (used for target sampling).
+    pub fn map_rng(&self, rng: &mut Rng, mut f: impl FnMut(&mut Rng, f64) -> f64) -> Mat {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v = f(rng, *v);
+        }
+        out
+    }
+}
+
+/// Network architecture: `widths = [d₀, d₁, …, d_ℓ]`, one activation per
+/// layer (the last must be `Identity` — the output nonlinearity lives in
+/// the loss), and the loss/predictive-distribution kind.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arch {
+    pub widths: Vec<usize>,
+    pub acts: Vec<Act>,
+    pub loss: LossKind,
+}
+
+impl Arch {
+    pub fn new(widths: Vec<usize>, acts: Vec<Act>, loss: LossKind) -> Arch {
+        assert_eq!(widths.len(), acts.len() + 1, "arch: need one act per layer");
+        assert_eq!(
+            *acts.last().expect("arch: at least one layer"),
+            Act::Identity,
+            "arch: last activation must be Identity (output link lives in the loss)"
+        );
+        Arch { widths, acts, loss }
+    }
+
+    /// Deep autoencoder: hidden activations `act`, linear code layer in
+    /// the middle is up to the caller's `widths`; `SigmoidCe` output.
+    pub fn autoencoder(widths: &[usize], act: Act) -> Arch {
+        assert_eq!(widths.first(), widths.last(), "autoencoder: in/out dims differ");
+        let l = widths.len() - 1;
+        let mut acts = vec![act; l];
+        acts[l - 1] = Act::Identity;
+        Arch::new(widths.to_vec(), acts, LossKind::SigmoidCe)
+    }
+
+    /// Autoencoder with Gaussian (squared error) output, for real-valued
+    /// data like FACES.
+    pub fn autoencoder_gaussian(widths: &[usize], act: Act) -> Arch {
+        let mut a = Arch::autoencoder(widths, act);
+        a.loss = LossKind::SquaredError;
+        a
+    }
+
+    /// Softmax classifier.
+    pub fn classifier(widths: &[usize], act: Act) -> Arch {
+        let l = widths.len() - 1;
+        let mut acts = vec![act; l];
+        acts[l - 1] = Act::Identity;
+        Arch::new(widths.to_vec(), acts, LossKind::SoftmaxCe)
+    }
+
+    /// Number of layers ℓ.
+    pub fn num_layers(&self) -> usize {
+        self.acts.len()
+    }
+
+    /// Shape of `W_i` (0-based layer index): `d_{i+1} × (d_i + 1)`.
+    pub fn weight_shape(&self, i: usize) -> (usize, usize) {
+        (self.widths[i + 1], self.widths[i] + 1)
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        (0..self.num_layers())
+            .map(|i| {
+                let (r, c) = self.weight_shape(i);
+                r * c
+            })
+            .sum()
+    }
+
+    /// "Sparse initialization" of Martens (2010), also used by the paper:
+    /// each unit gets `k` (default 15) incoming connections drawn from
+    /// N(0,1); all other weights and the biases are zero.
+    pub fn sparse_init(&self, rng: &mut Rng) -> Params {
+        let mut ws = Vec::with_capacity(self.num_layers());
+        for i in 0..self.num_layers() {
+            let (rows, cols) = self.weight_shape(i);
+            let fan_in = cols - 1;
+            let k = 15usize.min(fan_in);
+            let mut w = Mat::zeros(rows, cols);
+            for r in 0..rows {
+                let perm = rng.permutation(fan_in);
+                for &c in perm.iter().take(k) {
+                    w.set(r, c, rng.normal());
+                }
+            }
+            ws.push(w);
+        }
+        Params(ws)
+    }
+
+    /// Glorot/Xavier dense initialization (alternative).
+    pub fn glorot_init(&self, rng: &mut Rng) -> Params {
+        let mut ws = Vec::with_capacity(self.num_layers());
+        for i in 0..self.num_layers() {
+            let (rows, cols) = self.weight_shape(i);
+            let fan_in = (cols - 1) as f64;
+            let fan_out = rows as f64;
+            let sigma = (2.0 / (fan_in + fan_out)).sqrt();
+            let mut w = Mat::randn(rows, cols, sigma, rng);
+            for r in 0..rows {
+                w.set(r, cols - 1, 0.0); // zero biases
+            }
+            ws.push(w);
+        }
+        Params(ws)
+    }
+}
+
+/// Network parameters: one weight matrix per layer (bias in last column).
+/// Supports the vector-space operations the optimizer needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params(pub Vec<Mat>);
+
+impl Params {
+    pub fn zeros_like(&self) -> Params {
+        Params(self.0.iter().map(|w| Mat::zeros(w.rows, w.cols)).collect())
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Σ_i <a_i, b_i> (Frobenius).
+    pub fn dot(&self, other: &Params) -> f64 {
+        self.0.iter().zip(other.0.iter()).map(|(a, b)| a.dot(b)).sum()
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.dot(self)
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f64, other: &Params) {
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            a.axpy(alpha, b);
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Params {
+        Params(self.0.iter().map(|w| w.scale(s)).collect())
+    }
+
+    pub fn add(&self, other: &Params) -> Params {
+        Params(self.0.iter().zip(other.0.iter()).map(|(a, b)| a.add(b)).collect())
+    }
+
+    /// `alpha*self + beta*other` without mutating either.
+    pub fn linear_comb(&self, alpha: f64, beta: f64, other: &Params) -> Params {
+        Params(
+            self.0
+                .iter()
+                .zip(other.0.iter())
+                .map(|(a, b)| a.scale(alpha).zip_map(&b.scale(beta), |x, y| x + y))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_shapes_and_counts() {
+        let a = Arch::autoencoder(&[8, 4, 2, 4, 8], Act::Tanh);
+        assert_eq!(a.num_layers(), 4);
+        assert_eq!(a.weight_shape(0), (4, 9));
+        assert_eq!(a.weight_shape(3), (8, 5));
+        assert_eq!(a.num_params(), 4 * 9 + 2 * 5 + 4 * 3 + 8 * 5);
+        assert_eq!(*a.acts.last().unwrap(), Act::Identity);
+    }
+
+    #[test]
+    fn sparse_init_has_k_nonzeros_per_unit_and_zero_bias() {
+        let a = Arch::classifier(&[100, 50, 10], Act::Tanh);
+        let p = a.sparse_init(&mut Rng::new(0));
+        let w0 = &p.0[0];
+        for r in 0..w0.rows {
+            let nnz = w0.row(r)[..100].iter().filter(|v| **v != 0.0).count();
+            assert_eq!(nnz, 15);
+            assert_eq!(w0.row(r)[100], 0.0);
+        }
+    }
+
+    #[test]
+    fn losses_match_finite_difference_dz() {
+        let mut rng = Rng::new(1);
+        for loss in [LossKind::SigmoidCe, LossKind::SoftmaxCe, LossKind::SquaredError] {
+            let z = Mat::randn(3, 5, 1.0, &mut rng);
+            let y = match loss {
+                LossKind::SoftmaxCe => {
+                    let mut y = Mat::zeros(3, 5);
+                    for r in 0..3 {
+                        y.set(r, r + 1, 1.0);
+                    }
+                    y
+                }
+                LossKind::SigmoidCe => Mat::from_fn(3, 5, |r, c| ((r + c) % 2) as f64),
+                LossKind::SquaredError => Mat::randn(3, 5, 1.0, &mut rng),
+            };
+            let dz = loss.dz(&z, &y);
+            let eps = 1e-6;
+            for r in 0..3 {
+                for c in 0..5 {
+                    let mut zp = z.clone();
+                    zp.set(r, c, z.at(r, c) + eps);
+                    let mut zm = z.clone();
+                    zm.set(r, c, z.at(r, c) - eps);
+                    // loss() is mean over m=3 rows; dz is per-case.
+                    let fd = (loss.loss(&zp, &y) - loss.loss(&zm, &y)) / (2.0 * eps) * 3.0;
+                    assert!(
+                        (fd - dz.at(r, c)).abs() < 1e-4,
+                        "{loss:?} ({r},{c}): fd={fd} dz={}",
+                        dz.at(r, c)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fr_quad_is_dz_covariance() {
+        // F_R = E_y[dz dzᵀ] under y ~ R(y|z): check Monte Carlo for softmax.
+        let mut rng = Rng::new(2);
+        let loss = LossKind::SoftmaxCe;
+        let z = Mat::randn(1, 4, 1.0, &mut rng);
+        let v = Mat::randn(1, 4, 1.0, &mut rng);
+        let want = loss.fr_quad(&z, &v, &v);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let y = loss.sample(&z, &mut rng);
+            let d = loss.dz(&z, &y);
+            let s = d.dot(&v);
+            acc += s * s;
+        }
+        let mc = acc / n as f64;
+        assert!((mc - want).abs() < 0.05 * want.abs().max(0.05), "mc={mc} want={want}");
+    }
+
+    #[test]
+    fn fr_apply_matches_fr_quad() {
+        let mut rng = Rng::new(3);
+        for loss in [LossKind::SigmoidCe, LossKind::SoftmaxCe, LossKind::SquaredError] {
+            let z = Mat::randn(4, 6, 0.7, &mut rng);
+            let u = Mat::randn(4, 6, 1.0, &mut rng);
+            let v = Mat::randn(4, 6, 1.0, &mut rng);
+            let got = u.dot(&loss.fr_apply(&z, &v));
+            let want = loss.fr_quad(&z, &u, &v);
+            assert!((got - want).abs() < 1e-10, "{loss:?}");
+        }
+    }
+
+    #[test]
+    fn params_vector_ops() {
+        let a = Arch::classifier(&[4, 3, 2], Act::Tanh);
+        let mut rng = Rng::new(4);
+        let p = a.glorot_init(&mut rng);
+        let q = a.glorot_init(&mut rng);
+        let mut r = p.clone();
+        r.axpy(2.0, &q);
+        let want = p.dot(&p) + 2.0 * p.dot(&q);
+        assert!((r.dot(&p) - want).abs() < 1e-10);
+        assert!((p.scale(3.0).norm_sq() - 9.0 * p.norm_sq()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,308 @@
+//! Forward / backward / linearized-forward passes (paper Algorithm 1 and
+//! Appendix C), batched over mini-batches.
+
+use super::{Arch, Params};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Cached forward-pass quantities for a mini-batch.
+///
+/// `abars[i]` is `Ā_i = [A_i, 1]` with one case per row — `abars[0]` is
+/// the (homogenized) input, and `abars[i]` for `i ≥ 1` the homogenized
+/// activities of layer `i`. `ss[i]` holds the pre-activations `S_{i+1}`
+/// of layer `i+1` (0-based), so `z = ss[ℓ-1]` are the output natural
+/// parameters.
+pub struct Fwd {
+    pub abars: Vec<Mat>,
+    pub ss: Vec<Mat>,
+}
+
+impl Fwd {
+    /// Output natural parameters `z = s_ℓ`.
+    pub fn z(&self) -> &Mat {
+        self.ss.last().expect("empty network")
+    }
+}
+
+/// Stateless forward/backward engine for an [`Arch`].
+#[derive(Clone)]
+pub struct Net {
+    pub arch: Arch,
+}
+
+impl Net {
+    pub fn new(arch: Arch) -> Net {
+        Net { arch }
+    }
+
+    /// Forward pass (Algorithm 1, forward half). `x` is `[m, d₀]`.
+    pub fn forward(&self, params: &Params, x: &Mat) -> Fwd {
+        let l = self.arch.num_layers();
+        assert_eq!(params.num_layers(), l);
+        assert_eq!(x.cols, self.arch.widths[0], "input width mismatch");
+        let mut abars = Vec::with_capacity(l);
+        let mut ss = Vec::with_capacity(l);
+        abars.push(x.append_ones_col());
+        for i in 0..l {
+            let s = abars[i].matmul_nt(&params.0[i]); // [m, d_{i+1}]
+            if i + 1 < l {
+                let act = self.arch.acts[i];
+                let a = Mat::from_fn(s.rows, s.cols, |r, c| act.apply(s.at(r, c)));
+                abars.push(a.append_ones_col());
+            }
+            ss.push(s);
+        }
+        Fwd { abars, ss }
+    }
+
+    /// Backward pass from per-case output derivatives `dz` (Algorithm 1,
+    /// backward half). Returns the per-case pre-activation derivatives
+    /// `gs[i] = G_i` (`[m, d_{i+1}]`, *not* scaled by 1/m).
+    pub fn backward(&self, params: &Params, fwd: &Fwd, dz: &Mat) -> Vec<Mat> {
+        let l = self.arch.num_layers();
+        let mut gs = vec![Mat::zeros(0, 0); l];
+        gs[l - 1] = dz.clone();
+        for i in (0..l - 1).rev() {
+            // dA_i = G_{i+1} * W_{i+1}[:, :d_i]  (drop bias column)
+            let w_next = &params.0[i + 1];
+            let w_nob = w_next.drop_last_col();
+            let da = gs[i + 1].matmul(&w_nob); // [m, d_{i+1 widths}]
+            let act = self.arch.acts[i];
+            let s = &fwd.ss[i];
+            // g_i = dA_i ⊙ φ'(s_i); recompute a from s for the derivative.
+            gs[i] = Mat::from_fn(da.rows, da.cols, |r, c| {
+                let sv = s.at(r, c);
+                da.at(r, c) * act.deriv(sv, act.apply(sv))
+            });
+        }
+        gs
+    }
+
+    /// Mean gradient `∇_W h` from cached activations and `gs`:
+    /// `DW_i = (1/m) G_iᵀ Ā_{i-1}`.
+    pub fn grads_from(&self, fwd: &Fwd, gs: &[Mat]) -> Params {
+        let m = fwd.abars[0].rows as f64;
+        Params(
+            gs.iter()
+                .zip(fwd.abars.iter())
+                .map(|(g, abar)| g.matmul_tn(abar).scale(1.0 / m))
+                .collect(),
+        )
+    }
+
+    /// Mean loss + gradient on a labelled mini-batch (no ℓ2 term).
+    pub fn loss_and_grad(&self, params: &Params, x: &Mat, y: &Mat) -> (f64, Params) {
+        let fwd = self.forward(params, x);
+        let loss = self.arch.loss.loss(fwd.z(), y);
+        let dz = self.arch.loss.dz(fwd.z(), y);
+        let gs = self.backward(params, &fwd, &dz);
+        (loss, self.grads_from(&fwd, &gs))
+    }
+
+    /// Mean loss only.
+    pub fn loss(&self, params: &Params, x: &Mat, y: &Mat) -> f64 {
+        let fwd = self.forward(params, x);
+        self.arch.loss.loss(fwd.z(), y)
+    }
+
+    /// Backward pass with targets **sampled from the model's predictive
+    /// distribution** (Section 5) — the `gs` this produces are the ones
+    /// whose second moments estimate the true-Fisher `G_{i,j}`.
+    pub fn sampled_backward(&self, params: &Params, fwd: &Fwd, rng: &mut Rng) -> Vec<Mat> {
+        let y = self.arch.loss.sample(fwd.z(), rng);
+        let dz = self.arch.loss.dz(fwd.z(), &y);
+        self.backward(params, fwd, &dz)
+    }
+
+    /// Linearized forward pass (the `Jv` of Appendix C): directional
+    /// derivative of `z` w.r.t. parameters along `v`, evaluated with the
+    /// activations cached in `fwd`. Returns `Jz` of shape `[m, d_ℓ]`.
+    pub fn jvp(&self, params: &Params, fwd: &Fwd, v: &Params) -> Mat {
+        let l = self.arch.num_layers();
+        let m = fwd.abars[0].rows;
+        // jabar: derivative of ā_i (homogeneous coord derivative is 0)
+        let mut jabar = Mat::zeros(m, self.arch.widths[0] + 1);
+        let mut jz = Mat::zeros(0, 0);
+        for i in 0..l {
+            // js = Ā_{i-1} V_iᵀ + JĀ_{i-1} W_iᵀ
+            let mut js = fwd.abars[i].matmul_nt(&v.0[i]);
+            let prop = jabar.matmul_nt(&params.0[i]);
+            js.axpy(1.0, &prop);
+            if i + 1 < l {
+                let act = self.arch.acts[i];
+                let s = &fwd.ss[i];
+                let ja = Mat::from_fn(m, js.cols, |r, c| {
+                    let sv = s.at(r, c);
+                    js.at(r, c) * act.deriv(sv, act.apply(sv))
+                });
+                // append zero column for the constant homogeneous coord
+                let mut jab = Mat::zeros(m, ja.cols + 1);
+                jab.set_block(0, 0, &ja);
+                jabar = jab;
+            } else {
+                jz = js;
+            }
+        }
+        jz
+    }
+
+    /// All pairwise exact-Fisher quadratic forms `dᵢᵀ F dⱼ` over the
+    /// mini-batch `x` (mean over cases), computed with the Appendix-C
+    /// trick: one linearized forward pass per direction, then cheap
+    /// `F_R`-weighted inner products. Returns a `k × k` symmetric matrix.
+    pub fn fvp_quad(&self, params: &Params, x: &Mat, dirs: &[&Params]) -> Mat {
+        let fwd = self.forward(params, x);
+        let m = x.rows as f64;
+        let jzs: Vec<Mat> = dirs.iter().map(|d| self.jvp(params, &fwd, d)).collect();
+        let k = dirs.len();
+        let mut q = Mat::zeros(k, k);
+        for i in 0..k {
+            for j in i..k {
+                let v = self.arch.loss.fr_quad(fwd.z(), &jzs[i], &jzs[j]) / m;
+                q.set(i, j, v);
+                q.set(j, i, v);
+            }
+        }
+        q
+    }
+
+    /// Exact Fisher–vector product `F v` over the mini-batch (mean),
+    /// via `Jᵀ F_R J v`. Used in tests and the exact-Fisher experiments.
+    pub fn fvp(&self, params: &Params, x: &Mat, v: &Params) -> Params {
+        let fwd = self.forward(params, x);
+        let jz = self.jvp(params, &fwd, v);
+        let frjz = self.arch.loss.fr_apply(fwd.z(), &jz);
+        let gs = self.backward(params, &fwd, &frjz);
+        self.grads_from(&fwd, &gs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Act, LossKind};
+
+    fn tiny_arch(loss: LossKind) -> Arch {
+        Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], loss)
+    }
+
+    fn make_targets(loss: LossKind, rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        match loss {
+            LossKind::SoftmaxCe => {
+                let mut y = Mat::zeros(rows, cols);
+                for r in 0..rows {
+                    let k = rng.below(cols);
+                    y.set(r, k, 1.0);
+                }
+                y
+            }
+            LossKind::SigmoidCe => Mat::from_fn(rows, cols, |_, _| rng.bernoulli(0.5)),
+            LossKind::SquaredError => Mat::randn(rows, cols, 1.0, rng),
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        for loss in [LossKind::SigmoidCe, LossKind::SoftmaxCe, LossKind::SquaredError] {
+            let arch = tiny_arch(loss);
+            let net = Net::new(arch.clone());
+            let mut rng = Rng::new(1);
+            let params = arch.glorot_init(&mut rng);
+            let x = Mat::randn(7, 5, 1.0, &mut rng);
+            let y = make_targets(loss, 7, 3, &mut rng);
+            let (_, grad) = net.loss_and_grad(&params, &x, &y);
+            let eps = 1e-6;
+            for li in 0..arch.num_layers() {
+                for idx in [0usize, 3, 7] {
+                    let (r, c) = (idx / params.0[li].cols, idx % params.0[li].cols);
+                    let mut pp = params.clone();
+                    pp.0[li].set(r, c, params.0[li].at(r, c) + eps);
+                    let mut pm = params.clone();
+                    pm.0[li].set(r, c, params.0[li].at(r, c) - eps);
+                    let fd = (net.loss(&pp, &x, &y) - net.loss(&pm, &x, &y)) / (2.0 * eps);
+                    let g = grad.0[li].at(r, c);
+                    assert!((fd - g).abs() < 1e-5 * (1.0 + g.abs()), "{loss:?} l{li} fd={fd} g={g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference() {
+        let arch = tiny_arch(LossKind::SquaredError);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(2);
+        let params = arch.glorot_init(&mut rng);
+        let x = Mat::randn(4, 5, 1.0, &mut rng);
+        let v = Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect());
+        let fwd = net.forward(&params, &x);
+        let jz = net.jvp(&params, &fwd, &v);
+        let eps = 1e-6;
+        let mut pp = params.clone();
+        pp.axpy(eps, &v);
+        let mut pm = params.clone();
+        pm.axpy(-eps, &v);
+        let zp = net.forward(&pp, &x);
+        let zm = net.forward(&pm, &x);
+        let fd = zp.z().sub(zm.z()).scale(1.0 / (2.0 * eps));
+        assert!(fd.sub(&jz).max_abs() < 1e-6, "err={}", fd.sub(&jz).max_abs());
+    }
+
+    #[test]
+    fn fvp_quad_consistent_with_fvp() {
+        for loss in [LossKind::SigmoidCe, LossKind::SoftmaxCe, LossKind::SquaredError] {
+            let arch = tiny_arch(loss);
+            let net = Net::new(arch.clone());
+            let mut rng = Rng::new(3);
+            let params = arch.glorot_init(&mut rng);
+            let x = Mat::randn(6, 5, 1.0, &mut rng);
+            let mk = |rng: &mut Rng| {
+                Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, rng)).collect())
+            };
+            let u = mk(&mut rng);
+            let v = mk(&mut rng);
+            let q = net.fvp_quad(&params, &x, &[&u, &v]);
+            let fu = net.fvp(&params, &x, &u);
+            let fv = net.fvp(&params, &x, &v);
+            assert!((q.at(0, 0) - u.dot(&fu)).abs() < 1e-9, "{loss:?}");
+            assert!((q.at(0, 1) - u.dot(&fv)).abs() < 1e-9, "{loss:?}");
+            assert!((q.at(1, 1) - v.dot(&fv)).abs() < 1e-9, "{loss:?}");
+            // symmetry of F
+            assert!((u.dot(&fv) - v.dot(&fu)).abs() < 1e-9, "{loss:?}");
+        }
+    }
+
+    #[test]
+    fn fisher_is_psd_along_random_directions() {
+        let arch = tiny_arch(LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(4);
+        let params = arch.glorot_init(&mut rng);
+        let x = Mat::randn(5, 5, 1.0, &mut rng);
+        for _ in 0..10 {
+            let v = Params(
+                params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect(),
+            );
+            let q = net.fvp_quad(&params, &x, &[&v]);
+            assert!(q.at(0, 0) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn sampled_backward_has_zero_mean_gs() {
+        // Lemma 4: E[g] = 0 when targets are sampled from the model.
+        let arch = tiny_arch(LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(5);
+        let params = arch.glorot_init(&mut rng);
+        let x = Mat::randn(2, 5, 1.0, &mut rng);
+        let fwd = net.forward(&params, &x);
+        let mut acc = Mat::zeros(2, 3);
+        let n = 20_000;
+        for _ in 0..n {
+            let gs = net.sampled_backward(&params, &fwd, &mut rng);
+            acc.axpy(1.0 / n as f64, &gs[1]);
+        }
+        assert!(acc.max_abs() < 0.02, "mean g = {}", acc.max_abs());
+    }
+}

@@ -1,0 +1,425 @@
+//! The K-FAC optimizer — complete implementation of the paper's
+//! Algorithm 2:
+//!
+//! 1. gradient + factor statistics on the mini-batch (statistics on the
+//!    τ₁ sub-batch, with model-sampled targets);
+//! 2. exponentially-decayed online factor estimates (Section 5);
+//! 3. approximate-inverse refresh every `T₃` iterations (or the first 3)
+//!    with the factored Tikhonov damping of Section 6.3, using either
+//!    the block-diagonal (§4.2) or block-tridiagonal (§4.3) structure;
+//! 4. update proposal `Δ = -F₀⁻¹∇h`, re-scaled on the **exact** Fisher's
+//!    quadratic model (Section 6.4) via the Appendix-C FVP trick on the
+//!    τ₂ sub-batch — with the previous update `δ₀` as a second direction
+//!    when momentum is on (Section 7: joint (α, μ) solve);
+//! 5. greedy γ adaptation every `T₂` iterations (Section 6.6) scored by
+//!    the quadratic model value `M(δ)`;
+//! 6. Levenberg–Marquardt λ adaptation every `T₁` iterations from the
+//!    reduction ratio ρ (Section 6.5).
+
+use crate::backend::ModelBackend;
+use crate::fisher::{BlockDiagInverse, FisherInverse, InverseKind, KfacStats, TridiagInverse};
+use crate::linalg::Mat;
+use crate::nn::{Arch, Params};
+
+/// Hyper-parameters. The defaults are the paper's (Sections 6 and 8).
+#[derive(Clone, Debug)]
+pub struct KfacConfig {
+    /// Which inverse-Fisher structure to use.
+    pub inverse: InverseKind,
+    /// Use the (α, μ) momentum of Section 7.
+    pub momentum: bool,
+    /// Initial λ (paper: 150; "err on the side of too large").
+    pub lambda0: f64,
+    /// ℓ2 regularization coefficient η (paper experiments: 1e-5).
+    pub eta: f64,
+    /// λ-adaptation period T₁ (paper: 5).
+    pub t1: usize,
+    /// γ-adaptation period T₂ (paper: 20; must be a multiple of T₃).
+    pub t2: usize,
+    /// Inverse-refresh period T₃ (paper: 20).
+    pub t3: usize,
+    /// λ decay ω₁ (paper: (19/20)^T₁).
+    pub omega1: f64,
+    /// γ step ω₂ (paper: sqrt(19/20)^T₂).
+    pub omega2: f64,
+    /// Statistics sub-batch fraction τ₁ (paper: 1/8).
+    pub tau1: f64,
+    /// FVP sub-batch fraction τ₂ (paper: 1/4).
+    pub tau2: f64,
+    /// Safety clamps for λ and γ.
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+    pub gamma_min: f64,
+    pub gamma_max: f64,
+}
+
+impl Default for KfacConfig {
+    fn default() -> Self {
+        let t1 = 5usize;
+        let t2 = 20usize;
+        KfacConfig {
+            inverse: InverseKind::BlockTridiag,
+            momentum: true,
+            lambda0: 150.0,
+            eta: 1e-5,
+            t1,
+            t2,
+            t3: 20,
+            omega1: (19.0_f64 / 20.0).powi(t1 as i32),
+            omega2: (19.0_f64 / 20.0).sqrt().powi(t2 as i32),
+            tau1: 1.0 / 8.0,
+            tau2: 1.0 / 4.0,
+            lambda_min: 1e-8,
+            lambda_max: 1e8,
+            gamma_min: 1e-8,
+            gamma_max: 1e6,
+        }
+    }
+}
+
+impl KfacConfig {
+    pub fn block_diag() -> Self {
+        KfacConfig { inverse: InverseKind::BlockDiag, ..Default::default() }
+    }
+
+    pub fn no_momentum(mut self) -> Self {
+        self.momentum = false;
+        self
+    }
+}
+
+/// Per-step diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    /// Regularized objective h(θ) on the mini-batch (before the step).
+    pub loss: f64,
+    /// Quadratic-model value M(δ) (negative ⇒ predicted decrease).
+    pub model_value: f64,
+    /// Chosen re-scaling coefficient α.
+    pub alpha: f64,
+    /// Chosen momentum coefficient μ (0 if momentum off / first step).
+    pub mu: f64,
+    /// Current λ and γ after any adaptation this step.
+    pub lambda: f64,
+    pub gamma: f64,
+    /// Reduction ratio ρ (NaN on iterations where it isn't evaluated).
+    pub rho: f64,
+    /// Update norm ‖δ‖₂.
+    pub delta_norm: f64,
+}
+
+/// K-FAC optimizer state.
+pub struct Kfac {
+    pub cfg: KfacConfig,
+    pub stats: KfacStats,
+    pub lambda: f64,
+    pub gamma: f64,
+    inv: Option<Box<dyn FisherInverse + Send>>,
+    delta_prev: Option<Params>,
+    k: usize,
+}
+
+impl Kfac {
+    pub fn new(arch: &Arch, cfg: KfacConfig) -> Kfac {
+        let lambda = cfg.lambda0;
+        let gamma = (lambda + cfg.eta).sqrt();
+        Kfac { cfg, stats: KfacStats::new(arch), lambda, gamma, inv: None, delta_prev: None, k: 0 }
+    }
+
+    /// Current iteration count.
+    pub fn iteration(&self) -> usize {
+        self.k
+    }
+
+    /// The previous iteration's update δ₀ (the momentum direction).
+    pub fn last_update(&self) -> Option<&Params> {
+        self.delta_prev.as_ref()
+    }
+
+    fn build_inverse(&self, gamma: f64) -> Box<dyn FisherInverse + Send> {
+        match self.cfg.inverse {
+            InverseKind::BlockDiag => Box::new(BlockDiagInverse::build(&self.stats.s, gamma)),
+            InverseKind::BlockTridiag => Box::new(TridiagInverse::build(&self.stats.s, gamma)),
+        }
+    }
+
+    /// Solve for the optimal (α, μ) on the exact-Fisher quadratic model
+    /// (Sections 6.4 / 7) given the damped quadratic-form matrix `q`
+    /// (entries dᵢᵀ(F+(λ+η)I)dⱼ) and linear terms `b` (∇hᵀdᵢ).
+    /// Returns (coeffs, model value M*).
+    fn solve_quadratic(q: &Mat, b: &[f64]) -> (Vec<f64>, f64) {
+        let k = b.len();
+        if k == 1 {
+            let denom = q.at(0, 0);
+            if denom <= 0.0 || !denom.is_finite() {
+                return (vec![0.0], 0.0);
+            }
+            let alpha = -b[0] / denom;
+            let mval = 0.5 * alpha * alpha * denom + alpha * b[0];
+            return (vec![alpha], mval);
+        }
+        debug_assert_eq!(k, 2);
+        let (a11, a12, a22) = (q.at(0, 0), q.at(0, 1), q.at(1, 1));
+        let det = a11 * a22 - a12 * a12;
+        if !(det > 1e-300) || !det.is_finite() {
+            // δ0 degenerate (zero/parallel) — fall back to 1-D.
+            let (c, m) = Self::solve_quadratic(&Mat::from_vec(1, 1, vec![a11]), &b[..1]);
+            return (vec![c[0], 0.0], m);
+        }
+        let alpha = -(a22 * b[0] - a12 * b[1]) / det;
+        let mu = -(-a12 * b[0] + a11 * b[1]) / det;
+        // M* = ½ cᵀQc + bᵀc
+        let quad = 0.5 * (a11 * alpha * alpha + 2.0 * a12 * alpha * mu + a22 * mu * mu);
+        let mval = quad + b[0] * alpha + b[1] * mu;
+        (vec![alpha, mu], mval)
+    }
+
+    /// One K-FAC iteration on mini-batch `(x, y)`. Mutates `params`.
+    pub fn step(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        params: &mut Params,
+        x: &Mat,
+        y: &Mat,
+    ) -> StepInfo {
+        self.k += 1;
+        let k = self.k;
+        let cfg = self.cfg.clone();
+        let m = x.rows;
+        let stats_rows = ((cfg.tau1 * m as f64).ceil() as usize).clamp(1, m);
+        let fvp_rows = ((cfg.tau2 * m as f64).ceil() as usize).clamp(1, m);
+
+        // (1) gradient + statistics
+        let (loss_raw, mut grad, raw_stats) =
+            backend.grad_and_stats(params, x, y, stats_rows, k as u64);
+        let h0 = loss_raw + 0.5 * cfg.eta * params.norm_sq();
+        grad.axpy(cfg.eta, params);
+
+        // (2) online factor estimates
+        self.stats.update(&raw_stats);
+
+        // (3) candidate γ set (Section 6.6)
+        let adjust_gamma = cfg.t2 > 0 && k % cfg.t2 == 0;
+        let refresh_inv = self.inv.is_none() || k <= 3 || (cfg.t3 > 0 && k % cfg.t3 == 0);
+        let gammas: Vec<f64> = if adjust_gamma {
+            vec![
+                self.gamma,
+                (self.gamma * cfg.omega2).clamp(cfg.gamma_min, cfg.gamma_max),
+                (self.gamma / cfg.omega2).clamp(cfg.gamma_min, cfg.gamma_max),
+            ]
+        } else {
+            vec![self.gamma]
+        };
+
+        // (4) per-candidate proposal + rescale; pick lowest M(δ)
+        struct Cand {
+            gamma: f64,
+            inv: Option<Box<dyn FisherInverse + Send>>,
+            delta: Params,
+            coeffs: Vec<f64>,
+            mval: f64,
+        }
+        let mut best: Option<Cand> = None;
+        for &g in &gammas {
+            let inv_box: Option<Box<dyn FisherInverse + Send>> = if refresh_inv || adjust_gamma {
+                Some(self.build_inverse(g))
+            } else {
+                None
+            };
+            let inv_ref: &dyn FisherInverse = match &inv_box {
+                Some(b) => b.as_ref(),
+                None => self.inv.as_ref().expect("inverse cache").as_ref(),
+            };
+            let delta = inv_ref.apply(&grad).scale(-1.0);
+
+            // quadratic model on the exact Fisher (τ₂ subset)
+            let use_mom = cfg.momentum && self.delta_prev.is_some();
+            let mut dirs: Vec<&Params> = vec![&delta];
+            if use_mom {
+                dirs.push(self.delta_prev.as_ref().unwrap());
+            }
+            let fq = backend.fvp_quad(params, x, fvp_rows, &dirs);
+            let damp = self.lambda + cfg.eta;
+            let kdim = dirs.len();
+            let mut q = Mat::zeros(kdim, kdim);
+            let mut b = vec![0.0; kdim];
+            for i in 0..kdim {
+                b[i] = grad.dot(dirs[i]);
+                for j in 0..kdim {
+                    q.set(i, j, fq.at(i, j) + damp * dirs[i].dot(dirs[j]));
+                }
+            }
+            let (coeffs, mval) = Self::solve_quadratic(&q, &b);
+            if best.as_ref().map_or(true, |c| mval < c.mval) {
+                best = Some(Cand { gamma: g, inv: inv_box, delta, coeffs, mval });
+            }
+        }
+        let cand = best.expect("at least one gamma candidate");
+        self.gamma = cand.gamma;
+        if let Some(inv) = cand.inv {
+            self.inv = Some(inv);
+        }
+
+        // assemble δ = αΔ (+ μ δ₀)
+        let alpha = cand.coeffs[0];
+        let mu = cand.coeffs.get(1).copied().unwrap_or(0.0);
+        let mut delta = cand.delta.scale(alpha);
+        if mu != 0.0 {
+            delta.axpy(mu, self.delta_prev.as_ref().unwrap());
+        }
+
+        // (6) ρ and λ (Section 6.5), every T₁ iterations
+        let mut rho = f64::NAN;
+        if cfg.t1 > 0 && k % cfg.t1 == 0 && cand.mval < 0.0 {
+            let mut theta_new = params.clone();
+            theta_new.axpy(1.0, &delta);
+            let h1 = backend.loss(&theta_new, x, y) + 0.5 * cfg.eta * theta_new.norm_sq();
+            rho = (h1 - h0) / cand.mval;
+            if rho > 0.75 {
+                self.lambda *= cfg.omega1;
+            } else if rho < 0.25 {
+                self.lambda /= cfg.omega1;
+            }
+            self.lambda = self.lambda.clamp(cfg.lambda_min, cfg.lambda_max);
+        }
+
+        // (7) apply update
+        params.axpy(1.0, &delta);
+        let delta_norm = delta.norm_sq().sqrt();
+        self.delta_prev = Some(delta);
+
+        StepInfo {
+            loss: h0,
+            model_value: cand.mval,
+            alpha,
+            mu,
+            lambda: self.lambda,
+            gamma: self.gamma,
+            rho,
+            delta_norm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::RustBackend;
+    use crate::nn::{Act, LossKind};
+    use crate::rng::Rng;
+
+    fn toy_problem(seed: u64) -> (Arch, Params, Mat, Mat) {
+        let arch = Arch::new(
+            vec![8, 6, 4],
+            vec![Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let mut rng = Rng::new(seed);
+        let params = arch.sparse_init(&mut rng);
+        let x = Mat::randn(64, 8, 1.0, &mut rng);
+        let mut y = Mat::zeros(64, 4);
+        for r in 0..64 {
+            // targets correlated with input so there is signal to learn
+            let c = if x.at(r, 0) > 0.0 { 0 } else { 1 };
+            y.set(r, c + if x.at(r, 1) > 0.0 { 0 } else { 2 }, 1.0);
+        }
+        (arch, params, x, y)
+    }
+
+    #[test]
+    fn solve_quadratic_minimizes() {
+        let q = Mat::from_vec(2, 2, vec![2.0, 0.3, 0.3, 1.0]);
+        let b = vec![-1.0, 0.5];
+        let (c, m) = Kfac::solve_quadratic(&q, &b);
+        // gradient of ½cᵀQc + bᵀc must vanish at c
+        let g0 = q.at(0, 0) * c[0] + q.at(0, 1) * c[1] + b[0];
+        let g1 = q.at(1, 0) * c[0] + q.at(1, 1) * c[1] + b[1];
+        assert!(g0.abs() < 1e-12 && g1.abs() < 1e-12);
+        assert!(m < 0.0);
+        // and M* = ½ bᵀ c
+        let m2 = 0.5 * (b[0] * c[0] + b[1] * c[1]);
+        assert!((m - m2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_decreases_over_training() {
+        for kind in [InverseKind::BlockDiag, InverseKind::BlockTridiag] {
+            let (arch, mut params, x, y) = toy_problem(1);
+            let mut backend = RustBackend::new(arch.clone());
+            let cfg = KfacConfig { inverse: kind, lambda0: 10.0, ..Default::default() };
+            let mut opt = Kfac::new(&arch, cfg);
+            let first = {
+                use crate::backend::ModelBackend;
+                backend.loss(&params, &x, &y)
+            };
+            let mut last = f64::NAN;
+            for _ in 0..30 {
+                let info = opt.step(&mut backend, &mut params, &x, &y);
+                last = info.loss;
+                assert!(info.loss.is_finite());
+                assert!(info.model_value <= 1e-12, "model value must be non-positive");
+            }
+            assert!(last < first * 0.7, "{kind:?}: first={first} last={last}");
+        }
+    }
+
+    #[test]
+    fn momentum_reuses_previous_direction() {
+        let (arch, mut params, x, y) = toy_problem(2);
+        let mut backend = RustBackend::new(arch.clone());
+        let mut opt = Kfac::new(&arch, KfacConfig { lambda0: 5.0, ..Default::default() });
+        let i1 = opt.step(&mut backend, &mut params, &x, &y);
+        assert_eq!(i1.mu, 0.0, "no momentum available on step 1");
+        let i2 = opt.step(&mut backend, &mut params, &x, &y);
+        // μ can be any finite value, but must have been solved (non-NaN).
+        assert!(i2.mu.is_finite());
+    }
+
+    #[test]
+    fn lambda_adapts_with_rho() {
+        let (arch, mut params, x, y) = toy_problem(3);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { lambda0: 1000.0, t1: 1, ..Default::default() };
+        let om1 = cfg.omega1;
+        let mut opt = Kfac::new(&arch, cfg);
+        // With a huge λ the update is tiny and the quadratic model is
+        // accurate, so ρ ≈ 1 > 3/4 and λ must decay.
+        let info = opt.step(&mut backend, &mut params, &x, &y);
+        assert!(!info.rho.is_nan());
+        assert!(info.lambda <= 1000.0 * om1 + 1e-9, "lambda={}", info.lambda);
+    }
+
+    #[test]
+    fn gamma_adjusted_on_t2_boundary() {
+        let (arch, mut params, x, y) = toy_problem(4);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { t2: 2, t3: 2, lambda0: 10.0, ..Default::default() };
+        let mut opt = Kfac::new(&arch, cfg);
+        let g0 = opt.gamma;
+        opt.step(&mut backend, &mut params, &x, &y);
+        let i2 = opt.step(&mut backend, &mut params, &x, &y);
+        // on the T2 boundary gamma is re-selected from {γ, ω2γ, γ/ω2}
+        let om2 = opt.cfg.omega2;
+        let choices = [g0, g0 * om2, g0 / om2];
+        assert!(
+            choices.iter().any(|c| (c - i2.gamma).abs() < 1e-12),
+            "gamma {} not in {:?}",
+            i2.gamma,
+            choices
+        );
+    }
+
+    #[test]
+    fn rescaling_never_worsens_model_value() {
+        // M(αΔ) at optimal α is ≤ M(0) = 0 — the re-scaling of §6.4
+        // guarantees a non-positive model value even with bad γ.
+        let (arch, mut params, x, y) = toy_problem(5);
+        let mut backend = RustBackend::new(arch.clone());
+        let mut opt =
+            Kfac::new(&arch, KfacConfig { lambda0: 0.01, ..KfacConfig::block_diag() });
+        for _ in 0..5 {
+            let info = opt.step(&mut backend, &mut params, &x, &y);
+            assert!(info.model_value <= 1e-12);
+        }
+    }
+}

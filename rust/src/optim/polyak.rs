@@ -1,0 +1,49 @@
+//! Exponentially-decayed iterate averaging (paper Section 13): the
+//! "averaged" estimate is `ξ·avg + (1−ξ)·θ_k` with ξ = 0.99, and the
+//! reported error is the min over {current, averaged}.
+
+use crate::nn::Params;
+
+pub struct PolyakAverager {
+    pub xi: f64,
+    avg: Option<Params>,
+}
+
+impl PolyakAverager {
+    pub fn new(xi: f64) -> PolyakAverager {
+        PolyakAverager { xi, avg: None }
+    }
+
+    pub fn update(&mut self, params: &Params) {
+        match &mut self.avg {
+            None => self.avg = Some(params.clone()),
+            Some(a) => {
+                for (am, pm) in a.0.iter_mut().zip(params.0.iter()) {
+                    am.ema(self.xi, 1.0 - self.xi, pm);
+                }
+            }
+        }
+    }
+
+    pub fn get(&self) -> Option<&Params> {
+        self.avg.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn averages_converge_to_constant_input() {
+        let p = Params(vec![Mat::filled(2, 2, 3.0)]);
+        let mut avg = PolyakAverager::new(0.5);
+        avg.update(&Params(vec![Mat::filled(2, 2, 1.0)]));
+        for _ in 0..30 {
+            avg.update(&p);
+        }
+        let a = avg.get().unwrap();
+        assert!((a.0[0].at(0, 0) - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,64 @@
+//! Mini-batch-size schedules (paper Section 13).
+//!
+//! The headline experiments drive K-FAC with an exponentially increasing
+//! schedule `m_k = min(m₁ exp((k−1)/b), |S|)` with `b` chosen so the
+//! schedule saturates at a target iteration — the paper's response to
+//! the observation (Figure 9) that K-FAC's per-iteration progress is
+//! superlinear in `m`.
+
+/// A mini-batch size schedule.
+#[derive(Clone, Debug)]
+pub enum BatchSchedule {
+    /// Constant m.
+    Fixed(usize),
+    /// `m_k = min(m₁ e^{(k−1)/b}, cap)`.
+    Exponential { m1: usize, b: f64, cap: usize },
+}
+
+impl BatchSchedule {
+    /// Paper's construction: exponential from `m₁` reaching `cap` at
+    /// iteration `k_final` (they used m₁=1000, k_final=500, cap=|S|).
+    pub fn exponential_reaching(m1: usize, cap: usize, k_final: usize) -> BatchSchedule {
+        assert!(cap >= m1 && k_final >= 2);
+        let b = (k_final as f64 - 1.0) / (cap as f64 / m1 as f64).ln().max(1e-12);
+        BatchSchedule::Exponential { m1, b, cap }
+    }
+
+    /// Batch size at (1-based) iteration `k`.
+    pub fn size(&self, k: usize) -> usize {
+        match self {
+            BatchSchedule::Fixed(m) => *m,
+            BatchSchedule::Exponential { m1, b, cap } => {
+                let m = (*m1 as f64) * (((k as f64) - 1.0) / b).exp();
+                (m.round() as usize).min(*cap).max(*m1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_fixed() {
+        let s = BatchSchedule::Fixed(256);
+        assert_eq!(s.size(1), 256);
+        assert_eq!(s.size(1000), 256);
+    }
+
+    #[test]
+    fn exponential_hits_cap_at_k_final() {
+        let s = BatchSchedule::exponential_reaching(1000, 6000, 500);
+        assert_eq!(s.size(1), 1000);
+        assert_eq!(s.size(500), 6000);
+        assert_eq!(s.size(5000), 6000);
+        // monotone
+        let mut prev = 0;
+        for k in 1..600 {
+            let m = s.size(k);
+            assert!(m >= prev);
+            prev = m;
+        }
+    }
+}

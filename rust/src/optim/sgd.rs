@@ -1,0 +1,114 @@
+//! Baseline: SGD with Nesterov's Accelerated Gradient, tuned as in
+//! Sutskever et al. (2013) — the baseline the paper compares against
+//! (Section 13).
+//!
+//! Update: `v ← μ_t v − ε ∇h(θ + μ_t v)`, `θ ← θ + v`, with the
+//! momentum schedule `μ_t = min(1 − 2^{−1−log₂(⌊t/250⌋+1)}, μ_max)`.
+
+use crate::backend::ModelBackend;
+use crate::nn::Params;
+
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    /// Learning rate ε.
+    pub lr: f64,
+    /// Momentum cap μ_max (Sutskever et al. grid: {0.9, 0.99, 0.995, 0.999}).
+    pub mu_max: f64,
+    /// Use the increasing μ schedule (else constant μ_max).
+    pub mu_schedule: bool,
+    /// ℓ2 coefficient η.
+    pub eta: f64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.01, mu_max: 0.99, mu_schedule: true, eta: 1e-5 }
+    }
+}
+
+/// SGD + NAG state.
+pub struct Sgd {
+    pub cfg: SgdConfig,
+    v: Option<Params>,
+    t: usize,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Sgd {
+        Sgd { cfg, v: None, t: 0 }
+    }
+
+    /// Momentum coefficient at step `t` (Sutskever et al. eqn. 2.18-style
+    /// schedule).
+    pub fn mu_at(&self, t: usize) -> f64 {
+        if !self.cfg.mu_schedule {
+            return self.cfg.mu_max;
+        }
+        let base = (t / 250 + 1) as f64;
+        let mu = 1.0 - 2.0_f64.powf(-1.0 - base.log2());
+        mu.min(self.cfg.mu_max)
+    }
+
+    /// One NAG step; returns the (regularized) loss at the lookahead point.
+    pub fn step(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        params: &mut Params,
+        x: &crate::linalg::Mat,
+        y: &crate::linalg::Mat,
+    ) -> f64 {
+        self.t += 1;
+        let mu = self.mu_at(self.t);
+        let v = self.v.get_or_insert_with(|| params.zeros_like());
+        // lookahead point θ + μv
+        let mut look = params.clone();
+        look.axpy(mu, v);
+        let (loss_raw, mut grad) = backend.grad(&look, x, y);
+        grad.axpy(self.cfg.eta, &look);
+        let h = loss_raw + 0.5 * self.cfg.eta * look.norm_sq();
+        // v ← μv − ε g ; θ ← θ + v
+        let mut vnew = v.scale(mu);
+        vnew.axpy(-self.cfg.lr, &grad);
+        params.axpy(1.0, &vnew);
+        *v = vnew;
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{ModelBackend, RustBackend};
+    use crate::linalg::Mat;
+    use crate::nn::{Act, Arch, LossKind};
+    use crate::rng::Rng;
+
+    #[test]
+    fn mu_schedule_increases_to_cap() {
+        let sgd = Sgd::new(SgdConfig { mu_max: 0.99, ..Default::default() });
+        assert!(sgd.mu_at(1) <= sgd.mu_at(251));
+        assert!(sgd.mu_at(251) <= sgd.mu_at(2501));
+        assert!(sgd.mu_at(1_000_000) <= 0.99 + 1e-12);
+        assert!((sgd.mu_at(1) - 0.5).abs() < 1e-12, "t<250 gives μ=1-2^-1=0.5");
+    }
+
+    #[test]
+    fn sgd_decreases_loss_on_toy_problem() {
+        let arch = Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+        let mut rng = Rng::new(1);
+        let mut params = arch.sparse_init(&mut rng);
+        let x = Mat::randn(64, 5, 1.0, &mut rng);
+        let mut y = Mat::zeros(64, 3);
+        for r in 0..64 {
+            y.set(r, if x.at(r, 0) > 0.0 { 0 } else { 2 }, 1.0);
+        }
+        let mut be = RustBackend::new(arch.clone());
+        let first = be.loss(&params, &x, &y);
+        let mut sgd = Sgd::new(SgdConfig { lr: 0.1, ..Default::default() });
+        for _ in 0..200 {
+            sgd.step(&mut be, &mut params, &x, &y);
+        }
+        let last = be.loss(&params, &x, &y);
+        assert!(last < first * 0.5, "first={first} last={last}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal scoped-thread parallelism (a tiny rayon substitute).
+//!
+//! The K-FAC hot paths that benefit from threads on the Rust side are the
+//! dense matmuls in `linalg` (layer-sized GEMMs, covariance updates,
+//! preconditioner application). We split the output row range into one
+//! contiguous chunk per worker and run them under `std::thread::scope`,
+//! so no `'static` bounds or channels are needed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cores − 1, at least 1), overridable
+/// with the `KFAC_THREADS` environment variable.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("KFAC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get().saturating_sub(1).max(1))
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `body(lo, hi)` over a partition of `0..n` into contiguous chunks,
+/// one per worker. `min_chunk` bounds splitting overhead: if
+/// `n <= min_chunk` (or one worker), runs inline on the caller thread.
+pub fn par_ranges<F>(n: usize, min_chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if workers == 1 || n == 0 {
+        body(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Parallel map over indices `0..n`, collecting results in order.
+pub fn par_map<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        par_ranges(n, min_chunk, |lo, hi| {
+            let p = out_ptr; // capture by copy
+            for i in lo..hi {
+                // SAFETY: ranges from par_ranges are disjoint, so each
+                // element is written by exactly one worker.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Parallel map for non-`Default` payloads (results are `Send` only).
+pub fn par_map_send<T: Send>(
+    n: usize,
+    min_chunk: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let ptr = SendPtr(out.as_mut_ptr());
+        par_ranges(n, min_chunk, |lo, hi| {
+            let p = ptr;
+            for i in lo..hi {
+                // SAFETY: disjoint ranges; each slot written exactly once.
+                unsafe { *p.0.add(i) = Some(f(i)) };
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("par_map_send: slot not filled")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_ranges_covers_everything_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_ranges(n, 16, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(1000, 8, |i| (i * i) as u64);
+        let want: Vec<u64> = (0..1000).map(|i| (i * i) as u64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn small_n_runs_inline() {
+        let got = par_map(3, 1000, |i| i);
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Artifact manifest: describes the AOT-lowered programs per model
+//! architecture (shapes, loss, chunk size, HLO file paths).
+
+use crate::nn::{Act, Arch, LossKind};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One architecture entry in the manifest.
+#[derive(Clone, Debug)]
+pub struct ArchManifest {
+    pub name: String,
+    pub widths: Vec<usize>,
+    pub acts: Vec<Act>,
+    pub loss: LossKind,
+    /// Rows per program execution; callers chunk mini-batches into
+    /// multiples of this (masked, so partial chunks are exact).
+    pub chunk: usize,
+    /// program name -> HLO text path (relative to the artifacts dir).
+    pub programs: BTreeMap<String, PathBuf>,
+}
+
+impl ArchManifest {
+    /// The `Arch` this entry describes.
+    pub fn arch(&self) -> Arch {
+        Arch::new(self.widths.clone(), self.acts.clone(), self.loss)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub archs: Vec<ArchManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut archs = Vec::new();
+        for a in j.get("archs").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("arch missing name"))?
+                .to_string();
+            let widths =
+                a.get("widths").and_then(Json::usize_vec).ok_or_else(|| anyhow!("{name}: widths"))?;
+            let act_names =
+                a.get("acts").and_then(Json::str_vec).ok_or_else(|| anyhow!("{name}: acts"))?;
+            let acts: Vec<Act> = act_names
+                .iter()
+                .map(|s| Act::from_name(s).ok_or_else(|| anyhow!("{name}: bad act {s}")))
+                .collect::<Result<_>>()?;
+            let loss = a
+                .get("loss")
+                .and_then(Json::as_str)
+                .and_then(LossKind::from_name)
+                .ok_or_else(|| anyhow!("{name}: loss"))?;
+            let chunk =
+                a.get("chunk").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: chunk"))?;
+            let mut programs = BTreeMap::new();
+            if let Some(obj) = a.get("programs").and_then(Json::as_obj) {
+                for (k, v) in obj {
+                    let rel = v.as_str().ok_or_else(|| anyhow!("{name}: program path"))?;
+                    programs.insert(k.clone(), PathBuf::from(rel));
+                }
+            }
+            archs.push(ArchManifest { name, widths, acts, loss, chunk, programs });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), archs })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArchManifest> {
+        self.archs
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("arch '{name}' not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.archs.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    /// Absolute path of a program's HLO file.
+    pub fn program_path(&self, arch: &ArchManifest, program: &str) -> Result<PathBuf> {
+        let rel = arch
+            .programs
+            .get(program)
+            .ok_or_else(|| anyhow!("arch '{}' missing program '{program}'", arch.name))?;
+        Ok(self.dir.join(rel))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("kfac_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "archs": [
+                {"name": "tiny", "widths": [4, 3, 4],
+                 "acts": ["tanh", "identity"], "loss": "sigmoid_ce",
+                 "chunk": 8,
+                 "programs": {"grad": "tiny/grad.hlo.txt"}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find("tiny").unwrap();
+        assert_eq!(a.chunk, 8);
+        let arch = a.arch();
+        assert_eq!(arch.num_layers(), 2);
+        assert_eq!(
+            m.program_path(a, "grad").unwrap(),
+            dir.join("tiny/grad.hlo.txt")
+        );
+        assert!(m.find("nope").is_err());
+        assert!(m.program_path(a, "nope").is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Compiled-program wrapper + `Mat` ⇄ `Literal` conversion.
+
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// An AOT program compiled onto the PJRT client. All our programs are
+/// lowered with `return_tuple=True`, so `run` unpacks one tuple.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Program {
+    /// Load HLO text, parse, compile.
+    pub fn load(client: &xla::PjRtClient, path: &Path, name: &str) -> Result<Program> {
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Program { exe, name: name.to_string() })
+    }
+
+    /// Execute with the given inputs; returns the unpacked output tuple.
+    /// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`)
+    /// so callers can reuse cached parameter literals across chunks
+    /// without copying.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let outs = lit.to_tuple().with_context(|| format!("untupling {}", self.name))?;
+        Ok(outs)
+    }
+}
+
+/// Row-major f64 `Mat` → f32 `Literal` of shape `[rows, cols]`.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.data.iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&data);
+    Ok(lit.reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// f32 `Literal` (any shape with `rows*cols` elements) → `Mat`.
+pub fn literal_to_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v: Vec<f32> = l.to_vec()?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size {} != {rows}x{cols}", v.len());
+    Ok(Mat::from_vec(rows, cols, v.into_iter().map(|x| x as f64).collect()))
+}
+
+/// Scalar f32 literal → f64.
+pub fn literal_scalar_f64(l: &xla::Literal) -> Result<f64> {
+    Ok(l.get_first_element::<f32>()? as f64)
+}
+
+/// f64 vector → f32 literal of shape `[n]`.
+pub fn vec_to_literal(v: &[f64]) -> xla::Literal {
+    let data: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&data)
+}
+
+/// i32 scalar literal (e.g. RNG seeds).
+pub fn i32_literal(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

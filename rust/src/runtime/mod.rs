@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids and round-trips
+//! cleanly. Programs are compiled once at startup and cached; the
+//! training loop then only does literal transfer + execute — Python is
+//! never on the request path.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArchManifest, Manifest};
+pub use exec::{literal_scalar_f64, literal_to_mat, mat_to_literal, Program};

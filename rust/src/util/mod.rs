@@ -1,0 +1,87 @@
+//! Small utilities: a minimal JSON parser (for the artifact manifest),
+//! CSV output helpers, and simple statistics.
+
+pub mod json;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of named columns as CSV, creating parent directories.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read back a CSV written by [`write_csv`]: (header, rows).
+pub fn read_csv(path: &Path) -> std::io::Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header: Vec<String> =
+        lines.next().unwrap_or("").split(',').map(str::to_string).collect();
+    let rows = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.split(',').map(|c| c.parse::<f64>().unwrap_or(f64::NAN)).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_writes() {
+        let p = std::env::temp_dir().join("kfac_test_csv/x.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("a,b\n1,2\n3,4.5\n"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Theorem 1 / Corollary 2 (paper Section 10): K-FAC updates are
+//! invariant to invertible linear reparameterizations of the network of
+//! the form `s† = W† ā†`, `ā† = Ω φ̄(Φ s†)`.
+//!
+//! Our plain feed-forward substrate can represent the sub-family of
+//! these transformations with arbitrary homogeneous-affine input
+//! transform `T₀ = Ω₀` and arbitrary pre-activation mixing `Φ_i` at the
+//! hidden layers of a **linear** network (where the induced activity
+//! transform is `T_i = blockdiag(Φ_i⁻¹, 1)`), keeping `Φ_ℓ = I` so both
+//! parameterizations compute the same output. The reparameterization is
+//! `W_i = Φ_i W†_i T_{i-1}`, and Theorem 1 predicts the K-FAC updates
+//! correspond through exactly that linear map — for both the
+//! block-diagonal and block-tridiagonal inverses, with exact factor
+//! statistics and no damping.
+
+use kfac::fisher::exact::ExactBlocks;
+use kfac::fisher::stats::RawStats;
+use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
+use kfac::linalg::Mat;
+use kfac::nn::net::Net;
+use kfac::nn::{Act, Arch, LossKind, Params};
+use kfac::rng::Rng;
+
+/// Invertible homogeneous-affine transform (last row = e_last, so the
+/// homogeneous coordinate is preserved).
+fn affine_h(d: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::randn(d + 1, d + 1, 0.5, rng).add(&Mat::eye(d + 1));
+    for c in 0..=d {
+        m.set(d, c, if c == d { 1.0 } else { 0.0 });
+    }
+    m
+}
+
+/// Invertible pre-activation mixing.
+fn mixing(d: usize, rng: &mut Rng) -> Mat {
+    Mat::randn(d, d, 0.4, rng).add(&Mat::eye(d).scale(1.5))
+}
+
+/// blockdiag(Φ⁻¹, 1): the activity transform a linear layer induces.
+fn induced_t(phi_inv: &Mat) -> Mat {
+    let d = phi_inv.rows;
+    let mut t = Mat::eye(d + 1);
+    t.set_block(0, 0, phi_inv);
+    t
+}
+
+struct Setup {
+    arch: Arch,
+    net: Net,
+    params: Params,
+    x: Mat,
+    y: Mat,
+}
+
+fn linear_setup(seed: u64) -> Setup {
+    // Output width ≥ hidden widths so the exact G_{i,i} = J_iᵀ F_R J_i
+    // factors are full-rank (the theorem assumes invertible factors; a
+    // rank-deficient G would trigger the jitter fallback, which is not
+    // transformation-consistent).
+    let arch = Arch::new(
+        vec![5, 3, 3],
+        vec![Act::Identity, Act::Identity],
+        LossKind::SquaredError,
+    );
+    let mut rng = Rng::new(seed);
+    let params = arch.glorot_init(&mut rng);
+    let x = Mat::randn(60, 5, 1.0, &mut rng);
+    let y = Mat::randn(60, 3, 1.0, &mut rng);
+    Setup { net: Net::new(arch.clone()), arch, params, x, y }
+}
+
+/// Exact factor statistics (expectations over the model distribution).
+fn exact_stats(net: &Net, params: &Params, x: &Mat) -> RawStats {
+    let l = net.arch.num_layers();
+    let eb = ExactBlocks::compute(net, params, x, 0, l);
+    let mut st = RawStats::zeros(&net.arch);
+    for i in 0..l {
+        st.aa[i] = eb.aa[i][i].clone();
+        st.gg[i] = eb.gg[i][i].clone();
+    }
+    for i in 0..l - 1 {
+        st.aa_off[i] = eb.aa[i][i + 1].clone();
+        st.gg_off[i] = eb.gg[i][i + 1].clone();
+    }
+    st
+}
+
+fn check_invariance(tridiag: bool) {
+    let s = linear_setup(7);
+    let l = s.arch.num_layers();
+    let mut rng = Rng::new(99);
+
+    // Φ_i per layer (Φ_ℓ = I), T₀ = arbitrary affine input transform,
+    // T_i = blockdiag(Φ_i⁻¹, 1) for hidden layers.
+    let mut phis: Vec<Mat> = (0..l).map(|i| mixing(s.arch.widths[i + 1], &mut rng)).collect();
+    phis[l - 1] = Mat::eye(s.arch.widths[l]);
+    let t0 = affine_h(s.arch.widths[0], &mut rng);
+    let mut ts: Vec<Mat> = vec![t0];
+    for i in 0..l - 1 {
+        ts.push(induced_t(&phis[i].inverse()));
+    }
+
+    // W†_i = Φ_i⁻¹ W_i T_{i-1}⁻¹ ; transformed inputs ā₀† = T₀ ā₀.
+    let params_t = Params(
+        (0..l)
+            .map(|i| phis[i].inverse().matmul(&s.params.0[i]).matmul(&ts[i].inverse()))
+            .collect(),
+    );
+    let xt = s.x.append_ones_col().matmul_nt(&ts[0]).drop_last_col();
+
+    // sanity: identical outputs (Φ_ℓ = I)
+    let f_orig = s.net.forward(&s.params, &s.x);
+    let f_t = s.net.forward(&params_t, &xt);
+    assert!(
+        f_orig.z().sub(f_t.z()).max_abs() < 1e-8,
+        "transformed net output mismatch {}",
+        f_orig.z().sub(f_t.z()).max_abs()
+    );
+
+    // gradients & exact stats in both parameterizations
+    let (_, grad) = s.net.loss_and_grad(&s.params, &s.x, &s.y);
+    let (_, grad_t) = s.net.loss_and_grad(&params_t, &xt, &s.y);
+    let st = exact_stats(&s.net, &s.params, &s.x);
+    let st_t = exact_stats(&s.net, &params_t, &xt);
+
+    // un-damped K-FAC updates (γ = 0) in both parameterizations
+    let (delta, delta_t): (Params, Params) = if tridiag {
+        (
+            TridiagInverse::build(&st, 0.0).apply(&grad),
+            TridiagInverse::build(&st_t, 0.0).apply(&grad_t),
+        )
+    } else {
+        (
+            BlockDiagInverse::build(&st, 0.0).apply(&grad),
+            BlockDiagInverse::build(&st_t, 0.0).apply(&grad_t),
+        )
+    };
+
+    // ζ: W_i = Φ_i W†_i T_{i-1} is linear, so updates must satisfy
+    // δ_i = Φ_i δ†_i T_{i-1}.
+    //
+    // Tolerances: the block-diagonal inverse is exactly invariant (up to
+    // f64 roundoff). The block-tridiagonal Σ_{i|i+1} is *singular* at
+    // γ = 0 for every network — the homogeneous coordinate of ā_{i-1}
+    // is perfectly predictable from ā_i, giving the Ā-Schur complement
+    // a zero eigenvalue — so its floored pseudo-inverse is only
+    // approximately transformation-consistent (the paper never inverts
+    // the undamped F̂ either; cf. Figure 3's caption). We therefore
+    // check the tridiagonal case comparatively: orders of magnitude
+    // closer to invariant than the (non-invariant) plain gradient.
+    let rel_err = |a: &Params, b_t: &Params| -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..l {
+            let mapped = phis[i].matmul(&b_t.0[i]).matmul(&ts[i]);
+            let scale = a.0[i].max_abs().max(1e-10);
+            worst = worst.max(mapped.sub(&a.0[i]).max_abs() / scale);
+        }
+        worst
+    };
+    let kfac_err = rel_err(&delta, &delta_t);
+    let gd_err = rel_err(&grad, &grad_t);
+    assert!(gd_err > 0.1, "test vacuous: plain gradient was invariant (err {gd_err})");
+    if tridiag {
+        assert!(
+            kfac_err < 0.05 && kfac_err < gd_err / 20.0,
+            "tridiag invariance violated: kfac err {kfac_err}, gd err {gd_err}"
+        );
+    } else {
+        assert!(kfac_err < 1e-6, "blockdiag invariance violated: rel err {kfac_err}");
+    }
+}
+
+#[test]
+fn blockdiag_update_is_invariant_under_network_transformations() {
+    check_invariance(false);
+}
+
+#[test]
+fn blocktridiag_update_is_invariant_under_network_transformations() {
+    check_invariance(true);
+}
+
+/// Corollary 3 sanity: with identity factor statistics the K-FAC update
+/// *is* the gradient — i.e. K-FAC equals SGD in the whitened/centered
+/// parameterization.
+#[test]
+fn kfac_is_sgd_in_whitened_coordinates() {
+    let s = linear_setup(3);
+    let mut st = RawStats::zeros(&s.arch);
+    for i in 0..s.arch.num_layers() {
+        st.aa[i] = Mat::eye(s.arch.widths[i] + 1);
+        st.gg[i] = Mat::eye(s.arch.widths[i + 1]);
+    }
+    let (_, grad) = s.net.loss_and_grad(&s.params, &s.x, &s.y);
+    let delta = BlockDiagInverse::build(&st, 0.0).apply(&grad);
+    for i in 0..grad.0.len() {
+        assert!(delta.0[i].sub(&grad.0[i]).max_abs() < 1e-12);
+    }
+}

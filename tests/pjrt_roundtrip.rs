@@ -1,0 +1,198 @@
+//! Cross-layer integration: the AOT JAX/Pallas artifacts executed via
+//! PJRT must agree numerically with the pure-Rust reference backend.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent).
+
+use kfac::backend::{ModelBackend, PjrtBackend, RustBackend};
+use kfac::linalg::Mat;
+use kfac::nn::Params;
+use kfac::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn setup(name: &str) -> Option<(PjrtBackend, RustBackend, Params, Mat, Mat)> {
+    let dir = artifacts_dir()?;
+    let pjrt = match PjrtBackend::new(&dir, name) {
+        Ok(b) => b,
+        Err(e) => panic!("failed to load artifacts for {name}: {e:#}"),
+    };
+    let arch = pjrt.arch().clone();
+    let rust = RustBackend::new(arch.clone());
+    let mut rng = Rng::new(42);
+    let params = arch.glorot_init(&mut rng);
+    let m = 20; // deliberately not a multiple of the chunk size
+    let x = Mat::randn(m, arch.widths[0], 1.0, &mut rng);
+    let d_out = *arch.widths.last().unwrap();
+    let y = match arch.loss {
+        kfac::nn::LossKind::SoftmaxCe => {
+            let mut y = Mat::zeros(m, d_out);
+            for r in 0..m {
+                let c = rng.below(d_out);
+                y.set(r, c, 1.0);
+            }
+            y
+        }
+        kfac::nn::LossKind::SigmoidCe => {
+            Mat::from_fn(m, d_out, |_, _| rng.bernoulli(0.5))
+        }
+        kfac::nn::LossKind::SquaredError => Mat::randn(m, d_out, 1.0, &mut rng),
+    };
+    Some((pjrt, rust, params, x, y))
+}
+
+fn check_arch(name: &str) {
+    let Some((mut pjrt, mut rust, params, x, y)) = setup(name) else {
+        eprintln!("skipping pjrt test: run `make artifacts` first");
+        return;
+    };
+
+    // loss / eval
+    let (lp, ep) = pjrt.eval(&params, &x, &y);
+    let (lr, er) = rust.eval(&params, &x, &y);
+    assert!((lp - lr).abs() < 1e-3 * (1.0 + lr.abs()), "{name} loss {lp} vs {lr}");
+    assert!((ep - er).abs() < 1e-3 * (1.0 + er.abs()), "{name} err {ep} vs {er}");
+
+    // gradients (f32 vs f64 tolerance)
+    let (_, gp) = pjrt.grad(&params, &x, &y);
+    let (_, gr) = rust.grad(&params, &x, &y);
+    for i in 0..gp.0.len() {
+        let scale = gr.0[i].max_abs().max(1e-6);
+        let err = gp.0[i].sub(&gr.0[i]).max_abs() / scale;
+        assert!(err < 1e-3, "{name} grad layer {i} rel err {err}");
+    }
+
+    // grad_and_stats: aa factors are deterministic functions of x
+    let (_, gp2, sp) = pjrt.grad_and_stats(&params, &x, &y, 12, 7);
+    let (_, _gr2, sr) = rust.grad_and_stats(&params, &x, &y, 12, 7);
+    for i in 0..sp.aa.len() {
+        let scale = sr.aa[i].max_abs().max(1e-6);
+        let err = sp.aa[i].sub(&sr.aa[i]).max_abs() / scale;
+        assert!(err < 1e-3, "{name} aa[{i}] rel err {err}");
+    }
+    for i in 0..sp.aa_off.len() {
+        let scale = sr.aa_off[i].max_abs().max(1e-6);
+        let err = sp.aa_off[i].sub(&sr.aa_off[i]).max_abs() / scale;
+        assert!(err < 1e-3, "{name} aa_off[{i}] rel err {err}");
+    }
+    // gg uses different RNG streams (jnp hash vs rust xoshiro), so only
+    // structural checks: symmetry, PSD-ish diagonal, sane magnitude.
+    for i in 0..sp.gg.len() {
+        let g = &sp.gg[i];
+        assert!(g.sub(&g.transpose()).max_abs() < 1e-4 * (1.0 + g.max_abs()), "{name} gg[{i}] sym");
+        for d in 0..g.rows {
+            assert!(g.at(d, d) >= -1e-6, "{name} gg[{i}] diag");
+        }
+    }
+    // gradient from the two-part (stats chunk + rest) path must agree
+    for i in 0..gp2.0.len() {
+        let scale = gr.0[i].max_abs().max(1e-6);
+        let err = gp2.0[i].sub(&gr.0[i]).max_abs() / scale;
+        assert!(err < 1e-3, "{name} split grad layer {i} rel err {err}");
+    }
+
+    // FVP quadratic forms
+    let mut rng = Rng::new(9);
+    let mk = |rng: &mut Rng| {
+        Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 0.5, rng)).collect())
+    };
+    let v = mk(&mut rng);
+    let u = mk(&mut rng);
+    let qp = pjrt.fvp_quad(&params, &x, 20, &[&v, &u]);
+    let qr = rust.fvp_quad(&params, &x, 20, &[&v, &u]);
+    for i in 0..2 {
+        for j in 0..2 {
+            let scale = qr.max_abs().max(1e-9);
+            let err = (qp.at(i, j) - qr.at(i, j)).abs() / scale;
+            assert!(err < 2e-3, "{name} fvp[{i}{j}] {} vs {}", qp.at(i, j), qr.at(i, j));
+        }
+    }
+    // 1-direction variant
+    let q1 = pjrt.fvp_quad(&params, &x, 20, &[&v]);
+    assert!((q1.at(0, 0) - qr.at(0, 0)).abs() / qr.max_abs().max(1e-9) < 2e-3);
+}
+
+#[test]
+fn tiny_autoencoder_matches_rust_backend() {
+    check_arch("tiny_ae");
+}
+
+#[test]
+fn tiny_classifier_matches_rust_backend() {
+    check_arch("tiny_clf");
+}
+
+#[test]
+fn manifest_lists_expected_programs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let m = kfac::runtime::Manifest::load(&dir).unwrap();
+    for name in ["tiny_ae", "tiny_clf"] {
+        let a = m.find(name).unwrap();
+        for prog in ["fwd_loss", "grad", "grad_stats", "fvp2", "precond"] {
+            assert!(a.programs.contains_key(prog), "{name} missing {prog}");
+            assert!(
+                m.program_path(a, prog).unwrap().exists(),
+                "{name}/{prog} file missing"
+            );
+        }
+    }
+}
+
+#[test]
+fn precond_program_runs_standalone() {
+    // The pure-L1 Pallas preconditioner program: Ginv V Ainv.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let m = kfac::runtime::Manifest::load(&dir).unwrap();
+    let am = m.find("tiny_ae").unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let prog = kfac::runtime::Program::load(
+        &client,
+        &m.program_path(am, "precond").unwrap(),
+        "precond",
+    )
+    .unwrap();
+    // widest layer of tiny_ae is the last (8 x 6)
+    let (r, c) = (8usize, 6usize);
+    let mut rng = Rng::new(3);
+    let g = Mat::randn(r, r, 1.0, &mut rng);
+    let v = Mat::randn(r, c, 1.0, &mut rng);
+    let a = Mat::randn(c, c, 1.0, &mut rng);
+    let out = prog
+        .run(&[
+            kfac::runtime::mat_to_literal(&g).unwrap(),
+            kfac::runtime::mat_to_literal(&v).unwrap(),
+            kfac::runtime::mat_to_literal(&a).unwrap(),
+        ])
+        .unwrap();
+    let got = kfac::runtime::literal_to_mat(&out[0], r, c).unwrap();
+    let want = g.matmul(&v).matmul(&a);
+    assert!(got.sub(&want).max_abs() < 1e-3 * (1.0 + want.max_abs()));
+}
+
+#[test]
+fn chunking_is_exact_for_awkward_sizes(){
+    // 20 rows through chunk-16 executables must equal the rust oracle —
+    // this is the masked-padding guarantee.
+    let Some((mut pjrt, mut rust, params, x, y)) = setup("tiny_ae") else {
+        return;
+    };
+    for rows in [1usize, 3, 15, 16, 17, 20] {
+        let xs = x.top_rows(rows);
+        let ys = y.top_rows(rows);
+        let lp = pjrt.loss(&params, &xs, &ys);
+        let lr = rust.loss(&params, &xs, &ys);
+        assert!((lp - lr).abs() < 1e-3 * (1.0 + lr.abs()), "rows={rows}: {lp} vs {lr}");
+    }
+}
+
+#[allow(dead_code)]
+fn _unused(_: &Path) {}

@@ -1,0 +1,129 @@
+//! Failure-injection / edge-case robustness of the optimizer stack:
+//! degenerate batches, converged gradients, extreme damping, and
+//! pathological statistics must not produce NaNs or panics.
+
+use kfac::backend::{ModelBackend, RustBackend};
+use kfac::fisher::stats::RawStats;
+use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
+use kfac::linalg::Mat;
+use kfac::nn::{Act, Arch, LossKind, Params};
+use kfac::optim::{Kfac, KfacConfig};
+use kfac::rng::Rng;
+
+fn tiny() -> (Arch, Params, Mat, Mat) {
+    let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+    let mut rng = Rng::new(1);
+    let p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(8, 4, 1.0, &mut rng);
+    let mut y = Mat::zeros(8, 2);
+    for r in 0..8 {
+        y.set(r, r % 2, 1.0);
+    }
+    (arch, p, x, y)
+}
+
+#[test]
+fn single_case_minibatch_does_not_panic() {
+    let (arch, mut p, x, y) = tiny();
+    let mut be = RustBackend::new(arch.clone());
+    let mut opt = Kfac::new(&arch, KfacConfig::default());
+    let x1 = x.top_rows(1);
+    let y1 = y.top_rows(1);
+    for _ in 0..5 {
+        let info = opt.step(&mut be, &mut p, &x1, &y1);
+        assert!(info.loss.is_finite());
+        assert!(info.delta_norm.is_finite());
+    }
+}
+
+#[test]
+fn near_zero_gradient_produces_near_zero_update() {
+    // At a (near-)optimum the α* solve must not blow up: δ → 0.
+    let (arch, mut p, x, y) = tiny();
+    let mut be = RustBackend::new(arch.clone());
+    let mut opt = Kfac::new(&arch, KfacConfig { lambda0: 1.0, ..Default::default() });
+    // drive close to optimum first
+    for _ in 0..60 {
+        opt.step(&mut be, &mut p, &x, &y);
+    }
+    let info = opt.step(&mut be, &mut p, &x, &y);
+    assert!(info.delta_norm.is_finite());
+    assert!(info.delta_norm < 10.0, "update exploded near optimum: {}", info.delta_norm);
+}
+
+#[test]
+fn extreme_damping_values_are_stable() {
+    let (arch, p, x, y) = tiny();
+    let mut be = RustBackend::new(arch.clone());
+    for lambda0 in [1e-8, 1e8] {
+        let mut params = p.clone();
+        let mut opt = Kfac::new(&arch, KfacConfig { lambda0, ..Default::default() });
+        let info = opt.step(&mut be, &mut params, &x, &y);
+        assert!(info.loss.is_finite(), "λ0={lambda0}");
+        assert!(info.delta_norm.is_finite(), "λ0={lambda0}");
+        for w in &params.0 {
+            assert!(w.data.iter().all(|v| v.is_finite()), "λ0={lambda0}");
+        }
+    }
+}
+
+#[test]
+fn rank_deficient_statistics_are_jitter_recovered() {
+    // Constant activities (zero variance apart from the bias) make Ā
+    // rank-deficient; the jittered Cholesky must still produce finite
+    // inverses for both structures.
+    let arch = Arch::new(vec![3, 2, 2], vec![Act::Tanh, Act::Identity], LossKind::SquaredError);
+    let mut st = RawStats::zeros(&arch);
+    // Ā = ones outer product (rank 1), G = rank-1 too
+    for aa in st.aa.iter_mut() {
+        *aa = Mat::filled(aa.rows, aa.cols, 1.0);
+    }
+    for gg in st.gg.iter_mut() {
+        *gg = Mat::filled(gg.rows, gg.cols, 0.5);
+    }
+    let mut rng = Rng::new(3);
+    let g = Params(vec![Mat::randn(2, 4, 1.0, &mut rng), Mat::randn(2, 3, 1.0, &mut rng)]);
+    for gamma in [0.0, 1e-6, 1.0] {
+        let bd = BlockDiagInverse::build(&st, gamma);
+        let u = bd.apply(&g);
+        assert!(u.0.iter().all(|m| m.data.iter().all(|v| v.is_finite())), "γ={gamma}");
+        let tri = TridiagInverse::build(&st, gamma);
+        let u = tri.apply(&g);
+        assert!(u.0.iter().all(|m| m.data.iter().all(|v| v.is_finite())), "γ={gamma}");
+    }
+}
+
+#[test]
+fn momentum_with_identical_directions_falls_back() {
+    // If δ0 is exactly parallel to Δ the 2×2 system is singular; the
+    // solver must fall back to the 1-D solution rather than NaN.
+    let q = Mat::from_vec(2, 2, vec![2.0, 2.0, 2.0, 2.0]);
+    // (access through a full step is awkward; test the behaviour
+    // indirectly by stepping twice on a quadratic-like problem)
+    let _ = q;
+    let (arch, mut p, x, y) = tiny();
+    let mut be = RustBackend::new(arch.clone());
+    let mut opt = Kfac::new(&arch, KfacConfig { t3: 1000, ..Default::default() });
+    // two identical steps in a row make Δ and δ0 nearly parallel
+    for _ in 0..4 {
+        let info = opt.step(&mut be, &mut p, &x, &y);
+        assert!(info.alpha.is_finite() && info.mu.is_finite());
+    }
+}
+
+#[test]
+fn wildly_scaled_inputs_do_not_break_training() {
+    let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SquaredError);
+    let mut rng = Rng::new(5);
+    let mut p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(16, 4, 1.0, &mut rng).scale(1e4);
+    let y = Mat::randn(16, 2, 1.0, &mut rng).scale(1e-4);
+    let mut be = RustBackend::new(arch.clone());
+    let l0 = be.loss(&p, &x, &y);
+    let mut opt = Kfac::new(&arch, KfacConfig::default());
+    for _ in 0..10 {
+        let info = opt.step(&mut be, &mut p, &x, &y);
+        assert!(info.loss.is_finite());
+    }
+    assert!(be.loss(&p, &x, &y) <= l0 * 1.001);
+}
