@@ -1,5 +1,10 @@
 //! Micro-benchmarks for the dense linear-algebra substrate (the L3 hot
 //! paths). Run with `cargo bench --bench linalg`.
+//!
+//! GFLOP/s is reported for every GEMM transpose variant on both square
+//! shapes and the blocked rectangular shapes K-FAC actually produces
+//! (activation covariances `Āᵀ Ā`, layer forwards `Ā Wᵀ`, preconditioner
+//! GEMMs) — the numbers to watch when touching `linalg::gemm`.
 
 use kfac::bench::{bench, default_budget};
 use kfac::linalg::{chol::spd_inverse, KronPairInverse, Mat, SymEig};
@@ -9,16 +14,51 @@ fn main() {
     let budget = default_budget();
     let mut rng = Rng::new(0);
 
-    for &(m, k, n) in &[(256usize, 256usize, 256usize), (1000, 257, 100), (401, 401, 401)] {
+    // ---- GEMM: all transpose variants over square + K-FAC shapes ----
+    // (1000, 257, 100): batch-1000 forward through a 257→100 layer;
+    // (257, 1000, 257): the Āᵀ Ā covariance of the same layer;
+    // (401, 401, 401): the widest damped-factor inverse GEMM.
+    for &(m, k, n) in &[
+        (256usize, 256usize, 256usize),
+        (1000, 257, 100),
+        (257, 1000, 257),
+        (401, 401, 401),
+        (512, 512, 512),
+    ] {
         let a = Mat::randn(m, k, 1.0, &mut rng);
         let b = Mat::randn(k, n, 1.0, &mut rng);
+        let at = a.transpose(); // k×m
+        let bt = b.transpose(); // n×k
         let flops = (2 * m * k * n) as f64;
+
         let r = bench(&format!("matmul_{m}x{k}x{n}"), budget, || {
             std::hint::black_box(a.matmul(&b));
         });
         r.report_throughput("GFLOP/s", flops);
+
+        let r = bench(&format!("matmul_tn_{m}x{k}x{n}"), budget, || {
+            std::hint::black_box(at.matmul_tn(&b));
+        });
+        r.report_throughput("GFLOP/s", flops);
+
+        let r = bench(&format!("matmul_nt_{m}x{k}x{n}"), budget, || {
+            std::hint::black_box(a.matmul_nt(&bt));
+        });
+        r.report_throughput("GFLOP/s", flops);
     }
 
+    // ---- matvec (the n = 1 path) ----
+    for &(m, k) in &[(1000usize, 1000usize), (4000, 257)] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let flops = (2 * m * k) as f64;
+        let r = bench(&format!("matvec_{m}x{k}"), budget, || {
+            std::hint::black_box(a.matvec(&v));
+        });
+        r.report_throughput("GFLOP/s", flops);
+    }
+
+    // ---- factor inversions / eigensolver ----
     for n in [101usize, 257, 401] {
         let x = Mat::randn(n + 8, n, 1.0, &mut rng);
         let spd = x.matmul_tn(&x).add_diag(0.5);

@@ -15,277 +15,363 @@
 //! - `grad_stats(W…, X, Y, w, seed:i32) →
 //!    (loss, err, dW…, aa…(l), aa_off…(l−1), gg…(l), gg_off…(l−1))`
 //! - `fvp2(W…, X, w, V…, U…) → (vFv, vFu, uFu)`
+//!
+//! The real implementation needs the `xla` (xla-rs) crate and is gated
+//! behind the `pjrt` cargo feature; without it a stub [`PjrtBackend`]
+//! with the same surface is compiled whose constructor fails with a
+//! descriptive error, so the CLI/experiment binaries still build and
+//! fall back to the pure-Rust backend.
 
-use super::{BatchStats, ModelBackend};
-use crate::fisher::stats::RawStats;
-use crate::linalg::Mat;
-use crate::nn::{Arch, Params};
-use crate::runtime::exec::{i32_literal, literal_scalar_f64, literal_to_mat, mat_to_literal};
-use crate::runtime::{Manifest, Program};
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use real::PjrtBackend;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtBackend;
 
-pub struct PjrtBackend {
-    arch: Arch,
-    chunk: usize,
-    // Keep the client alive as long as the executables.
-    _client: xla::PjRtClient,
-    p_fwd: Program,
-    p_grad: Program,
-    p_grad_stats: Program,
-    p_fvp2: Program,
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::backend::{BatchStats, ModelBackend};
+    use crate::linalg::Mat;
+    use crate::nn::{Arch, Params};
+    use crate::runtime::{rt_err, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT support is not compiled into this build; \
+         add the xla-rs/anyhow dependencies and rebuild with \
+         `--features pjrt` (see the feature note in Cargo.toml) \
+         or use `--backend rust`";
+
+    /// Stub compiled when the `pjrt` feature is off. Cannot be
+    /// constructed: [`PjrtBackend::new`] always errors.
+    pub struct PjrtBackend {
+        _unconstructable: (),
+    }
+
+    impl PjrtBackend {
+        pub fn new(_artifacts_dir: &Path, _arch_name: &str) -> Result<PjrtBackend> {
+            Err(rt_err(UNAVAILABLE))
+        }
+
+        pub fn chunk_size(&self) -> usize {
+            unreachable!("{UNAVAILABLE}")
+        }
+    }
+
+    impl ModelBackend for PjrtBackend {
+        fn arch(&self) -> &Arch {
+            unreachable!("{UNAVAILABLE}")
+        }
+
+        fn loss(&mut self, _p: &Params, _x: &Mat, _y: &Mat) -> f64 {
+            unreachable!("{UNAVAILABLE}")
+        }
+
+        fn eval(&mut self, _p: &Params, _x: &Mat, _y: &Mat) -> (f64, f64) {
+            unreachable!("{UNAVAILABLE}")
+        }
+
+        fn grad(&mut self, _p: &Params, _x: &Mat, _y: &Mat) -> (f64, Params) {
+            unreachable!("{UNAVAILABLE}")
+        }
+
+        fn grad_and_stats(
+            &mut self,
+            _p: &Params,
+            _x: &Mat,
+            _y: &Mat,
+            _stats_rows: usize,
+            _seed: u64,
+        ) -> (f64, Params, BatchStats) {
+            unreachable!("{UNAVAILABLE}")
+        }
+
+        fn fvp_quad(&mut self, _p: &Params, _x: &Mat, _fvp_rows: usize, _dirs: &[&Params]) -> Mat {
+            unreachable!("{UNAVAILABLE}")
+        }
+    }
 }
 
-impl PjrtBackend {
-    /// Load and compile the programs for `arch_name` from `artifacts_dir`.
-    pub fn new(artifacts_dir: &Path, arch_name: &str) -> Result<PjrtBackend> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let am = manifest.find(arch_name)?.clone();
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let load = |prog: &str| -> Result<Program> {
-            Program::load(&client, &manifest.program_path(&am, prog)?, &format!("{arch_name}/{prog}"))
-        };
-        Ok(PjrtBackend {
-            arch: am.arch(),
-            chunk: am.chunk,
-            p_fwd: load("fwd_loss")?,
-            p_grad: load("grad")?,
-            p_grad_stats: load("grad_stats")?,
-            p_fvp2: load("fvp2")?,
-            _client: client,
-        })
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::backend::{BatchStats, ModelBackend};
+    use crate::fisher::stats::RawStats;
+    use crate::linalg::Mat;
+    use crate::nn::{Arch, Params};
+    use crate::runtime::exec::{i32_literal, literal_scalar_f64, literal_to_mat, mat_to_literal};
+    use crate::runtime::{Manifest, Program};
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    pub struct PjrtBackend {
+        arch: Arch,
+        chunk: usize,
+        // Keep the client alive as long as the executables.
+        _client: xla::PjRtClient,
+        p_fwd: Program,
+        p_grad: Program,
+        p_grad_stats: Program,
+        p_fvp2: Program,
     }
 
-    pub fn chunk_size(&self) -> usize {
-        self.chunk
-    }
-
-    fn params_literals(&self, p: &Params) -> Result<Vec<xla::Literal>> {
-        p.0.iter().map(mat_to_literal).collect()
-    }
-
-    /// Slice rows [lo, lo+chunk) of `m` into a fixed-shape literal,
-    /// zero-padding past `hi`; also returns the 0/1 mask literal.
-    fn chunk_literal(&self, m: &Mat, lo: usize, hi: usize) -> Result<(xla::Literal, xla::Literal)> {
-        let c = self.chunk;
-        let mut x = Mat::zeros(c, m.cols);
-        let mut w = vec![0.0f64; c];
-        for r in 0..c {
-            if lo + r < hi {
-                x.row_mut(r).copy_from_slice(m.row(lo + r));
-                w[r] = 1.0;
-            }
-        }
-        Ok((mat_to_literal(&x)?, crate::runtime::exec::vec_to_literal(&w)))
-    }
-
-    fn data_chunk(&self, m: &Mat, lo: usize, hi: usize) -> Result<xla::Literal> {
-        let c = self.chunk;
-        let mut x = Mat::zeros(c, m.cols);
-        for r in 0..c {
-            if lo + r < hi {
-                x.row_mut(r).copy_from_slice(m.row(lo + r));
-            }
-        }
-        mat_to_literal(&x)
-    }
-
-    /// Sum-accumulate grads/stats over chunks of the first `rows` rows.
-    fn run_grad_like(
-        &mut self,
-        p: &Params,
-        x: &Mat,
-        y: &Mat,
-        rows: usize,
-        stats: bool,
-        seed: u64,
-    ) -> Result<(f64, f64, Params, Option<RawStats>)> {
-        let l = self.arch.num_layers();
-        let mut loss_sum = 0.0;
-        let mut err_sum = 0.0;
-        let mut grads = Params(
-            (0..l)
-                .map(|i| {
-                    let (r, c) = self.arch.weight_shape(i);
-                    Mat::zeros(r, c)
-                })
-                .collect(),
-        );
-        let mut st = if stats { Some(RawStats::zeros(&self.arch)) } else { None };
-        let wlits = self.params_literals(p)?;
-        let mut lo = 0usize;
-        let mut chunk_idx = 0u64;
-        while lo < rows {
-            let hi = (lo + self.chunk).min(rows);
-            let (xl, wl) = self.chunk_literal(x, lo, hi)?;
-            let yl = self.data_chunk(y, lo, hi)?;
-            let seed_lit =
-                i32_literal((seed.wrapping_mul(1000).wrapping_add(chunk_idx)) as i32);
-            // Parameter literals are converted once per call and shared by
-            // reference across chunks (execute borrows its inputs).
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(l + 4);
-            inputs.extend(wlits.iter());
-            inputs.push(&xl);
-            inputs.push(&yl);
-            inputs.push(&wl);
-            let outs = if stats {
-                inputs.push(&seed_lit);
-                self.p_grad_stats.run(&inputs)?
-            } else {
-                self.p_grad.run(&inputs)?
+    impl PjrtBackend {
+        /// Load and compile the programs for `arch_name` from `artifacts_dir`.
+        pub fn new(artifacts_dir: &Path, arch_name: &str) -> Result<PjrtBackend> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let am = manifest.find(arch_name)?.clone();
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let load = |prog: &str| -> Result<Program> {
+                Program::load(
+                    &client,
+                    &manifest.program_path(&am, prog)?,
+                    &format!("{arch_name}/{prog}"),
+                )
             };
-            loss_sum += literal_scalar_f64(&outs[0])?;
-            err_sum += literal_scalar_f64(&outs[1])?;
-            for i in 0..l {
-                let (r, c) = self.arch.weight_shape(i);
-                grads.0[i].axpy(1.0, &literal_to_mat(&outs[2 + i], r, c)?);
+            Ok(PjrtBackend {
+                arch: am.arch(),
+                chunk: am.chunk,
+                p_fwd: load("fwd_loss")?,
+                p_grad: load("grad")?,
+                p_grad_stats: load("grad_stats")?,
+                p_fvp2: load("fvp2")?,
+                _client: client,
+            })
+        }
+
+        pub fn chunk_size(&self) -> usize {
+            self.chunk
+        }
+
+        fn params_literals(&self, p: &Params) -> Result<Vec<xla::Literal>> {
+            p.0.iter().map(mat_to_literal).collect()
+        }
+
+        /// Slice rows [lo, lo+chunk) of `m` into a fixed-shape literal,
+        /// zero-padding past `hi`; also returns the 0/1 mask literal.
+        fn chunk_literal(
+            &self,
+            m: &Mat,
+            lo: usize,
+            hi: usize,
+        ) -> Result<(xla::Literal, xla::Literal)> {
+            let c = self.chunk;
+            let mut x = Mat::zeros(c, m.cols);
+            let mut w = vec![0.0f64; c];
+            for r in 0..c {
+                if lo + r < hi {
+                    x.row_mut(r).copy_from_slice(m.row(lo + r));
+                    w[r] = 1.0;
+                }
+            }
+            Ok((mat_to_literal(&x)?, crate::runtime::exec::vec_to_literal(&w)))
+        }
+
+        fn data_chunk(&self, m: &Mat, lo: usize, hi: usize) -> Result<xla::Literal> {
+            let c = self.chunk;
+            let mut x = Mat::zeros(c, m.cols);
+            for r in 0..c {
+                if lo + r < hi {
+                    x.row_mut(r).copy_from_slice(m.row(lo + r));
+                }
+            }
+            mat_to_literal(&x)
+        }
+
+        /// Sum-accumulate grads/stats over chunks of the first `rows` rows.
+        fn run_grad_like(
+            &mut self,
+            p: &Params,
+            x: &Mat,
+            y: &Mat,
+            rows: usize,
+            stats: bool,
+            seed: u64,
+        ) -> Result<(f64, f64, Params, Option<RawStats>)> {
+            let l = self.arch.num_layers();
+            let mut loss_sum = 0.0;
+            let mut err_sum = 0.0;
+            let mut grads = Params(
+                (0..l)
+                    .map(|i| {
+                        let (r, c) = self.arch.weight_shape(i);
+                        Mat::zeros(r, c)
+                    })
+                    .collect(),
+            );
+            let mut st = if stats { Some(RawStats::zeros(&self.arch)) } else { None };
+            let wlits = self.params_literals(p)?;
+            let mut lo = 0usize;
+            let mut chunk_idx = 0u64;
+            while lo < rows {
+                let hi = (lo + self.chunk).min(rows);
+                let (xl, wl) = self.chunk_literal(x, lo, hi)?;
+                let yl = self.data_chunk(y, lo, hi)?;
+                let seed_lit =
+                    i32_literal((seed.wrapping_mul(1000).wrapping_add(chunk_idx)) as i32);
+                // Parameter literals are converted once per call and shared by
+                // reference across chunks (execute borrows its inputs).
+                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(l + 4);
+                inputs.extend(wlits.iter());
+                inputs.push(&xl);
+                inputs.push(&yl);
+                inputs.push(&wl);
+                let outs = if stats {
+                    inputs.push(&seed_lit);
+                    self.p_grad_stats.run(&inputs)?
+                } else {
+                    self.p_grad.run(&inputs)?
+                };
+                loss_sum += literal_scalar_f64(&outs[0])?;
+                err_sum += literal_scalar_f64(&outs[1])?;
+                for i in 0..l {
+                    let (r, c) = self.arch.weight_shape(i);
+                    grads.0[i].axpy(1.0, &literal_to_mat(&outs[2 + i], r, c)?);
+                }
+                if let Some(st) = st.as_mut() {
+                    let mut k = 2 + l;
+                    for i in 0..l {
+                        let d = self.arch.widths[i] + 1;
+                        st.aa[i].axpy(1.0, &literal_to_mat(&outs[k], d, d)?);
+                        k += 1;
+                    }
+                    for i in 0..l - 1 {
+                        let (r, c) = (self.arch.widths[i] + 1, self.arch.widths[i + 1] + 1);
+                        st.aa_off[i].axpy(1.0, &literal_to_mat(&outs[k], r, c)?);
+                        k += 1;
+                    }
+                    for i in 0..l {
+                        let d = self.arch.widths[i + 1];
+                        st.gg[i].axpy(1.0, &literal_to_mat(&outs[k], d, d)?);
+                        k += 1;
+                    }
+                    for i in 0..l - 1 {
+                        let (r, c) = (self.arch.widths[i + 1], self.arch.widths[i + 2]);
+                        st.gg_off[i].axpy(1.0, &literal_to_mat(&outs[k], r, c)?);
+                        k += 1;
+                    }
+                }
+                lo = hi;
+                chunk_idx += 1;
+            }
+            let inv = 1.0 / rows as f64;
+            for g in grads.0.iter_mut() {
+                *g = g.scale(inv);
             }
             if let Some(st) = st.as_mut() {
-                let mut k = 2 + l;
-                for i in 0..l {
-                    let d = self.arch.widths[i] + 1;
-                    st.aa[i].axpy(1.0, &literal_to_mat(&outs[k], d, d)?);
-                    k += 1;
-                }
-                for i in 0..l - 1 {
-                    let (r, c) = (self.arch.widths[i] + 1, self.arch.widths[i + 1] + 1);
-                    st.aa_off[i].axpy(1.0, &literal_to_mat(&outs[k], r, c)?);
-                    k += 1;
-                }
-                for i in 0..l {
-                    let d = self.arch.widths[i + 1];
-                    st.gg[i].axpy(1.0, &literal_to_mat(&outs[k], d, d)?);
-                    k += 1;
-                }
-                for i in 0..l - 1 {
-                    let (r, c) = (self.arch.widths[i + 1], self.arch.widths[i + 2]);
-                    st.gg_off[i].axpy(1.0, &literal_to_mat(&outs[k], r, c)?);
-                    k += 1;
-                }
+                let sc = |v: &mut Vec<Mat>| {
+                    for m in v.iter_mut() {
+                        *m = m.scale(inv);
+                    }
+                };
+                sc(&mut st.aa);
+                sc(&mut st.aa_off);
+                sc(&mut st.gg);
+                sc(&mut st.gg_off);
             }
-            lo = hi;
-            chunk_idx += 1;
+            Ok((loss_sum * inv, err_sum * inv, grads, st))
         }
-        let inv = 1.0 / rows as f64;
-        for g in grads.0.iter_mut() {
-            *g = g.scale(inv);
+
+        fn eval_impl(&mut self, p: &Params, x: &Mat, y: &Mat) -> Result<(f64, f64)> {
+            let wlits = self.params_literals(p)?;
+            let mut loss_sum = 0.0;
+            let mut err_sum = 0.0;
+            let mut lo = 0usize;
+            while lo < x.rows {
+                let hi = (lo + self.chunk).min(x.rows);
+                let (xl, wl) = self.chunk_literal(x, lo, hi)?;
+                let yl = self.data_chunk(y, lo, hi)?;
+                let mut inputs: Vec<&xla::Literal> = Vec::new();
+                inputs.extend(wlits.iter());
+                inputs.push(&xl);
+                inputs.push(&yl);
+                inputs.push(&wl);
+                let outs = self.p_fwd.run(&inputs)?;
+                loss_sum += literal_scalar_f64(&outs[0])?;
+                err_sum += literal_scalar_f64(&outs[1])?;
+                lo = hi;
+            }
+            Ok((loss_sum / x.rows as f64, err_sum / x.rows as f64))
         }
-        if let Some(st) = st.as_mut() {
-            let sc = |v: &mut Vec<Mat>| {
-                for m in v.iter_mut() {
-                    *m = m.scale(inv);
-                }
-            };
-            sc(&mut st.aa);
-            sc(&mut st.aa_off);
-            sc(&mut st.gg);
-            sc(&mut st.gg_off);
+    }
+
+    impl ModelBackend for PjrtBackend {
+        fn arch(&self) -> &Arch {
+            &self.arch
         }
-        Ok((loss_sum * inv, err_sum * inv, grads, st))
-    }
 
-    fn eval_impl(&mut self, p: &Params, x: &Mat, y: &Mat) -> Result<(f64, f64)> {
-        let wlits = self.params_literals(p)?;
-        let mut loss_sum = 0.0;
-        let mut err_sum = 0.0;
-        let mut lo = 0usize;
-        while lo < x.rows {
-            let hi = (lo + self.chunk).min(x.rows);
-            let (xl, wl) = self.chunk_literal(x, lo, hi)?;
-            let yl = self.data_chunk(y, lo, hi)?;
-            let mut inputs: Vec<&xla::Literal> = Vec::new();
-            inputs.extend(wlits.iter());
-            inputs.push(&xl);
-            inputs.push(&yl);
-            inputs.push(&wl);
-            let outs = self.p_fwd.run(&inputs)?;
-            loss_sum += literal_scalar_f64(&outs[0])?;
-            err_sum += literal_scalar_f64(&outs[1])?;
-            lo = hi;
+        fn loss(&mut self, p: &Params, x: &Mat, y: &Mat) -> f64 {
+            self.eval_impl(p, x, y).expect("pjrt fwd_loss").0
         }
-        Ok((loss_sum / x.rows as f64, err_sum / x.rows as f64))
-    }
-}
 
-impl ModelBackend for PjrtBackend {
-    fn arch(&self) -> &Arch {
-        &self.arch
-    }
-
-    fn loss(&mut self, p: &Params, x: &Mat, y: &Mat) -> f64 {
-        self.eval_impl(p, x, y).expect("pjrt fwd_loss").0
-    }
-
-    fn eval(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, f64) {
-        self.eval_impl(p, x, y).expect("pjrt fwd_loss")
-    }
-
-    fn grad(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, Params) {
-        let (loss, _err, grads, _) =
-            self.run_grad_like(p, x, y, x.rows, false, 0).expect("pjrt grad");
-        (loss, grads)
-    }
-
-    fn grad_and_stats(
-        &mut self,
-        p: &Params,
-        x: &Mat,
-        y: &Mat,
-        stats_rows: usize,
-        seed: u64,
-    ) -> (f64, Params, BatchStats) {
-        let rows = stats_rows.clamp(1, x.rows);
-        // Stats (and grads) on the first `rows` rows…
-        let (loss_s, _es, grads_s, st) =
-            self.run_grad_like(p, x, y, rows, true, seed).expect("pjrt grad_stats");
-        let stats = st.unwrap();
-        if rows == x.rows {
-            return (loss_s, grads_s, stats);
+        fn eval(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, f64) {
+            self.eval_impl(p, x, y).expect("pjrt fwd_loss")
         }
-        // …then grads on the remaining rows; combine by row-weighted sum.
-        let xr = x.block(rows, x.rows, 0, x.cols);
-        let yr = y.block(rows, y.rows, 0, y.cols);
-        let (loss_r, _er, grads_r, _) =
-            self.run_grad_like(p, &xr, &yr, xr.rows, false, 0).expect("pjrt grad");
-        let (w1, w2) = (rows as f64, (x.rows - rows) as f64);
-        let total = w1 + w2;
-        let mut grads = grads_s.scale(w1 / total);
-        grads.axpy(w2 / total, &grads_r);
-        ((loss_s * w1 + loss_r * w2) / total, grads, stats)
-    }
 
-    fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat {
-        assert!(!dirs.is_empty() && dirs.len() <= 2, "fvp2 supports 1 or 2 directions");
-        let rows = fvp_rows.clamp(1, x.rows);
-        let l = self.arch.num_layers();
-        let zero = dirs[0].zeros_like();
-        let v = dirs[0];
-        let u: &Params = if dirs.len() == 2 { dirs[1] } else { &zero };
-        let wlits = self.params_literals(p).expect("params literals");
-        let vlits = self.params_literals(v).expect("v literals");
-        let ulits = self.params_literals(u).expect("u literals");
-        let (mut vfv, mut vfu, mut ufu) = (0.0, 0.0, 0.0);
-        let mut lo = 0usize;
-        while lo < rows {
-            let hi = (lo + self.chunk).min(rows);
-            let (xl, wl) = self.chunk_literal(x, lo, hi).expect("chunk");
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * l + 2);
-            inputs.extend(wlits.iter());
-            inputs.push(&xl);
-            inputs.push(&wl);
-            inputs.extend(vlits.iter());
-            inputs.extend(ulits.iter());
-            let outs = self.p_fvp2.run(&inputs).expect("pjrt fvp2");
-            vfv += literal_scalar_f64(&outs[0]).expect("vfv");
-            vfu += literal_scalar_f64(&outs[1]).expect("vfu");
-            ufu += literal_scalar_f64(&outs[2]).expect("ufu");
-            lo = hi;
+        fn grad(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, Params) {
+            let (loss, _err, grads, _) =
+                self.run_grad_like(p, x, y, x.rows, false, 0).expect("pjrt grad");
+            (loss, grads)
         }
-        let inv = 1.0 / rows as f64;
-        if dirs.len() == 1 {
-            Mat::from_vec(1, 1, vec![vfv * inv])
-        } else {
-            Mat::from_vec(2, 2, vec![vfv * inv, vfu * inv, vfu * inv, ufu * inv])
+
+        fn grad_and_stats(
+            &mut self,
+            p: &Params,
+            x: &Mat,
+            y: &Mat,
+            stats_rows: usize,
+            seed: u64,
+        ) -> (f64, Params, BatchStats) {
+            let rows = stats_rows.clamp(1, x.rows);
+            // Stats (and grads) on the first `rows` rows…
+            let (loss_s, _es, grads_s, st) =
+                self.run_grad_like(p, x, y, rows, true, seed).expect("pjrt grad_stats");
+            let stats = st.unwrap();
+            if rows == x.rows {
+                return (loss_s, grads_s, stats);
+            }
+            // …then grads on the remaining rows; combine by row-weighted sum.
+            let xr = x.block(rows, x.rows, 0, x.cols);
+            let yr = y.block(rows, y.rows, 0, y.cols);
+            let (loss_r, _er, grads_r, _) =
+                self.run_grad_like(p, &xr, &yr, xr.rows, false, 0).expect("pjrt grad");
+            let (w1, w2) = (rows as f64, (x.rows - rows) as f64);
+            let total = w1 + w2;
+            let mut grads = grads_s.scale(w1 / total);
+            grads.axpy(w2 / total, &grads_r);
+            ((loss_s * w1 + loss_r * w2) / total, grads, stats)
+        }
+
+        fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat {
+            assert!(!dirs.is_empty() && dirs.len() <= 2, "fvp2 supports 1 or 2 directions");
+            let rows = fvp_rows.clamp(1, x.rows);
+            let l = self.arch.num_layers();
+            let zero = dirs[0].zeros_like();
+            let v = dirs[0];
+            let u: &Params = if dirs.len() == 2 { dirs[1] } else { &zero };
+            let wlits = self.params_literals(p).expect("params literals");
+            let vlits = self.params_literals(v).expect("v literals");
+            let ulits = self.params_literals(u).expect("u literals");
+            let (mut vfv, mut vfu, mut ufu) = (0.0, 0.0, 0.0);
+            let mut lo = 0usize;
+            while lo < rows {
+                let hi = (lo + self.chunk).min(rows);
+                let (xl, wl) = self.chunk_literal(x, lo, hi).expect("chunk");
+                let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * l + 2);
+                inputs.extend(wlits.iter());
+                inputs.push(&xl);
+                inputs.push(&wl);
+                inputs.extend(vlits.iter());
+                inputs.extend(ulits.iter());
+                let outs = self.p_fvp2.run(&inputs).expect("pjrt fvp2");
+                vfv += literal_scalar_f64(&outs[0]).expect("vfv");
+                vfu += literal_scalar_f64(&outs[1]).expect("vfu");
+                ufu += literal_scalar_f64(&outs[2]).expect("ufu");
+                lo = hi;
+            }
+            let inv = 1.0 / rows as f64;
+            if dirs.len() == 1 {
+                Mat::from_vec(1, 1, vec![vfv * inv])
+            } else {
+                Mat::from_vec(2, 2, vec![vfv * inv, vfu * inv, vfu * inv, ufu * inv])
+            }
         }
     }
 }

@@ -9,14 +9,13 @@
 
 pub mod chol;
 pub mod eig;
+pub mod gemm;
 pub mod kron;
 pub mod stein;
 
 pub use chol::Cholesky;
 pub use eig::SymEig;
 pub use stein::KronPairInverse;
-
-use crate::par;
 
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
@@ -274,35 +273,16 @@ impl Mat {
 
     // ---------- GEMM family ----------
     //
-    // All four transpose variants are implemented as `C = A' * B'` with the
-    // inner loops arranged so that the innermost access pattern over B is
-    // contiguous; row blocks of C are distributed over the thread pool.
+    // All variants lower onto the packed, cache-blocked, threaded kernel
+    // in [`gemm`]; the transposed layouts differ only in the operand
+    // strides handed to the packing layer.
 
     /// `self * other`
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul: {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data;
-        let b = &other.data;
-        let out_ptr = ParOut(out.data.as_mut_ptr());
-        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
-            let o = out_ptr;
-            for i in lo..hi {
-                // SAFETY: disjoint row ranges per worker.
-                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
-                let arow = &a[i * k..(i + 1) * k];
-                for (p, &aip) in arow.iter().enumerate() {
-                    if aip == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[p * n..(p + 1) * n];
-                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
-                        *c += aip * bv;
-                    }
-                }
-            }
-        });
+        gemm::gemm_strided(m, n, k, &self.data, k, 1, &other.data, n, 1, &mut out.data);
         out
     }
 
@@ -311,25 +291,7 @@ impl Mat {
         assert_eq!(self.rows, other.rows, "matmul_tn shape");
         let (m, k, n) = (self.cols, self.rows, other.cols);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data; // k x m
-        let b = &other.data; // k x n
-        let out_ptr = ParOut(out.data.as_mut_ptr());
-        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
-            let o = out_ptr;
-            for i in lo..hi {
-                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
-                for p in 0..k {
-                    let aip = a[p * m + i];
-                    if aip == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[p * n..(p + 1) * n];
-                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
-                        *c += aip * bv;
-                    }
-                }
-            }
-        });
+        gemm::gemm_strided(m, n, k, &self.data, 1, m, &other.data, n, 1, &mut out.data);
         out
     }
 
@@ -338,33 +300,16 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt shape");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data; // m x k
-        let b = &other.data; // n x k
-        let out_ptr = ParOut(out.data.as_mut_ptr());
-        par::par_ranges(m, par_row_chunk(m, n, k), |lo, hi| {
-            let o = out_ptr;
-            for i in lo..hi {
-                let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
-                let arow = &a[i * k..(i + 1) * k];
-                for (j, c) in crow.iter_mut().enumerate() {
-                    let brow = &b[j * k..(j + 1) * k];
-                    let mut acc = 0.0;
-                    for (av, bv) in arow.iter().zip(brow.iter()) {
-                        acc += av * bv;
-                    }
-                    *c = acc;
-                }
-            }
-        });
+        gemm::gemm_strided(m, n, k, &self.data, k, 1, &other.data, 1, k, &mut out.data);
         out
     }
 
-    /// Matrix-vector product `self * v`.
+    /// Matrix-vector product `self * v` (GEMM with an `n = 1` operand).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|r| self.row(r).iter().zip(v.iter()).map(|(a, b)| a * b).sum())
-            .collect()
+        let mut out = vec![0.0; self.rows];
+        gemm::gemm_strided(self.rows, 1, self.cols, &self.data, self.cols, 1, v, 1, 1, &mut out);
+        out
     }
 
     /// General (square, not necessarily SPD) inverse via partial-pivot
@@ -419,18 +364,6 @@ impl Mat {
         }
         inv
     }
-}
-
-#[derive(Clone, Copy)]
-struct ParOut(*mut f64);
-unsafe impl Send for ParOut {}
-unsafe impl Sync for ParOut {}
-
-/// Minimum rows per worker so tiny GEMMs stay single-threaded.
-fn par_row_chunk(m: usize, n: usize, k: usize) -> usize {
-    // Target >= ~64k flops per spawned chunk.
-    let flops_per_row = (2 * n * k).max(1);
-    (65_536 / flops_per_row).max(1).min(m.max(1))
 }
 
 #[cfg(test)]

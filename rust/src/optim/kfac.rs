@@ -250,7 +250,11 @@ impl Kfac {
                 }
             }
             let (coeffs, mval) = Self::solve_quadratic(&q, &b);
-            if best.as_ref().map_or(true, |c| mval < c.mval) {
+            let improves = match &best {
+                None => true,
+                Some(c) => mval < c.mval,
+            };
+            if improves {
                 best = Some(Cand { gamma: g, inv: inv_box, delta, coeffs, mval });
             }
         }

@@ -29,6 +29,15 @@ pub fn num_threads() -> usize {
     n
 }
 
+/// Chunking heuristic for flop-shaped work (the GEMM macro-kernel and
+/// row loops): the smallest chunk of `items` whose cost reaches
+/// `TARGET_FLOPS`, so tiny problems run inline on the caller thread and
+/// only work that amortizes a thread spawn is split across the pool.
+pub fn chunk_for_flops(items: usize, flops_per_item: usize) -> usize {
+    const TARGET_FLOPS: usize = 1 << 16;
+    (TARGET_FLOPS / flops_per_item.max(1)).clamp(1, items.max(1))
+}
+
 /// Run `body(lo, hi)` over a partition of `0..n` into contiguous chunks,
 /// one per worker. `min_chunk` bounds splitting overhead: if
 /// `n <= min_chunk` (or one worker), runs inline on the caller thread.
@@ -134,5 +143,16 @@ mod tests {
     fn small_n_runs_inline() {
         let got = par_map(3, 1000, |i| i);
         assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn chunk_for_flops_bounds() {
+        // cheap items coalesce, expensive items split singly
+        assert_eq!(chunk_for_flops(1000, 1), 1000);
+        assert_eq!(chunk_for_flops(1_000_000, 8), (1 << 16) / 8);
+        assert_eq!(chunk_for_flops(64, 1 << 20), 1);
+        // degenerate inputs stay in range
+        assert_eq!(chunk_for_flops(0, 0), 1);
+        assert!(chunk_for_flops(5, 0) <= 5);
     }
 }

@@ -1,9 +1,9 @@
 //! Artifact manifest: describes the AOT-lowered programs per model
 //! architecture (shapes, loss, chunk size, HLO file paths).
 
+use super::{rt_err, Result};
 use crate::nn::{Act, Arch, LossKind};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -38,39 +38,47 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            rt_err(format!("reading {} (run `make artifacts`): {e}", path.display()))
+        })?;
+        let j = Json::parse(&text).map_err(|e| rt_err(format!("manifest parse error: {e}")))?;
         let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
         if version != 1 {
-            bail!("unsupported manifest version {version}");
+            return Err(rt_err(format!("unsupported manifest version {version}")));
         }
         let mut archs = Vec::new();
         for a in j.get("archs").and_then(Json::as_arr).unwrap_or(&[]) {
             let name = a
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("arch missing name"))?
+                .ok_or_else(|| rt_err("arch missing name"))?
                 .to_string();
-            let widths =
-                a.get("widths").and_then(Json::usize_vec).ok_or_else(|| anyhow!("{name}: widths"))?;
-            let act_names =
-                a.get("acts").and_then(Json::str_vec).ok_or_else(|| anyhow!("{name}: acts"))?;
+            let widths = a
+                .get("widths")
+                .and_then(Json::usize_vec)
+                .ok_or_else(|| rt_err(format!("{name}: widths")))?;
+            let act_names = a
+                .get("acts")
+                .and_then(Json::str_vec)
+                .ok_or_else(|| rt_err(format!("{name}: acts")))?;
             let acts: Vec<Act> = act_names
                 .iter()
-                .map(|s| Act::from_name(s).ok_or_else(|| anyhow!("{name}: bad act {s}")))
+                .map(|s| Act::from_name(s).ok_or_else(|| rt_err(format!("{name}: bad act {s}"))))
                 .collect::<Result<_>>()?;
             let loss = a
                 .get("loss")
                 .and_then(Json::as_str)
                 .and_then(LossKind::from_name)
-                .ok_or_else(|| anyhow!("{name}: loss"))?;
-            let chunk =
-                a.get("chunk").and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: chunk"))?;
+                .ok_or_else(|| rt_err(format!("{name}: loss")))?;
+            let chunk = a
+                .get("chunk")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| rt_err(format!("{name}: chunk")))?;
             let mut programs = BTreeMap::new();
             if let Some(obj) = a.get("programs").and_then(Json::as_obj) {
                 for (k, v) in obj {
-                    let rel = v.as_str().ok_or_else(|| anyhow!("{name}: program path"))?;
+                    let rel =
+                        v.as_str().ok_or_else(|| rt_err(format!("{name}: program path")))?;
                     programs.insert(k.clone(), PathBuf::from(rel));
                 }
             }
@@ -83,7 +91,7 @@ impl Manifest {
         self.archs
             .iter()
             .find(|a| a.name == name)
-            .ok_or_else(|| anyhow!("arch '{name}' not in manifest ({:?})", self.names()))
+            .ok_or_else(|| rt_err(format!("arch '{name}' not in manifest ({:?})", self.names())))
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -95,7 +103,7 @@ impl Manifest {
         let rel = arch
             .programs
             .get(program)
-            .ok_or_else(|| anyhow!("arch '{}' missing program '{program}'", arch.name))?;
+            .ok_or_else(|| rt_err(format!("arch '{}' missing program '{program}'", arch.name)))?;
         Ok(self.dir.join(rel))
     }
 }
@@ -129,5 +137,17 @@ mod tests {
         );
         assert!(m.find("nope").is_err());
         assert!(m.program_path(a, "nope").is_err());
+    }
+
+    #[test]
+    fn errors_are_descriptive() {
+        let dir = std::env::temp_dir().join("kfac_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("manifest.json"), "{e}");
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 2, "archs": []}"#).unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
     }
 }

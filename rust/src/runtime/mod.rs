@@ -7,9 +7,38 @@
 //! cleanly. Programs are compiled once at startup and cached; the
 //! training loop then only does literal transfer + execute — Python is
 //! never on the request path.
+//!
+//! The artifact manifest ([`artifact`]) is dependency-free and always
+//! compiled; the executor ([`exec`]) needs the `xla` (xla-rs) crate and
+//! is gated behind the off-by-default `pjrt` cargo feature.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
 pub use artifact::{ArchManifest, Manifest};
+#[cfg(feature = "pjrt")]
 pub use exec::{literal_scalar_f64, literal_to_mat, mat_to_literal, Program};
+
+/// Error type for the runtime layer (artifact loading / program
+/// execution). Plain string payload so the default build stays
+/// dependency-free; `{:#}` formatting (anyhow style) degrades to the
+/// same message.
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime-layer result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Shorthand constructor used across the runtime modules.
+pub(crate) fn rt_err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}

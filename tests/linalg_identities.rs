@@ -1,0 +1,121 @@
+//! Identity-based property tests for the dense linear-algebra substrate
+//! beyond GEMM, on seeded SPD inputs of sizes 1..64:
+//!
+//! - `Cholesky`: `L Lᵀ = A`, and `A x = b` solves round-trip;
+//! - `SymEig`: `Q Λ Qᵀ = A` and `Qᵀ Q = I`;
+//! - `KronPairInverse`: `(A ⊗ B ± C ⊗ D)` applied to the structured
+//!   inverse's output round-trips the input.
+
+use kfac::linalg::kron::kron_apply;
+use kfac::linalg::{Cholesky, KronPairInverse, Mat, SymEig};
+use kfac::rng::Rng;
+
+/// Seeded SPD matrix: Xᵀ X / n + diag·I with a tall X.
+fn random_spd(n: usize, diag: f64, rng: &mut Rng) -> Mat {
+    let x = Mat::randn(n + 4, n, 1.0, rng);
+    x.matmul_tn(&x).scale(1.0 / n as f64).add_diag(diag)
+}
+
+/// Size sweep: every power-of-two boundary plus seeded odd sizes in 1..64.
+fn sizes(rng: &mut Rng) -> Vec<usize> {
+    let mut s = vec![1, 2, 3, 4, 5, 7, 8, 13, 16, 24, 25, 31, 32, 33, 48, 64];
+    for _ in 0..8 {
+        s.push(1 + rng.below(64));
+    }
+    s
+}
+
+#[test]
+fn cholesky_reconstructs_l_lt() {
+    let mut rng = Rng::new(11);
+    for n in sizes(&mut rng) {
+        let a = random_spd(n, 0.5, &mut rng);
+        let c = Cholesky::new(&a).expect("SPD input must factor");
+        let rec = c.l.matmul_nt(&c.l);
+        let err = rec.sub(&a).max_abs() / (1.0 + a.max_abs());
+        assert!(err < 1e-10, "n={n}: LLᵀ reconstruction err {err}");
+        // L must be lower-triangular with positive diagonal
+        for r in 0..n {
+            assert!(c.l.at(r, r) > 0.0, "n={n}: nonpositive pivot at {r}");
+            for col in (r + 1)..n {
+                assert_eq!(c.l.at(r, col), 0.0, "n={n}: L not lower-triangular");
+            }
+        }
+    }
+}
+
+#[test]
+fn cholesky_solve_roundtrips() {
+    let mut rng = Rng::new(12);
+    for n in sizes(&mut rng) {
+        let a = random_spd(n, 0.5, &mut rng);
+        let c = Cholesky::new(&a).unwrap();
+        let b = Mat::randn(n, 3, 1.0, &mut rng);
+        let x = c.solve(&b);
+        let resid = a.matmul(&x).sub(&b).max_abs();
+        assert!(resid < 1e-8 * (1.0 + b.max_abs()), "n={n}: residual {resid}");
+    }
+}
+
+#[test]
+fn symeig_reconstructs_and_is_orthogonal() {
+    let mut rng = Rng::new(13);
+    for n in sizes(&mut rng) {
+        // symmetric (not necessarily definite) input exercises both the
+        // Jacobi (n ≤ 24) and the tred2/tql2 path (n > 24)
+        let a = Mat::randn(n, n, 1.0, &mut rng).symmetrize();
+        let e = SymEig::new(&a);
+        let rec_err = e.reconstruct().sub(&a).max_abs() / (1.0 + a.max_abs());
+        assert!(rec_err < 1e-9, "n={n}: QΛQᵀ reconstruction err {rec_err}");
+        let orth = e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs();
+        assert!(orth < 1e-9, "n={n}: QᵀQ − I = {orth}");
+        // ascending spectrum, matching trace
+        for i in 1..n {
+            assert!(e.w[i] >= e.w[i - 1], "n={n}: spectrum not sorted");
+        }
+        let tr: f64 = e.w.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-8 * (1.0 + a.trace().abs()), "n={n}: trace");
+    }
+}
+
+#[test]
+fn kron_pair_inverse_roundtrips_sum() {
+    let mut rng = Rng::new(14);
+    for seed in 0..10u64 {
+        let mut sr = Rng::new(1000 + seed);
+        let na = 1 + sr.below(64);
+        let nb = 1 + sr.below(64);
+        let a = random_spd(na, 0.8, &mut rng);
+        let b = random_spd(nb, 0.8, &mut rng);
+        let c = random_spd(na, 0.1, &mut rng);
+        let d = random_spd(nb, 0.1, &mut rng);
+        let kpi = KronPairInverse::new(&a, &b, &c, &d, 1.0);
+        let x = Mat::randn(nb, na, 1.0, &mut rng);
+        let y = kpi.apply(&x);
+        // (A⊗B + C⊗D) y must give back x, applied via the vec-trick
+        let back = kron_apply(&a, &b, &y).add(&kron_apply(&c, &d, &y));
+        let err = back.sub(&x).max_abs() / (1.0 + x.max_abs());
+        assert!(err < 1e-6, "seed={seed} na={na} nb={nb}: roundtrip err {err}");
+    }
+}
+
+#[test]
+fn kron_pair_inverse_roundtrips_difference() {
+    let mut rng = Rng::new(15);
+    for seed in 0..10u64 {
+        let mut sr = Rng::new(2000 + seed);
+        let na = 1 + sr.below(64);
+        let nb = 1 + sr.below(64);
+        let a = random_spd(na, 1.0, &mut rng);
+        let b = random_spd(nb, 1.0, &mut rng);
+        // C ⊗ D a strict contraction of A ⊗ B keeps the difference PD
+        let c = a.scale(0.3);
+        let d = b.scale(0.4);
+        let kpi = KronPairInverse::new(&a, &b, &c, &d, -1.0);
+        let x = Mat::randn(nb, na, 1.0, &mut rng);
+        let y = kpi.apply(&x);
+        let back = kron_apply(&a, &b, &y).sub(&kron_apply(&c, &d, &y));
+        let err = back.sub(&x).max_abs() / (1.0 + x.max_abs());
+        assert!(err < 1e-6, "seed={seed} na={na} nb={nb}: roundtrip err {err}");
+    }
+}

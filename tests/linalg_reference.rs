@@ -1,0 +1,145 @@
+//! GEMM property tests: every transpose variant of the packed blocked
+//! kernel must agree with a trivially-correct triple-loop reference on
+//! ~50 seeded random shapes — including degenerate (m=1, k=1, n=1) and
+//! ragged shapes that are not multiples of the MR/NR/MC/KC/NC tile
+//! sizes — to 1e-12 *relative Frobenius* error.
+
+use kfac::linalg::Mat;
+use kfac::rng::Rng;
+
+/// Triple-loop ijp reference GEMM.
+fn reference_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0;
+            for p in 0..a.cols {
+                s += a.at(i, p) * b.at(p, j);
+            }
+            c.set(i, j, s);
+        }
+    }
+    c
+}
+
+/// ‖got − want‖_F / ‖want‖_F.
+fn rel_frob(got: &Mat, want: &Mat) -> f64 {
+    got.sub(want).frob_norm() / want.frob_norm().max(1e-300)
+}
+
+/// The shape set: fixed edge/tile-boundary cases plus seeded random
+/// draws, ~50 total. Random dims reach past the 4×8 micro-tile, the
+/// 128-row block and (via the fixed entries) the 256-deep block.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        // degenerate extents
+        (1, 1, 1),
+        (1, 1, 17),
+        (1, 17, 1),
+        (17, 1, 1),
+        (1, 40, 64),
+        (64, 40, 1),
+        (40, 1, 64),
+        // micro-tile boundaries (MR = 4, NR = 8)
+        (3, 5, 7),
+        (4, 5, 8),
+        (5, 5, 9),
+        (8, 8, 16),
+        // block boundaries (MC = 128, KC = 256) and ragged neighbours
+        (127, 63, 65),
+        (128, 64, 64),
+        (129, 65, 63),
+        (96, 256, 40),
+        (96, 257, 40),
+        (130, 300, 66),
+        // K-FAC-shaped: batch × (layer+1) covariance and forward passes
+        (257, 200, 257),
+        (300, 101, 41),
+    ];
+    let mut rng = Rng::new(0xC0FFEE);
+    while shapes.len() < 50 {
+        shapes.push((1 + rng.below(140), 1 + rng.below(140), 1 + rng.below(140)));
+    }
+    shapes
+}
+
+#[test]
+fn matmul_matches_reference_on_many_shapes() {
+    let mut rng = Rng::new(1);
+    for (idx, &(m, k, n)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = reference_matmul(&a, &b);
+        let err = rel_frob(&a.matmul(&b), &want);
+        assert!(err < 1e-12, "shape #{idx} ({m},{k},{n}): rel frob {err}");
+    }
+}
+
+#[test]
+fn matmul_tn_matches_reference_on_many_shapes() {
+    let mut rng = Rng::new(2);
+    for (idx, &(m, k, n)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = reference_matmul(&a, &b);
+        // at is k×m, so atᵀ b = a b
+        let at = a.transpose();
+        let err = rel_frob(&at.matmul_tn(&b), &want);
+        assert!(err < 1e-12, "shape #{idx} ({m},{k},{n}): rel frob {err}");
+    }
+}
+
+#[test]
+fn matmul_nt_matches_reference_on_many_shapes() {
+    let mut rng = Rng::new(3);
+    for (idx, &(m, k, n)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = reference_matmul(&a, &b);
+        // bt is n×k, so a btᵀ = a b
+        let bt = b.transpose();
+        let err = rel_frob(&a.matmul_nt(&bt), &want);
+        assert!(err < 1e-12, "shape #{idx} ({m},{k},{n}): rel frob {err}");
+    }
+}
+
+#[test]
+fn matvec_matches_reference_on_many_shapes() {
+    let mut rng = Rng::new(4);
+    for (idx, &(m, k, _)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let want = reference_matmul(&a, &Mat::from_vec(k, 1, v.clone()));
+        let got = Mat::from_vec(m, 1, a.matvec(&v));
+        let err = rel_frob(&got, &want);
+        assert!(err < 1e-12, "shape #{idx} ({m},{k}): rel frob {err}");
+    }
+}
+
+#[test]
+fn variants_agree_with_each_other() {
+    // A ᵀ-consistency triangle on one blocked-path shape: NN, TN and NT
+    // must produce bitwise-comparable results within summation roundoff.
+    let mut rng = Rng::new(5);
+    let (m, k, n) = (150, 270, 90);
+    let a = Mat::randn(m, k, 1.0, &mut rng);
+    let b = Mat::randn(k, n, 1.0, &mut rng);
+    let nn = a.matmul(&b);
+    let tn = a.transpose().matmul_tn(&b);
+    let nt = a.matmul_nt(&b.transpose());
+    assert!(rel_frob(&tn, &nn) < 1e-13);
+    assert!(rel_frob(&nt, &nn) < 1e-13);
+}
+
+#[test]
+fn zero_and_identity_special_cases() {
+    let mut rng = Rng::new(6);
+    let a = Mat::randn(140, 260, 1.0, &mut rng);
+    // A · I = A (blocked path: 2·140·260·260 flops)
+    let id = Mat::eye(260);
+    assert!(rel_frob(&a.matmul(&id), &a) < 1e-15);
+    // A · 0 = 0
+    let z = Mat::zeros(260, 64);
+    assert_eq!(a.matmul(&z).max_abs(), 0.0);
+}
