@@ -5,9 +5,9 @@
 
 use kfac::backend::{ModelBackend, RustBackend};
 use kfac::bench::{bench, default_budget};
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 use kfac::fisher::stats::KfacStats;
-use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
+use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, TridiagInverse};
 use kfac::rng::Rng;
 
 fn main() {
@@ -35,14 +35,21 @@ fn main() {
     bench("tridiag_build(mnist_ae)", budget, || {
         std::hint::black_box(TridiagInverse::build(&stats.s, gamma));
     });
+    bench("ekfac_build(mnist_ae)", budget, || {
+        std::hint::black_box(EkfacInverse::build(&stats.s, gamma));
+    });
 
     let bd = BlockDiagInverse::build(&stats.s, gamma);
     let tri = TridiagInverse::build(&stats.s, gamma);
+    let ek = EkfacInverse::build(&stats.s, gamma);
     bench("blockdiag_apply(mnist_ae)", budget, || {
         std::hint::black_box(bd.apply(&grad));
     });
     bench("tridiag_apply(mnist_ae)", budget, || {
         std::hint::black_box(tri.apply(&grad));
+    });
+    bench("ekfac_apply(mnist_ae)", budget, || {
+        std::hint::black_box(ek.apply(&grad));
     });
 
     bench("fvp_quad_2dirs_m64", budget, || {

@@ -1,13 +1,14 @@
-//! End-to-end per-iteration benchmark: full K-FAC step (both inverse
-//! structures, with momentum) vs an SGD step, on the scaled autoencoder
-//! — the bench-form of the paper's Section-8 cost comparison.
+//! End-to-end per-iteration benchmark: full K-FAC step (every
+//! registered preconditioner, with momentum) vs an SGD step, on the
+//! scaled autoencoder — the bench-form of the paper's Section-8 cost
+//! comparison.
 
 use kfac::backend::RustBackend;
 use kfac::bench::{bench, default_budget};
 use kfac::data::mnist_like;
-use kfac::fisher::InverseKind;
+use kfac::fisher::precond;
 use kfac::nn::{Act, Arch};
-use kfac::optim::{Kfac, KfacConfig, Sgd, SgdConfig};
+use kfac::optim::{Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 
 fn main() {
@@ -16,12 +17,13 @@ fn main() {
     let ds = mnist_like::autoencoder_dataset(1000, 16, 0);
     let m = 500;
 
-    for kind in [InverseKind::BlockDiag, InverseKind::BlockTridiag] {
+    for p in [precond::block_diag(), precond::block_tridiag(), precond::ekfac()] {
+        let name = p.name().to_string();
         let mut backend = RustBackend::new(arch.clone());
         let mut params = arch.sparse_init(&mut Rng::new(1));
-        let mut opt = Kfac::new(&arch, KfacConfig { inverse: kind, ..Default::default() });
+        let mut opt = Kfac::new(&arch, KfacConfig { precond: p, ..Default::default() });
         let mut rng = Rng::new(2);
-        let r = bench(&format!("kfac_step_{}_m{m}", kind.name()), budget, || {
+        let r = bench(&format!("kfac_step_{name}_m{m}"), budget, || {
             let (x, y) = ds.minibatch(m, &mut rng);
             std::hint::black_box(opt.step(&mut backend, &mut params, &x, &y));
         });

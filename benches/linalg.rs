@@ -5,14 +5,19 @@
 //! shapes and the blocked rectangular shapes K-FAC actually produces
 //! (activation covariances `Āᵀ Ā`, layer forwards `Ā Wᵀ`, preconditioner
 //! GEMMs) — the numbers to watch when touching `linalg::gemm`.
+//!
+//! Besides the console report, results are written as JSON to
+//! `BENCH_linalg.json` (override with `KFAC_BENCH_JSON`) so CI can
+//! archive GFLOP/s baselines per commit.
 
-use kfac::bench::{bench, default_budget};
+use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
 use kfac::linalg::{chol::spd_inverse, KronPairInverse, Mat, SymEig};
 use kfac::rng::Rng;
 
 fn main() {
     let budget = default_budget();
     let mut rng = Rng::new(0);
+    let mut results: Vec<(BenchResult, Option<f64>)> = Vec::new();
 
     // ---- GEMM: all transpose variants over square + K-FAC shapes ----
     // (1000, 257, 100): batch-1000 forward through a 257→100 layer;
@@ -34,17 +39,20 @@ fn main() {
         let r = bench(&format!("matmul_{m}x{k}x{n}"), budget, || {
             std::hint::black_box(a.matmul(&b));
         });
-        r.report_throughput("GFLOP/s", flops);
+        let g = r.report_throughput("GFLOP/s", flops);
+        results.push((r, Some(g)));
 
         let r = bench(&format!("matmul_tn_{m}x{k}x{n}"), budget, || {
             std::hint::black_box(at.matmul_tn(&b));
         });
-        r.report_throughput("GFLOP/s", flops);
+        let g = r.report_throughput("GFLOP/s", flops);
+        results.push((r, Some(g)));
 
         let r = bench(&format!("matmul_nt_{m}x{k}x{n}"), budget, || {
             std::hint::black_box(a.matmul_nt(&bt));
         });
-        r.report_throughput("GFLOP/s", flops);
+        let g = r.report_throughput("GFLOP/s", flops);
+        results.push((r, Some(g)));
     }
 
     // ---- matvec (the n = 1 path) ----
@@ -55,19 +63,22 @@ fn main() {
         let r = bench(&format!("matvec_{m}x{k}"), budget, || {
             std::hint::black_box(a.matvec(&v));
         });
-        r.report_throughput("GFLOP/s", flops);
+        let g = r.report_throughput("GFLOP/s", flops);
+        results.push((r, Some(g)));
     }
 
     // ---- factor inversions / eigensolver ----
     for n in [101usize, 257, 401] {
         let x = Mat::randn(n + 8, n, 1.0, &mut rng);
         let spd = x.matmul_tn(&x).add_diag(0.5);
-        bench(&format!("spd_inverse_{n}"), budget, || {
+        let r = bench(&format!("spd_inverse_{n}"), budget, || {
             std::hint::black_box(spd_inverse(&spd));
         });
-        bench(&format!("sym_eig_{n}"), budget, || {
+        results.push((r, None));
+        let r = bench(&format!("sym_eig_{n}"), budget, || {
             std::hint::black_box(SymEig::new(&spd));
         });
+        results.push((r, None));
     }
 
     // Appendix-B structured inverse: build (amortized, every T3 iters)
@@ -80,12 +91,19 @@ fn main() {
     let b = xb.matmul_tn(&xb).add_diag(1.0);
     let c = a.scale(0.3);
     let d = b.scale(0.4);
-    bench(&format!("kron_pair_inverse_build_{na}x{nb}"), budget, || {
+    let r = bench(&format!("kron_pair_inverse_build_{na}x{nb}"), budget, || {
         std::hint::black_box(KronPairInverse::new(&a, &b, &c, &d, -1.0));
     });
+    results.push((r, None));
     let kpi = KronPairInverse::new(&a, &b, &c, &d, -1.0);
     let v = Mat::randn(nb, na, 1.0, &mut rng);
-    bench(&format!("kron_pair_inverse_apply_{na}x{nb}"), budget, || {
+    let r = bench(&format!("kron_pair_inverse_apply_{na}x{nb}"), budget, || {
         std::hint::black_box(kpi.apply(&v));
     });
+    results.push((r, None));
+
+    let path =
+        std::env::var("KFAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_linalg.json".to_string());
+    write_results_json(std::path::Path::new(&path), &results).expect("writing bench json");
+    println!("wrote {path} ({} benches)", results.len());
 }

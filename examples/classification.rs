@@ -1,57 +1,62 @@
-//! Domain example: 10-way digit classification, K-FAC vs SGD+NAG.
-//! Reproduces in miniature the paper's claim that K-FAC needs orders of
-//! magnitude fewer iterations than SGD with momentum.
+//! Domain example: 10-way digit classification, K-FAC vs SGD+NAG,
+//! both driven through the same `TrainSession` API (the optimizers are
+//! interchangeable behind the `Optimizer` trait). Reproduces in
+//! miniature the paper's claim that K-FAC needs orders of magnitude
+//! fewer iterations than SGD with momentum.
 //!
 //!     cargo run --release --example classification
 
-use kfac::backend::{ModelBackend, RustBackend};
-use kfac::data::mnist_like;
-use kfac::nn::{Act, Arch};
-use kfac::optim::{Kfac, KfacConfig, Sgd, SgdConfig};
+use kfac::coordinator::{Event, TrainSession};
 use kfac::prelude::*;
 
-fn eval(backend: &mut RustBackend, p: &Params, ds: &Dataset) -> (f64, f64) {
-    backend.eval(p, &ds.x, &ds.y)
+fn run(name: &str, ds: &Dataset, arch: &Arch, opt: Box<dyn Optimizer>) -> Params {
+    println!("== {name} ==");
+    let report = TrainSession::for_dataset(arch.clone(), ds)
+        .iters(60)
+        .schedule(BatchSchedule::Fixed(500))
+        .seed(2)
+        .eval_every(10)
+        .eval_rows(ds.len())
+        .no_polyak()
+        .params(arch.sparse_init(&mut Rng::new(1)))
+        .optimizer_boxed(opt)
+        .observer(|e| {
+            if let Event::Eval { row } = e {
+                if row.iter > 1 {
+                    println!(
+                        "iter {:>3}  loss {:.4}  error {:.2}%",
+                        row.iter,
+                        row.train_loss,
+                        100.0 * row.train_err
+                    );
+                }
+            }
+        })
+        .run();
+    report.params
 }
 
 fn main() {
-    let ds = mnist_like::classification_dataset(2000, 16, 0);
+    let ds = kfac::data::mnist_like::classification_dataset(2000, 16, 0);
     let arch = Arch::classifier(&[256, 60, 40, 10], Act::Tanh);
-    let iters = 60;
-    let batch = 500;
 
-    // --- K-FAC ---
-    let mut backend = RustBackend::new(arch.clone());
-    let mut p_kfac = arch.sparse_init(&mut Rng::new(1));
-    let mut kfac = Kfac::new(&arch, KfacConfig { lambda0: 5.0, t1: 2, ..Default::default() });
-    let mut rng = Rng::new(2);
-    println!("== K-FAC (block-tridiagonal, momentum) ==");
-    for k in 1..=iters {
-        let (x, y) = ds.minibatch(batch, &mut rng);
-        kfac.step(&mut backend, &mut p_kfac, &x, &y);
-        if k % 10 == 0 {
-            let (loss, err) = eval(&mut backend, &p_kfac, &ds);
-            println!("iter {k:>3}  loss {loss:.4}  error {:.2}%", 100.0 * err);
-        }
-    }
+    let p_kfac = run(
+        "K-FAC (block-tridiagonal, momentum)",
+        &ds,
+        &arch,
+        Box::new(Kfac::new(&arch, KfacConfig { lambda0: 5.0, t1: 2, ..Default::default() })),
+    );
+    let p_sgd = run(
+        "SGD + Nesterov momentum",
+        &ds,
+        &arch,
+        Box::new(Sgd::new(SgdConfig { lr: 0.05, mu_max: 0.99, ..Default::default() })),
+    );
 
-    // --- SGD + NAG baseline (same iteration budget) ---
-    let mut p_sgd = arch.sparse_init(&mut Rng::new(1));
-    let mut sgd = Sgd::new(SgdConfig { lr: 0.05, mu_max: 0.99, ..Default::default() });
-    let mut rng = Rng::new(2);
-    println!("== SGD + Nesterov momentum ==");
-    for k in 1..=iters {
-        let (x, y) = ds.minibatch(batch, &mut rng);
-        sgd.step(&mut backend, &mut p_sgd, &x, &y);
-        if k % 10 == 0 {
-            let (loss, err) = eval(&mut backend, &p_sgd, &ds);
-            println!("iter {k:>3}  loss {loss:.4}  error {:.2}%", 100.0 * err);
-        }
-    }
-
-    let (_, e_k) = eval(&mut backend, &p_kfac, &ds);
-    let (_, e_s) = eval(&mut backend, &p_sgd, &ds);
-    println!("\nfinal training error after {iters} iterations:");
+    let mut backend = RustBackend::new(arch);
+    let (_, e_k) = backend.eval(&p_kfac, &ds.x, &ds.y);
+    let (_, e_s) = backend.eval(&p_sgd, &ds.x, &ds.y);
+    println!("\nfinal training error after 60 iterations:");
     println!("  K-FAC : {:.2}%", 100.0 * e_k);
     println!("  SGD   : {:.2}%", 100.0 * e_s);
 }

@@ -8,7 +8,7 @@
 use kfac::experiments::partially_train;
 use kfac::fisher::exact::ExactBlocks;
 use kfac::linalg::Mat;
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 
 fn print_block_map(title: &str, m: &Mat) {
     println!("\n{title} (block-average |entries|, layers 2-5):");

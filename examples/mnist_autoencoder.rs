@@ -8,11 +8,13 @@
 //!
 //! Flags: --iters N (default 120) --data N (default 4000) --sgd
 //!        --quick (tiny run for smoke-testing)
+//!        --checkpoint PATH --checkpoint-every N --resume PATH
 
 use kfac::backend::{ModelBackend, PjrtBackend};
 use kfac::coordinator::cli::Args;
-use kfac::coordinator::trainer::{log_to_csv, Optimizer, Problem, TrainConfig, Trainer};
-use kfac::optim::{BatchSchedule, KfacConfig, SgdConfig};
+use kfac::coordinator::{log_to_csv, TrainSession};
+use kfac::coordinator::Problem;
+use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 use std::path::PathBuf;
 
@@ -35,46 +37,56 @@ fn main() {
     });
     assert_eq!(backend.arch().widths, arch.widths);
 
-    let cfg = TrainConfig {
-        iters,
-        // paper §13: m_k = min(m₁ exp((k−1)/b), |S|), saturating at ~¾ of
-        // the run
-        schedule: BatchSchedule::exponential_reaching(
-            250.min(n_data),
-            n_data,
-            (iters * 3 / 4).max(2),
-        ),
-        seed: 0,
-        eval_every: 5,
-        eval_rows: 1000.min(n_data),
-        polyak: Some(0.99),
-    };
-
-    let (optimizer, tag) = if args.get_flag("sgd") {
+    let (optimizer, tag): (Box<dyn Optimizer>, &str) = if args.get_flag("sgd") {
         (
-            Optimizer::Sgd(SgdConfig { lr: args.get_f64("lr", 0.02), ..Default::default() }),
+            Box::new(Sgd::new(SgdConfig { lr: args.get_f64("lr", 0.02), ..Default::default() })),
             "e2e_mnist_sgd",
         )
     } else {
         (
-            Optimizer::Kfac(KfacConfig {
-                lambda0: args.get_f64("lambda0", 150.0),
-                ..Default::default()
-            }),
+            Box::new(Kfac::new(
+                &arch,
+                KfacConfig { lambda0: args.get_f64("lambda0", 150.0), ..Default::default() },
+            )),
             "e2e_mnist_kfac",
         )
     };
 
     println!("# training ({tag})…");
-    let mut params = arch.sparse_init(&mut Rng::new(1));
-    let log = Trainer::new(cfg, &ds).run(&mut backend, &mut params, optimizer, true);
+    let mut session = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(iters)
+        // paper §13: m_k = min(m₁ exp((k−1)/b), |S|), saturating at ~¾ of
+        // the run
+        .schedule(BatchSchedule::exponential_reaching(
+            250.min(n_data),
+            n_data,
+            (iters * 3 / 4).max(2),
+        ))
+        .seed(0)
+        .eval_every(5)
+        .eval_rows(1000.min(n_data))
+        .polyak(0.99)
+        .params(arch.sparse_init(&mut Rng::new(1)))
+        .optimizer_boxed(optimizer)
+        .backend(&mut backend)
+        .verbose(true);
+    if let Some(path) = args.get("checkpoint") {
+        session = session.checkpoint_every(args.get_usize("checkpoint-every", 25), path);
+    }
+    if let Some(path) = args.get("resume") {
+        session = session.resume_from(path);
+    }
+    let report = session.run();
 
     let out = PathBuf::from(format!("results/{tag}.csv"));
-    log_to_csv(&out, &log).expect("writing csv");
-    let last = log.last().unwrap();
-    println!(
-        "# done: {} iters, {:.1}s train time, final reconstruction error {:.4}",
-        last.iter, last.time_s, last.train_err
-    );
+    log_to_csv(&out, &report.log).expect("writing csv");
+    match report.log.last() {
+        Some(last) => println!(
+            "# done: {} iters, {:.1}s train time, final reconstruction error {:.4}",
+            last.iter, last.time_s, last.train_err
+        ),
+        // e.g. --resume from a checkpoint already at/past --iters
+        None => println!("# done: no iterations to run"),
+    }
     println!("# loss curve written to {}", out.display());
 }

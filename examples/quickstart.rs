@@ -1,7 +1,10 @@
-//! Quickstart: train a small deep autoencoder with K-FAC in ~30 lines.
+//! Quickstart: train a small deep autoencoder with K-FAC through the
+//! `TrainSession` builder in ~30 lines — the canonical snippet for the
+//! README.
 //!
 //!     cargo run --release --example quickstart
 
+use kfac::coordinator::{Event, TrainSession};
 use kfac::prelude::*;
 
 fn main() {
@@ -10,28 +13,42 @@ fn main() {
 
     // 2. Model: 256-64-16-64-256 tanh autoencoder with sigmoid-CE output.
     let arch = Arch::autoencoder(&[256, 64, 16, 64, 256], Act::Tanh);
-    let mut backend = RustBackend::new(arch.clone());
-    let mut params = arch.sparse_init(&mut Rng::new(1));
 
     // 3. Optimizer: K-FAC with the paper's defaults (block-tridiagonal
-    //    inverse, momentum, adaptive λ/γ damping). λ₀ scaled to the
-    //    short run.
-    let mut opt = Kfac::new(&arch, KfacConfig { lambda0: 5.0, ..Default::default() });
+    //    preconditioner, momentum, adaptive λ/γ damping); λ₀ scaled to
+    //    the short run. Swap in `KfacConfig::block_diag()` or
+    //    `KfacConfig::ekfac()` for the other curvature structures, or
+    //    `Sgd::new(..)` for the baseline — anything implementing
+    //    `Optimizer` plugs in.
+    let opt = Kfac::new(&arch, KfacConfig { lambda0: 5.0, ..Default::default() });
 
-    // 4. Train.
-    let mut rng = Rng::new(2);
-    for k in 1..=60 {
-        let (x, y) = ds.minibatch(500, &mut rng);
-        let info = opt.step(&mut backend, &mut params, &x, &y);
-        if k % 10 == 0 || k == 1 {
-            println!(
-                "iter {k:>3}  loss {:.4}  |δ| {:.3e}  λ {:.2}  γ {:.3}",
-                info.loss, info.delta_norm, info.lambda, info.gamma
-            );
-        }
-    }
+    // 4. Train: the session owns the loop, Polyak averaging, metric
+    //    streaming, and versioned checkpoints (delete the checkpoint
+    //    line or add `.resume_from(..)` to continue a previous run).
+    let report = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(60)
+        .schedule(BatchSchedule::Fixed(500))
+        .seed(1)
+        .optimizer(opt)
+        .polyak(0.99)
+        .checkpoint_every(30, "results/quickstart.ckpt")
+        .observer(|e| {
+            if let Event::Step { iter, info, .. } = e {
+                if *iter == 1 || iter % 10 == 0 {
+                    println!(
+                        "iter {iter:>3}  loss {:.4}  |δ| {:.3e}  λ {:.2}  γ {:.3}",
+                        info.loss,
+                        info.delta_norm.unwrap_or(f64::NAN),
+                        info.lambda.unwrap_or(f64::NAN),
+                        info.gamma.unwrap_or(f64::NAN)
+                    );
+                }
+            }
+        })
+        .run();
 
-    // 5. Evaluate reconstruction error.
-    let (loss, err) = backend.eval(&params, &ds.x, &ds.y);
+    // 5. Evaluate reconstruction error on the final parameters.
+    let mut backend = RustBackend::new(arch);
+    let (loss, err) = backend.eval(&report.params, &ds.x, &ds.y);
     println!("final: train loss {loss:.4}, reconstruction error {err:.4}");
 }

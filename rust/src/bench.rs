@@ -47,17 +47,62 @@ impl BenchResult {
         );
     }
 
-    /// Report with a derived throughput (e.g. GFLOP/s).
-    pub fn report_throughput(&self, unit: &str, per_iter: f64) {
+    /// Report with a derived throughput (e.g. GFLOP/s); returns the
+    /// rate so callers can record it (see [`write_results_json`]).
+    pub fn report_throughput(&self, unit: &str, per_iter: f64) -> f64 {
+        let rate = per_iter / self.median_s / 1e9;
         println!(
-            "bench {:<40} iters={:<6} mean={:>12} median={:>12} {:>10.3} {unit}",
+            "bench {:<40} iters={:<6} mean={:>12} median={:>12} {rate:>10.3} {unit}",
             self.name,
             self.iters,
             fmt_time(self.mean_s),
             fmt_time(self.median_s),
-            per_iter / self.median_s / 1e9,
         );
+        rate
     }
+}
+
+/// Write bench results as JSON — the stable machine-readable record CI
+/// captures (e.g. `BENCH_linalg.json`) so GFLOP/s baselines can be
+/// tracked across commits. `gflops` is `null` for benches without a
+/// meaningful flop count.
+pub fn write_results_json(
+    path: &std::path::Path,
+    results: &[(BenchResult, Option<f64>)],
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    // exponent form keeps full precision for ns-scale timings and is
+    // still valid JSON ("1.5e-9")
+    let json_num = |v: f64| if v.is_finite() { format!("{v:e}") } else { "null".to_string() };
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"threads\": {},", crate::par::num_threads())?;
+    writeln!(f, "  \"benches\": [")?;
+    for (i, (r, gflops)) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        let g = match gflops {
+            Some(v) if v.is_finite() => format!("{v:.3}"),
+            _ => "null".to_string(),
+        };
+        writeln!(
+            f,
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {}, \"median_s\": {}, \"stddev_s\": {}, \"gflops\": {}}}{sep}",
+            r.name,
+            r.iters,
+            json_num(r.mean_s),
+            json_num(r.median_s),
+            json_num(r.stddev_s),
+            g
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
 }
 
 fn fmt_time(s: f64) -> String {
@@ -121,6 +166,35 @@ mod tests {
         });
         assert!(r.iters >= 3);
         assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn results_json_is_valid_json() {
+        let r1 = BenchResult {
+            name: "matmul_256x256x256".into(),
+            iters: 5,
+            mean_s: 1.5e-3,
+            median_s: 1.4e-3,
+            stddev_s: 1e-4,
+        };
+        let r2 = BenchResult {
+            name: "sym_eig_101".into(),
+            iters: 3,
+            mean_s: 2e-2,
+            median_s: 2e-2,
+            stddev_s: 0.0,
+        };
+        let path = std::env::temp_dir().join("kfac_bench_json/BENCH_test.json");
+        write_results_json(&path, &[(r1, Some(23.9)), (r2, None)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        let benches = j.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").unwrap().as_str(), Some("matmul_256x256x256"));
+        assert_eq!(benches[0].get("gflops").unwrap().as_f64(), Some(23.9));
+        assert_eq!(benches[1].get("gflops"), Some(&crate::util::json::Json::Null));
+        assert!(j.get("threads").unwrap().as_usize().unwrap() >= 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

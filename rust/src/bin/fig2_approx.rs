@@ -9,7 +9,7 @@
 //!
 //! Output: block-norm maps + scalars; CSV in results/fig2_blocks.csv.
 
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 use kfac::experiments::{partially_train, results_dir, scaled};
 use kfac::fisher::exact::ExactBlocks;
 use kfac::linalg::Mat;

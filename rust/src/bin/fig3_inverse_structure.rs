@@ -6,7 +6,7 @@
 //! Output: block maps for F̃ and F̃⁻¹, the tridiagonal-dominance ratio,
 //! and results/fig3_inverse_blocks.csv.
 
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 use kfac::experiments::{partially_train, results_dir, scaled};
 use kfac::fisher::exact::ExactBlocks;
 use kfac::linalg::Mat;

@@ -7,7 +7,7 @@
 //! Output: per-variant error maps + Frobenius summary;
 //! results/fig5_forward.csv.
 
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 use kfac::experiments::{partially_train, results_dir, scaled};
 use kfac::fisher::exact::ExactBlocks;
 use kfac::util::write_csv;

@@ -7,7 +7,7 @@
 //! Output: per-variant inverse-error maps + summary;
 //! results/fig6_inverse.csv.
 
-use kfac::coordinator::trainer::Problem;
+use kfac::coordinator::Problem;
 use kfac::experiments::{partially_train, results_dir, scaled};
 use kfac::fisher::exact::ExactBlocks;
 use kfac::util::write_csv;

@@ -17,7 +17,7 @@ use kfac::experiments::{results_dir, scaled};
 use kfac::fisher::{FisherInverse, TridiagInverse};
 use kfac::linalg::Mat;
 use kfac::nn::{Act, Arch, Params};
-use kfac::optim::{Kfac, KfacConfig};
+use kfac::optim::{Kfac, KfacConfig, Optimizer};
 use kfac::rng::Rng;
 use kfac::util::write_csv;
 
@@ -45,7 +45,7 @@ fn main() {
         y = yy;
         let info = opt.step(&mut backend, &mut params, &x, &y);
         if k % 20 == 0 {
-            println!("#   iter {k}: loss {:.4} λ {:.2}", info.loss, info.lambda);
+            println!("#   iter {k}: loss {:.4} λ {:.2}", info.loss, info.lambda.unwrap_or(f64::NAN));
         }
     }
 

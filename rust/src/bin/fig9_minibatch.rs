@@ -10,10 +10,9 @@
 //! Uses the scaled 16×16 autoencoder (rust backend) so the sweep runs
 //! in minutes. Output: per-run CSVs + a summary table.
 
-use kfac::coordinator::trainer::TrainConfig;
 use kfac::data::mnist_like;
-use kfac::experiments::{cached_run, results_dir, run_variant_with_backend, scaled, Variant};
-use kfac::fisher::InverseKind;
+use kfac::experiments::{cached_run, results_dir, run_variant_with_backend, scaled, RunCfg, Variant};
+use kfac::fisher::precond;
 use kfac::nn::{Act, Arch};
 use kfac::optim::BatchSchedule;
 use kfac::util::write_csv;
@@ -32,11 +31,15 @@ fn main() {
         "variant", "m", "final_err", "err@iter_half", "cases_total"
     );
     let variants: Vec<(&str, fn() -> Variant)> = vec![
-        ("kfac_tridiag_mom", || Variant::kfac("kfac", InverseKind::BlockTridiag, true, 5.0)),
-        ("kfac_tridiag_nomom", || {
-            Variant::kfac("kfac_nm", InverseKind::BlockTridiag, false, 5.0)
+        ("kfac_tridiag_mom", || {
+            Variant::kfac("kfac", precond::block_tridiag(), true, 5.0)
         }),
-        ("kfac_blkdiag_mom", || Variant::kfac("kfac_bd", InverseKind::BlockDiag, true, 5.0)),
+        ("kfac_tridiag_nomom", || {
+            Variant::kfac("kfac_nm", precond::block_tridiag(), false, 5.0)
+        }),
+        ("kfac_blkdiag_mom", || {
+            Variant::kfac("kfac_bd", precond::block_diag(), true, 5.0)
+        }),
         ("sgd_nag", || Variant::sgd("sgd", 0.02, 0.99)),
     ];
     for (vname, mk) in variants {
@@ -45,17 +48,17 @@ fn main() {
                 continue;
             }
             let tag = format!("fig9_{vname}_m{m}");
-            let cfg = TrainConfig {
+            let cfg = RunCfg {
                 iters,
                 schedule: BatchSchedule::Fixed(m),
-                seed: 0,
                 eval_every: 5,
                 eval_rows: 1000.min(n),
-                polyak: Some(0.99),
+                seed: 0,
+                init_seed: 1,
             };
             let log = cached_run(&tag, || {
                 let mut backend = kfac::backend::RustBackend::new(arch.clone());
-                run_variant_with_backend(&mut backend, &ds, &cfg, mk(), 1, &tag)
+                run_variant_with_backend(&mut backend, &ds, &cfg, mk(), &tag)
             });
             let last = log.last().unwrap();
             let half = log

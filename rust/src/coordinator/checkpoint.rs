@@ -1,0 +1,378 @@
+//! Versioned training checkpoints: parameters + full optimizer state +
+//! trainer state (RNG stream, Polyak average, counters), serialized to
+//! a self-describing little-endian binary format.
+//!
+//! Layout (version 1):
+//!
+//! ```text
+//! magic    8 bytes  "KFACCKPT"
+//! version  u32
+//! iter     u64      cases f64    time_s f64
+//! rng      4×u64    + optional f64 (Box–Muller spare)
+//! params   mat list
+//! polyak   optional (xi f64, optional mat list)
+//! opt      kind string, then tagged entries:
+//!            tag 0 = scalar f64, tag 1 = mat list, tag 2 = string
+//! ```
+//!
+//! Strings are `u64` length + UTF-8 bytes; matrices are `u64 rows`,
+//! `u64 cols`, then row-major f64 bits; optionals are a `u8` presence
+//! flag. Every f64 is stored as its exact bit pattern, so a resumed run
+//! continues the saved trajectory bit-for-bit.
+
+use crate::linalg::Mat;
+use crate::nn::Params;
+use crate::optim::{OptState, StateVal};
+use std::io::Write;
+use std::path::Path;
+
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFACCKPT";
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// A full training snapshot.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub version: u32,
+    /// Iterations completed when the snapshot was taken.
+    pub iter: usize,
+    /// Cumulative training cases processed.
+    pub cases: f64,
+    /// Cumulative optimizer wall-clock (excludes evaluation).
+    pub time_s: f64,
+    /// Mini-batch RNG state (xoshiro words + Box–Muller spare).
+    pub rng_words: [u64; 4],
+    pub rng_spare: Option<f64>,
+    /// Network parameters.
+    pub params: Params,
+    /// Polyak averager: (ξ, averaged parameters if any updates were
+    /// absorbed). `None` when averaging was disabled.
+    pub polyak: Option<(f64, Option<Params>)>,
+    /// Full optimizer state.
+    pub opt: OptState,
+}
+
+// ---------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &Mat) {
+    put_u64(out, m.rows as u64);
+    put_u64(out, m.cols as u64);
+    for &v in &m.data {
+        put_f64(out, v);
+    }
+}
+
+fn put_mats(out: &mut Vec<u8>, ms: &[Mat]) {
+    put_u64(out, ms.len() as u64);
+    for m in ms {
+        put_mat(out, m);
+    }
+}
+
+/// Serialize a checkpoint to bytes.
+pub fn to_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(CHECKPOINT_MAGIC);
+    put_u32(&mut out, ck.version);
+    put_u64(&mut out, ck.iter as u64);
+    put_f64(&mut out, ck.cases);
+    put_f64(&mut out, ck.time_s);
+    for w in ck.rng_words {
+        put_u64(&mut out, w);
+    }
+    match ck.rng_spare {
+        Some(v) => {
+            out.push(1);
+            put_f64(&mut out, v);
+        }
+        None => out.push(0),
+    }
+    put_mats(&mut out, &ck.params.0);
+    match &ck.polyak {
+        Some((xi, avg)) => {
+            out.push(1);
+            put_f64(&mut out, *xi);
+            match avg {
+                Some(p) => {
+                    out.push(1);
+                    put_mats(&mut out, &p.0);
+                }
+                None => out.push(0),
+            }
+        }
+        None => out.push(0),
+    }
+    put_str(&mut out, &ck.opt.kind);
+    put_u64(&mut out, ck.opt.entries.len() as u64);
+    for (key, val) in &ck.opt.entries {
+        put_str(&mut out, key);
+        match val {
+            StateVal::Scalar(v) => {
+                out.push(0);
+                put_f64(&mut out, *v);
+            }
+            StateVal::Mats(ms) => {
+                out.push(1);
+                put_mats(&mut out, ms);
+            }
+            StateVal::Str(s) => {
+                out.push(2);
+                put_str(&mut out, s);
+            }
+        }
+    }
+    out
+}
+
+/// Write a checkpoint, creating parent directories.
+pub fn save(path: &Path, ck: &Checkpoint) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    // write-then-rename so a crash mid-write never corrupts the
+    // previous checkpoint
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&to_bytes(ck))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+// ---------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.i + n > self.b.len() {
+            return Err(format!(
+                "checkpoint truncated: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        // sanity bound: no field can be longer than the file itself
+        if n > self.b.len() {
+            return Err(format!("checkpoint corrupt: {what} length {n} exceeds file size"));
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self, what: &str) -> Result<String, String> {
+        let n = self.len(what)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| format!("checkpoint corrupt: {what} utf8"))
+    }
+
+    fn mat(&mut self) -> Result<Mat, String> {
+        let rows = self.len("mat rows")?;
+        let cols = self.len("mat cols")?;
+        let n = rows
+            .checked_mul(cols)
+            .filter(|&n| n.checked_mul(8).is_some_and(|b| self.i + b <= self.b.len()))
+            .ok_or_else(|| format!("checkpoint corrupt: mat {rows}x{cols} too large"))?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn mats(&mut self) -> Result<Vec<Mat>, String> {
+        let n = self.len("mat count")?;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            out.push(self.mat()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a checkpoint from bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(8)? != CHECKPOINT_MAGIC {
+        return Err("not a kfac checkpoint (bad magic)".to_string());
+    }
+    let version = r.u32()?;
+    if version != CHECKPOINT_VERSION {
+        return Err(format!(
+            "unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+        ));
+    }
+    let iter = r.u64()? as usize;
+    let cases = r.f64()?;
+    let time_s = r.f64()?;
+    let rng_words = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let rng_spare = if r.u8()? == 1 { Some(r.f64()?) } else { None };
+    let params = Params(r.mats()?);
+    let polyak = if r.u8()? == 1 {
+        let xi = r.f64()?;
+        let avg = if r.u8()? == 1 { Some(Params(r.mats()?)) } else { None };
+        Some((xi, avg))
+    } else {
+        None
+    };
+    let kind = r.string("opt kind")?;
+    let n_entries = r.len("opt entries")?;
+    let mut opt = OptState::new(&kind);
+    for _ in 0..n_entries {
+        let key = r.string("opt key")?;
+        match r.u8()? {
+            0 => {
+                let v = r.f64()?;
+                opt.set_scalar(&key, v);
+            }
+            1 => {
+                let ms = r.mats()?;
+                opt.set_mats(&key, ms);
+            }
+            2 => {
+                let s = r.string("opt str value")?;
+                opt.set_str(&key, &s);
+            }
+            t => return Err(format!("checkpoint corrupt: unknown state tag {t}")),
+        }
+    }
+    if r.i != bytes.len() {
+        return Err(format!("checkpoint corrupt: {} trailing bytes", bytes.len() - r.i));
+    }
+    Ok(Checkpoint { version, iter, cases, time_s, rng_words, rng_spare, params, polyak, opt })
+}
+
+/// Read a checkpoint from disk.
+pub fn load(path: &Path) -> Result<Checkpoint, String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("reading checkpoint {}: {e}", path.display()))?;
+    from_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut opt = OptState::new("kfac");
+        opt.set_scalar("k", 12.0);
+        opt.set_scalar("lambda", 3.5e-2);
+        opt.set_str("precond", "blktridiag");
+        opt.set_mats("stats_aa", vec![Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 5.0])]);
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            iter: 12,
+            cases: 6144.0,
+            time_s: 1.25,
+            rng_words: [1, u64::MAX, 42, 7],
+            rng_spare: Some(-0.321),
+            params: Params(vec![Mat::from_vec(1, 3, vec![0.5, -0.25, 1e-300])]),
+            polyak: Some((0.99, Some(Params(vec![Mat::from_vec(1, 3, vec![0.4, -0.2, 0.0])])))),
+            opt,
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly() {
+        let ck = sample();
+        let bytes = to_bytes(&ck);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.iter, ck.iter);
+        assert_eq!(back.cases.to_bits(), ck.cases.to_bits());
+        assert_eq!(back.rng_words, ck.rng_words);
+        assert_eq!(back.rng_spare.unwrap().to_bits(), ck.rng_spare.unwrap().to_bits());
+        assert!(back.params == ck.params);
+        let (xi, avg) = back.polyak.unwrap();
+        assert_eq!(xi, 0.99);
+        assert!(avg.unwrap() == ck.polyak.clone().unwrap().1.unwrap());
+        assert_eq!(back.opt, ck.opt);
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let ck = sample();
+        let path = std::env::temp_dir().join("kfac_ckpt_test/roundtrip.ckpt");
+        save(&path, &ck).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.opt, ck.opt);
+        assert!(back.params == ck.params);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn absent_options_roundtrip() {
+        let mut ck = sample();
+        ck.rng_spare = None;
+        ck.polyak = None;
+        let back = from_bytes(&to_bytes(&ck)).unwrap();
+        assert!(back.rng_spare.is_none());
+        assert!(back.polyak.is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_bytes(b"").is_err());
+        assert!(from_bytes(b"NOTKFACX________").is_err());
+        let mut bytes = to_bytes(&sample());
+        // version bump
+        bytes[8] = 99;
+        assert!(from_bytes(&bytes).unwrap_err().contains("version"));
+        // truncation
+        let ok = to_bytes(&sample());
+        assert!(from_bytes(&ok[..ok.len() - 3]).is_err());
+        // trailing garbage
+        let mut extended = to_bytes(&sample());
+        extended.push(0);
+        assert!(from_bytes(&extended).unwrap_err().contains("trailing"));
+        // missing file
+        assert!(load(Path::new("/nonexistent/kfac.ckpt")).is_err());
+    }
+}

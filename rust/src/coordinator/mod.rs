@@ -1,8 +1,10 @@
-//! Training coordinator: CLI parsing, train configuration, and the
-//! training loop that composes datasets, backends and optimizers.
+//! Training coordinator: CLI parsing, the [`TrainSession`] builder
+//! that composes datasets, backends and optimizers, and versioned
+//! checkpoint save/resume.
 
+pub mod checkpoint;
 pub mod cli;
-pub mod trainer;
+pub mod session;
 
 pub use cli::Args;
-pub use trainer::{LogRow, Problem, TrainConfig, Trainer};
+pub use session::{log_to_csv, Event, LogRow, Problem, TrainReport, TrainSession};

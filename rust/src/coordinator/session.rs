@@ -1,0 +1,665 @@
+//! The training session: a builder-style API that composes a dataset,
+//! a [`ModelBackend`], and any [`Optimizer`] into the paper's training
+//! protocol — Polyak-style iterate averaging with the reported error
+//! being the min over {current, averaged} (Section 13), wall-clock
+//! accounting that excludes evaluation overhead, streaming metric
+//! callbacks, and versioned checkpoint save/resume.
+//!
+//! ```no_run
+//! use kfac::coordinator::TrainSession;
+//! use kfac::coordinator::session::Problem;
+//!
+//! let report = TrainSession::for_problem(Problem::MnistAe)
+//!     .data(4000, 0)
+//!     .iters(200)
+//!     .polyak(0.99)
+//!     .checkpoint_every(50, "results/mnist_ae.ckpt")
+//!     .run();
+//! println!("final err {}", report.log.last().unwrap().train_err);
+//! ```
+
+use crate::backend::{ModelBackend, RustBackend};
+use crate::bench::Timer;
+use crate::coordinator::checkpoint::{self, Checkpoint, CHECKPOINT_VERSION};
+use crate::data::{curves_like, faces_like, mnist_like, Dataset};
+use crate::linalg::Mat;
+use crate::nn::{Act, Arch, Params};
+use crate::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, PolyakAverager, StepInfo};
+use crate::rng::Rng;
+use std::path::PathBuf;
+
+/// The paper's three benchmark problems plus the small classifier used
+/// by the Fisher-structure figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Problem {
+    MnistAe,
+    CurvesAe,
+    FacesAe,
+    MnistClf,
+}
+
+impl Problem {
+    pub fn name(self) -> &'static str {
+        match self {
+            Problem::MnistAe => "mnist_ae",
+            Problem::CurvesAe => "curves_ae",
+            Problem::FacesAe => "faces_ae",
+            Problem::MnistClf => "mnist_clf",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Problem> {
+        Some(match s {
+            "mnist_ae" => Problem::MnistAe,
+            "curves_ae" => Problem::CurvesAe,
+            "faces_ae" => Problem::FacesAe,
+            "mnist_clf" => Problem::MnistClf,
+            _ => return None,
+        })
+    }
+
+    /// Default (scaled-down from the paper; see DESIGN.md) architecture.
+    pub fn arch(self) -> Arch {
+        match self {
+            // paper: 784-1000-500-250-30 (mirrored); ours is ~0.4×
+            Problem::MnistAe => {
+                Arch::autoencoder(&[784, 400, 200, 100, 30, 100, 200, 400, 784], Act::Tanh)
+            }
+            // paper: 784-400-200-100-50-25-6 (mirrored), kept at ~0.5×
+            Problem::CurvesAe => Arch::autoencoder(
+                &[784, 200, 100, 50, 25, 12, 6, 12, 25, 50, 100, 200, 784],
+                Act::Tanh,
+            ),
+            // paper: 625-2000-1000-500-30; ours ~0.25×, Gaussian output
+            Problem::FacesAe => Arch::autoencoder_gaussian(
+                &[625, 500, 250, 125, 30, 125, 250, 500, 625],
+                Act::Tanh,
+            ),
+            // the Figure-2 network: 16×16 MNIST, 256-20-20-20-20-10 tanh
+            Problem::MnistClf => Arch::classifier(&[256, 20, 20, 20, 20, 10], Act::Tanh),
+        }
+    }
+
+    /// Generate the synthetic dataset (see `data::*`).
+    pub fn dataset(self, n: usize, seed: u64) -> Dataset {
+        match self {
+            Problem::MnistAe => mnist_like::autoencoder_dataset(n, 28, seed),
+            Problem::CurvesAe => curves_like::autoencoder_dataset(n, 28, seed),
+            Problem::FacesAe => faces_like::autoencoder_dataset(n, 25, seed),
+            Problem::MnistClf => mnist_like::classification_dataset(n, 16, seed),
+        }
+    }
+}
+
+/// One logged evaluation point.
+#[derive(Clone, Copy, Debug)]
+pub struct LogRow {
+    pub iter: usize,
+    /// Cumulative training cases processed.
+    pub cases: f64,
+    /// Cumulative optimizer wall-clock (excludes evaluation).
+    pub time_s: f64,
+    /// Mini-batch regularized objective at this iteration (NaN on the
+    /// pre-training row emitted by `eval_initial`).
+    pub batch_loss: f64,
+    /// Training-set error (min over current/averaged params).
+    pub train_err: f64,
+    /// Training-set loss (same min rule).
+    pub train_loss: f64,
+}
+
+/// A streamed training event, delivered to the session observer.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// An optimizer step completed.
+    Step { iter: usize, batch: usize, info: StepInfo },
+    /// An evaluation point was logged.
+    Eval { row: LogRow },
+    /// A checkpoint was written.
+    Checkpoint { iter: usize, path: PathBuf },
+}
+
+/// What `run` returns: the evaluation log and the final parameters.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub log: Vec<LogRow>,
+    /// Parameters after the last iteration.
+    pub params: Params,
+    /// The Polyak-averaged parameters, when averaging was enabled and
+    /// at least one update was absorbed.
+    pub avg_params: Option<Params>,
+    /// Iterations executed by this call (0 when resuming a finished run).
+    pub iters_run: usize,
+}
+
+enum DataSource<'a> {
+    Borrowed(&'a Dataset),
+    Owned(Dataset),
+    Lazy { problem: Problem, n: usize, seed: u64 },
+}
+
+/// Builder for a training run. See the module docs for an example; all
+/// knobs default to the paper's evaluation protocol.
+pub struct TrainSession<'a> {
+    arch: Arch,
+    data: DataSource<'a>,
+    optimizer: Option<Box<dyn Optimizer + 'a>>,
+    backend: Option<&'a mut dyn ModelBackend>,
+    params: Option<Params>,
+    iters: usize,
+    schedule: BatchSchedule,
+    seed: u64,
+    eval_every: usize,
+    eval_rows: usize,
+    eval_initial: bool,
+    polyak: Option<f64>,
+    verbose: bool,
+    observer: Option<Box<dyn FnMut(&Event) + 'a>>,
+    checkpoint: Option<(PathBuf, usize)>,
+    resume: Option<PathBuf>,
+}
+
+impl<'a> TrainSession<'a> {
+    fn with_arch_and_data(arch: Arch, data: DataSource<'a>) -> TrainSession<'a> {
+        TrainSession {
+            arch,
+            data,
+            optimizer: None,
+            backend: None,
+            params: None,
+            iters: 100,
+            schedule: BatchSchedule::Fixed(256),
+            seed: 0,
+            eval_every: 5,
+            eval_rows: 1000,
+            eval_initial: false,
+            polyak: Some(0.99),
+            verbose: false,
+            observer: None,
+            checkpoint: None,
+            resume: None,
+        }
+    }
+
+    /// Start a session on one of the paper's benchmark problems; the
+    /// synthetic dataset is generated at `run` time (size/seed set via
+    /// [`TrainSession::data`]).
+    pub fn for_problem(problem: Problem) -> TrainSession<'static> {
+        TrainSession::with_arch_and_data(
+            problem.arch(),
+            DataSource::Lazy { problem, n: 4000, seed: 0 },
+        )
+    }
+
+    /// Start a session on a caller-provided dataset and architecture.
+    pub fn for_dataset(arch: Arch, ds: &'a Dataset) -> TrainSession<'a> {
+        TrainSession::with_arch_and_data(arch, DataSource::Borrowed(ds))
+    }
+
+    /// Like [`TrainSession::for_dataset`] but taking ownership.
+    pub fn for_owned_dataset(arch: Arch, ds: Dataset) -> TrainSession<'a> {
+        TrainSession::with_arch_and_data(arch, DataSource::Owned(ds))
+    }
+
+    /// The architecture this session trains (for constructing
+    /// optimizers and initial parameters).
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    /// Dataset size and generation seed for [`TrainSession::for_problem`]
+    /// sessions (no-op for caller-provided datasets).
+    pub fn data(mut self, n: usize, seed: u64) -> Self {
+        if let DataSource::Lazy { problem, .. } = self.data {
+            self.data = DataSource::Lazy { problem, n, seed };
+        }
+        self
+    }
+
+    /// Number of training iterations (default 100).
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    /// Mini-batch schedule (default: fixed 256).
+    pub fn schedule(mut self, schedule: BatchSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Seed for mini-batch sampling and default parameter init.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Evaluate (and log) every this many iterations (default 5).
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.eval_every = every;
+        self
+    }
+
+    /// Rows of the training set used for error evaluation (default 1000).
+    pub fn eval_rows(mut self, rows: usize) -> Self {
+        self.eval_rows = rows;
+        self
+    }
+
+    /// Also evaluate before the first iteration (an `iter = 0` row with
+    /// `batch_loss = NaN`).
+    pub fn eval_initial(mut self) -> Self {
+        self.eval_initial = true;
+        self
+    }
+
+    /// Polyak averaging decay ξ (paper: 0.99, the default).
+    pub fn polyak(mut self, xi: f64) -> Self {
+        self.polyak = Some(xi);
+        self
+    }
+
+    /// Disable Polyak averaging.
+    pub fn no_polyak(mut self) -> Self {
+        self.polyak = None;
+        self
+    }
+
+    /// Print an evaluation line at every logged point.
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.verbose = verbose;
+        self
+    }
+
+    /// Initial parameters (default: sparse init from `seed ^ 0xA5`).
+    pub fn params(mut self, params: Params) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// The optimizer to drive (default: K-FAC with the paper's
+    /// configuration). Construct it against [`TrainSession::arch`].
+    pub fn optimizer(self, opt: impl Optimizer + 'a) -> Self {
+        self.optimizer_boxed(Box::new(opt))
+    }
+
+    /// Type-erased form of [`TrainSession::optimizer`].
+    pub fn optimizer_boxed(mut self, opt: Box<dyn Optimizer + 'a>) -> Self {
+        self.optimizer = Some(opt);
+        self
+    }
+
+    /// Run on a caller-provided backend (e.g. PJRT) instead of the
+    /// default pure-Rust backend.
+    pub fn backend(mut self, backend: &'a mut dyn ModelBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Streaming metric callback, invoked on every step, evaluation,
+    /// and checkpoint.
+    pub fn observer(mut self, f: impl FnMut(&Event) + 'a) -> Self {
+        self.observer = Some(Box::new(f));
+        self
+    }
+
+    /// Write a checkpoint to `path` every `every` iterations (and at
+    /// the final iteration). The file is atomically replaced each time.
+    pub fn checkpoint_every(mut self, every: usize, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some((path.into(), every.max(1)));
+        self
+    }
+
+    /// Resume from a checkpoint written by a session with the same
+    /// architecture, optimizer configuration and schedule: training
+    /// continues bit-exactly where the checkpoint left off.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Run training. Panics on checkpoint/configuration errors — use
+    /// [`TrainSession::try_run`] to handle them.
+    pub fn run(self) -> TrainReport {
+        self.try_run().unwrap_or_else(|e| panic!("TrainSession::run: {e}"))
+    }
+
+    /// Run training, surfacing checkpoint/configuration errors.
+    pub fn try_run(self) -> Result<TrainReport, String> {
+        let TrainSession {
+            arch,
+            data,
+            optimizer,
+            backend,
+            params,
+            iters,
+            schedule,
+            seed,
+            eval_every,
+            eval_rows,
+            eval_initial,
+            polyak,
+            verbose,
+            mut observer,
+            checkpoint: checkpoint_cfg,
+            resume,
+        } = self;
+
+        let owned_ds;
+        let ds: &Dataset = match &data {
+            DataSource::Borrowed(d) => d,
+            DataSource::Owned(d) => d,
+            DataSource::Lazy { problem, n, seed } => {
+                owned_ds = problem.dataset(*n, *seed);
+                &owned_ds
+            }
+        };
+        if ds.is_empty() {
+            return Err("empty dataset".to_string());
+        }
+        if ds.x.cols != arch.widths[0] || ds.y.cols != *arch.widths.last().unwrap() {
+            return Err(format!(
+                "dataset shape ({} -> {}) does not match arch {:?}",
+                ds.x.cols, ds.y.cols, arch.widths
+            ));
+        }
+
+        let mut owned_backend;
+        let backend: &mut dyn ModelBackend = match backend {
+            Some(b) => b,
+            None => {
+                owned_backend = RustBackend::new(arch.clone());
+                &mut owned_backend
+            }
+        };
+        if backend.arch().widths != arch.widths {
+            return Err(format!(
+                "backend arch {:?} does not match session arch {:?}",
+                backend.arch().widths,
+                arch.widths
+            ));
+        }
+
+        let mut opt: Box<dyn Optimizer + 'a> = match optimizer {
+            Some(o) => o,
+            None => Box::new(Kfac::new(&arch, KfacConfig::default())),
+        };
+        let mut params = match params {
+            Some(p) => p,
+            None => arch.sparse_init(&mut Rng::new(seed ^ 0xA5)),
+        };
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let mut avg = polyak.map(PolyakAverager::new);
+        let mut k0 = 0usize;
+        let mut cases = 0.0f64;
+        let mut train_time = 0.0f64;
+
+        if let Some(path) = &resume {
+            let ck = checkpoint::load(path)?;
+            if ck.params.0.len() != arch.num_layers() {
+                return Err(format!(
+                    "checkpoint has {} layers, arch {:?} needs {}",
+                    ck.params.0.len(),
+                    arch.widths,
+                    arch.num_layers()
+                ));
+            }
+            for (i, w) in ck.params.0.iter().enumerate() {
+                if (w.rows, w.cols) != arch.weight_shape(i) {
+                    return Err(format!(
+                        "checkpoint layer {i} is {}x{}, arch {:?} needs {:?}",
+                        w.rows,
+                        w.cols,
+                        arch.widths,
+                        arch.weight_shape(i)
+                    ));
+                }
+            }
+            if ck.opt.kind != opt.name() {
+                return Err(format!(
+                    "checkpoint was taken with optimizer '{}', session uses '{}'",
+                    ck.opt.kind,
+                    opt.name()
+                ));
+            }
+            opt.load_state(&ck.opt)?;
+            params = ck.params;
+            k0 = ck.iter;
+            cases = ck.cases;
+            train_time = ck.time_s;
+            rng = Rng::from_state(ck.rng_words, ck.rng_spare);
+            avg = ck.polyak.map(|(xi, a)| PolyakAverager::restore(xi, a));
+        }
+
+        let eval_rows = eval_rows.min(ds.len()).max(1);
+        let eval_x = ds.x.top_rows(eval_rows);
+        let eval_y = ds.y.top_rows(eval_rows);
+        let eval_every = eval_every.max(1);
+
+        let mut log = Vec::new();
+        if eval_initial && k0 == 0 {
+            let row =
+                eval_row(backend, &params, avg.as_ref(), &eval_x, &eval_y, 0, cases, train_time, f64::NAN);
+            print_row(verbose, 0, &row);
+            if let Some(obs) = observer.as_mut() {
+                obs(&Event::Eval { row });
+            }
+            log.push(row);
+        }
+
+        for k in (k0 + 1)..=iters {
+            let m = schedule.size(k);
+            let (x, y) = ds.minibatch(m, &mut rng);
+            let t = Timer::start();
+            let info = opt.step(backend, &mut params, &x, &y);
+            train_time += t.elapsed_s();
+            cases += m as f64;
+            if let Some(a) = avg.as_mut() {
+                a.update(&params);
+            }
+            if let Some(obs) = observer.as_mut() {
+                obs(&Event::Step { iter: k, batch: m, info });
+            }
+
+            if k % eval_every == 0 || k == iters || k == 1 {
+                let row = eval_row(
+                    backend,
+                    &params,
+                    avg.as_ref(),
+                    &eval_x,
+                    &eval_y,
+                    k,
+                    cases,
+                    train_time,
+                    info.loss,
+                );
+                print_row(verbose, m, &row);
+                if let Some(obs) = observer.as_mut() {
+                    obs(&Event::Eval { row });
+                }
+                log.push(row);
+            }
+
+            if let Some((path, every)) = &checkpoint_cfg {
+                if k % every == 0 || k == iters {
+                    let (rng_words, rng_spare) = rng.state();
+                    let ck = Checkpoint {
+                        version: CHECKPOINT_VERSION,
+                        iter: k,
+                        cases,
+                        time_s: train_time,
+                        rng_words,
+                        rng_spare,
+                        params: params.clone(),
+                        polyak: avg.as_ref().map(|a| (a.xi, a.get().cloned())),
+                        opt: opt.state(),
+                    };
+                    checkpoint::save(path, &ck)
+                        .map_err(|e| format!("writing checkpoint {}: {e}", path.display()))?;
+                    if let Some(obs) = observer.as_mut() {
+                        obs(&Event::Checkpoint { iter: k, path: path.clone() });
+                    }
+                }
+            }
+        }
+
+        let avg_params = avg.as_ref().and_then(|a| a.get().cloned());
+        Ok(TrainReport { log, params, avg_params, iters_run: iters.saturating_sub(k0) })
+    }
+}
+
+/// One evaluation point: min over {current, averaged} parameters
+/// (paper Section 13). Total in the averager — an empty average (no
+/// updates yet) simply falls back to the current parameters.
+#[allow(clippy::too_many_arguments)]
+fn eval_row(
+    backend: &mut dyn ModelBackend,
+    params: &Params,
+    avg: Option<&PolyakAverager>,
+    eval_x: &Mat,
+    eval_y: &Mat,
+    iter: usize,
+    cases: f64,
+    time_s: f64,
+    batch_loss: f64,
+) -> LogRow {
+    let (mut loss, mut err) = backend.eval(params, eval_x, eval_y);
+    if let Some(a) = avg {
+        if let Some(ap) = a.get() {
+            let (al, ae) = backend.eval(ap, eval_x, eval_y);
+            if ae < err {
+                err = ae;
+                loss = al;
+            }
+        }
+    }
+    LogRow { iter, cases, time_s, batch_loss, train_err: err, train_loss: loss }
+}
+
+fn print_row(verbose: bool, m: usize, row: &LogRow) {
+    if verbose {
+        println!(
+            "iter {:>5}  m={:>6}  time={:>8.2}s  loss={:.5}  err={:.5}",
+            row.iter, m, row.time_s, row.train_loss, row.train_err
+        );
+    }
+}
+
+/// Write a training log as CSV.
+pub fn log_to_csv(path: &std::path::Path, log: &[LogRow]) -> std::io::Result<()> {
+    crate::util::write_csv(
+        path,
+        &["iter", "cases", "time_s", "batch_loss", "train_err", "train_loss"],
+        &log.iter()
+            .map(|r| vec![r.iter as f64, r.cases, r.time_s, r.batch_loss, r.train_err, r.train_loss])
+            .collect::<Vec<_>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Sgd;
+    use crate::optim::SgdConfig;
+
+    #[test]
+    fn problems_have_consistent_arch_and_data() {
+        for p in [Problem::MnistAe, Problem::CurvesAe, Problem::FacesAe, Problem::MnistClf] {
+            let arch = p.arch();
+            let ds = p.dataset(20, 1);
+            assert_eq!(ds.x.cols, arch.widths[0], "{p:?} input width");
+            assert_eq!(ds.y.cols, *arch.widths.last().unwrap(), "{p:?} target width");
+            assert_eq!(Problem::from_name(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn kfac_session_reduces_error_on_small_autoencoder() {
+        // Small end-to-end smoke: 16x16 digit autoencoder, rust backend.
+        let arch = Arch::autoencoder(&[256, 32, 8, 32, 256], Act::Tanh);
+        let ds = mnist_like::autoencoder_dataset(256, 16, 3);
+        let opt = Kfac::new(&arch, KfacConfig { lambda0: 15.0, ..KfacConfig::block_diag() });
+        let report = TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(25)
+            .schedule(BatchSchedule::Fixed(128))
+            .eval_every(5)
+            .eval_rows(128)
+            .polyak(0.99)
+            .seed(2)
+            .params(arch.sparse_init(&mut Rng::new(1)))
+            .optimizer(opt)
+            .run();
+        let first = report.log.first().unwrap().train_err;
+        let last = report.log.last().unwrap().train_err;
+        assert!(last < first, "err did not decrease: {first} -> {last}");
+        assert_eq!(report.iters_run, 25);
+        assert!(report.avg_params.is_some());
+    }
+
+    #[test]
+    fn default_optimizer_is_kfac_and_runs() {
+        let arch = Arch::autoencoder(&[64, 12, 64], Act::Tanh);
+        let ds = mnist_like::autoencoder_dataset(64, 8, 1);
+        let report = TrainSession::for_dataset(arch, &ds)
+            .iters(2)
+            .schedule(BatchSchedule::Fixed(32))
+            .eval_rows(32)
+            .run();
+        assert!(!report.log.is_empty());
+        assert!(report.log.last().unwrap().train_loss.is_finite());
+    }
+
+    #[test]
+    fn observer_streams_steps_and_evals() {
+        let arch = Arch::autoencoder(&[64, 12, 64], Act::Tanh);
+        let ds = mnist_like::autoencoder_dataset(64, 8, 2);
+        let mut steps = 0usize;
+        let mut evals = 0usize;
+        let _ = TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(4)
+            .schedule(BatchSchedule::Fixed(32))
+            .eval_every(2)
+            .eval_rows(32)
+            .optimizer(Sgd::new(SgdConfig::default()))
+            .observer(|e| match e {
+                Event::Step { info, .. } => {
+                    assert!(info.loss.is_finite());
+                    steps += 1;
+                }
+                Event::Eval { .. } => evals += 1,
+                Event::Checkpoint { .. } => {}
+            })
+            .run();
+        assert_eq!(steps, 4);
+        assert_eq!(evals, 3, "evals at k = 1, 2, 4");
+    }
+
+    #[test]
+    fn zero_iteration_run_with_polyak_and_initial_eval_is_total() {
+        // The averaged-eval branch must not panic when the averager has
+        // absorbed no updates (satellite fix: total eval).
+        let arch = Arch::autoencoder(&[64, 12, 64], Act::Tanh);
+        let ds = mnist_like::autoencoder_dataset(64, 8, 3);
+        let report = TrainSession::for_dataset(arch, &ds)
+            .iters(0)
+            .polyak(0.99)
+            .eval_initial()
+            .eval_rows(32)
+            .run();
+        assert_eq!(report.log.len(), 1);
+        let row = report.log[0];
+        assert_eq!(row.iter, 0);
+        assert!(row.batch_loss.is_nan());
+        assert!(row.train_err.is_finite());
+        assert!(report.avg_params.is_none());
+        assert_eq!(report.iters_run, 0);
+    }
+
+    #[test]
+    fn mismatched_dataset_is_rejected() {
+        let arch = Arch::autoencoder(&[64, 12, 64], Act::Tanh);
+        let ds = mnist_like::autoencoder_dataset(32, 16, 1); // 256 cols
+        let err = TrainSession::for_dataset(arch, &ds).iters(1).try_run().unwrap_err();
+        assert!(err.contains("does not match arch"), "{err}");
+    }
+}

@@ -1,39 +1,49 @@
 //! Shared harness code for the figure-regeneration binaries
 //! (`rust/src/bin/fig*.rs`). Each paper figure maps to one binary; the
 //! common machinery — running a set of optimizer variants on a problem
-//! and collecting training curves, and partially training a network to
-//! a given iteration for the structure/damping experiments — lives here.
+//! through [`TrainSession`] and collecting training curves, and
+//! partially training a network to a given iteration for the
+//! structure/damping experiments — lives here.
 
 use crate::backend::{ModelBackend, RustBackend};
-use crate::coordinator::trainer::{log_to_csv, LogRow, Optimizer, Problem, TrainConfig, Trainer};
-use crate::fisher::InverseKind;
-use crate::nn::Params;
-use crate::optim::{KfacConfig, SgdConfig};
+use crate::coordinator::{log_to_csv, LogRow, Problem, TrainSession};
+use crate::fisher::PrecondRef;
+use crate::nn::{Arch, Params};
+use crate::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use crate::rng::Rng;
 use std::path::PathBuf;
 
-/// A named optimizer variant for comparison plots.
+/// A named optimizer variant for comparison plots: a factory so each
+/// run builds a fresh optimizer against the problem's architecture.
 pub struct Variant {
     pub name: String,
-    pub optimizer: Optimizer,
+    make: Box<dyn FnOnce(&Arch) -> Box<dyn Optimizer> + Send>,
 }
 
 impl Variant {
-    pub fn kfac(name: &str, inverse: InverseKind, momentum: bool, lambda0: f64) -> Variant {
+    pub fn kfac(name: &str, precond: PrecondRef, momentum: bool, lambda0: f64) -> Variant {
         // λ adapted every iteration: the figure runs are 1–2 orders of
         // magnitude shorter than the paper's, so the LM rule must settle
         // within tens of iterations rather than hundreds (T₁ = 5 with
         // λ₀ = 150 would leave the runs over-damped throughout).
-        let mut cfg = KfacConfig { inverse, lambda0, t1: 1, ..Default::default() };
-        cfg.momentum = momentum;
-        Variant { name: name.to_string(), optimizer: Optimizer::Kfac(cfg) }
+        let cfg = KfacConfig { precond, lambda0, momentum, t1: 1, ..Default::default() };
+        Variant {
+            name: name.to_string(),
+            make: Box::new(move |arch| Box::new(Kfac::new(arch, cfg))),
+        }
     }
 
     pub fn sgd(name: &str, lr: f64, mu_max: f64) -> Variant {
+        let cfg = SgdConfig { lr, mu_max, ..Default::default() };
         Variant {
             name: name.to_string(),
-            optimizer: Optimizer::Sgd(SgdConfig { lr, mu_max, ..Default::default() }),
+            make: Box::new(move |_arch| Box::new(Sgd::new(cfg))),
         }
+    }
+
+    /// Build the optimizer for `arch`.
+    pub fn build(self, arch: &Arch) -> Box<dyn Optimizer> {
+        (self.make)(arch)
     }
 }
 
@@ -53,38 +63,62 @@ pub fn scaled(n: usize, floor: usize) -> usize {
     ((n as f64 * exp_scale()) as usize).max(floor)
 }
 
+/// Knobs for one comparison run (the self-labeling subset of the
+/// `TrainSession` builder the figure harness varies). `seed` drives
+/// mini-batch sampling, `init_seed` the sparse parameter init — kept
+/// separate so the figure runs reproduce the historical trajectories
+/// (and stay comparable with CSVs cached by `cached_run`).
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub iters: usize,
+    pub schedule: BatchSchedule,
+    pub eval_every: usize,
+    pub eval_rows: usize,
+    pub seed: u64,
+    pub init_seed: u64,
+}
+
 /// Run one variant on one problem with a fresh backend/params and
 /// return the log; also writes `results/<tag>.csv`.
 pub fn run_variant(
     problem: Problem,
     ds: &crate::data::Dataset,
-    cfg: &TrainConfig,
+    cfg: &RunCfg,
     variant: Variant,
-    seed: u64,
     tag: &str,
 ) -> Vec<LogRow> {
     let arch = problem.arch();
-    let mut backend = RustBackend::new(arch.clone());
-    run_variant_with_backend(&mut backend, ds, cfg, variant, seed, tag)
+    let mut backend = RustBackend::new(arch);
+    run_variant_with_backend(&mut backend, ds, cfg, variant, tag)
 }
 
 /// Same, but with a caller-supplied backend (e.g. PJRT).
 pub fn run_variant_with_backend(
     backend: &mut dyn ModelBackend,
     ds: &crate::data::Dataset,
-    cfg: &TrainConfig,
+    cfg: &RunCfg,
     variant: Variant,
-    seed: u64,
     tag: &str,
 ) -> Vec<LogRow> {
     let arch = backend.arch().clone();
-    let mut params = arch.sparse_init(&mut Rng::new(seed));
-    let log = Trainer::new(cfg.clone(), ds).run(backend, &mut params, variant.optimizer, true);
+    let opt = variant.build(&arch);
+    let report = TrainSession::for_dataset(arch.clone(), ds)
+        .iters(cfg.iters)
+        .schedule(cfg.schedule.clone())
+        .seed(cfg.seed)
+        .eval_every(cfg.eval_every)
+        .eval_rows(cfg.eval_rows)
+        .polyak(0.99)
+        .params(arch.sparse_init(&mut Rng::new(cfg.init_seed)))
+        .optimizer_boxed(opt)
+        .backend(backend)
+        .verbose(true)
+        .run();
     let path = results_dir().join(format!("{tag}.csv"));
-    if let Err(e) = log_to_csv(&path, &log) {
+    if let Err(e) = log_to_csv(&path, &report.log) {
         eprintln!("warning: could not write {}: {e}", path.display());
     }
-    log
+    report.log
 }
 
 /// Parse a training-log CSV back into rows (cache hits for re-plotting
@@ -128,7 +162,7 @@ pub fn training_curves_fig10(
     iters: usize,
     n_data: usize,
 ) -> Vec<(Problem, String, Vec<LogRow>)> {
-    use crate::optim::BatchSchedule;
+    use crate::fisher::precond;
     let mut out = Vec::new();
     for problem in [Problem::CurvesAe, Problem::MnistAe, Problem::FacesAe] {
         let ds = problem.dataset(n_data, 0);
@@ -137,30 +171,34 @@ pub fn training_curves_fig10(
         let variants: Vec<(String, Variant, BatchSchedule)> = vec![
             (
                 "kfac_blktridiag".into(),
-                Variant::kfac("blktridiag", InverseKind::BlockTridiag, true, 5.0),
+                Variant::kfac("blktridiag", precond::block_tridiag(), true, 5.0),
                 exp_sched.clone(),
             ),
             (
                 "kfac_blkdiag".into(),
-                Variant::kfac("blkdiag", InverseKind::BlockDiag, true, 5.0),
+                Variant::kfac("blkdiag", precond::block_diag(), true, 5.0),
                 exp_sched.clone(),
             ),
             (
                 "kfac_nomom".into(),
-                Variant::kfac("nomom", InverseKind::BlockTridiag, false, 5.0),
+                Variant::kfac("nomom", precond::block_tridiag(), false, 5.0),
                 BatchSchedule::Fixed(500.min(n_data)),
             ),
-            ("sgd".into(), Variant::sgd("sgd", 0.02, 0.99), BatchSchedule::Fixed(500.min(n_data))),
+            (
+                "sgd".into(),
+                Variant::sgd("sgd", 0.02, 0.99),
+                BatchSchedule::Fixed(500.min(n_data)),
+            ),
         ];
         for (vname, variant, schedule) in variants {
             let tag = format!("fig10_{}_{vname}", problem.name());
-            let cfg = TrainConfig {
+            let cfg = RunCfg {
                 iters,
                 schedule,
-                seed: 0,
                 eval_every: 5,
                 eval_rows: 1000.min(n_data),
-                polyak: Some(0.99),
+                seed: 0,
+                init_seed: 1,
             };
             let log = cached_run(&tag, || {
                 println!("# running {tag} ({backend_kind} backend)…");
@@ -171,15 +209,15 @@ pub fn training_curves_fig10(
                         );
                         match crate::backend::PjrtBackend::new(&dir, problem.name()) {
                             Ok(mut b) => {
-                                run_variant_with_backend(&mut b, &ds, &cfg, variant, 1, &tag)
+                                run_variant_with_backend(&mut b, &ds, &cfg, variant, &tag)
                             }
                             Err(e) => {
                                 eprintln!("# pjrt unavailable ({e:#}); falling back to rust");
-                                run_variant(problem, &ds, &cfg, variant, 1, &tag)
+                                run_variant(problem, &ds, &cfg, variant, &tag)
                             }
                         }
                     }
-                    _ => run_variant(problem, &ds, &cfg, variant, 1, &tag),
+                    _ => run_variant(problem, &ds, &cfg, variant, &tag),
                 }
             });
             out.push((problem, vname, log));
@@ -200,16 +238,17 @@ pub fn partially_train(
     let arch = problem.arch();
     let ds = problem.dataset(n_data, seed);
     let mut backend = RustBackend::new(arch.clone());
-    let mut params = arch.sparse_init(&mut Rng::new(seed ^ 0xA5));
-    let cfg = TrainConfig {
-        iters,
-        schedule: crate::optim::BatchSchedule::Fixed(n_data),
-        eval_every: usize::MAX,
-        eval_rows: 1,
-        polyak: None,
-        seed,
-    };
-    let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
-    let _ = Trainer::new(cfg, &ds).run(&mut backend, &mut params, Optimizer::Kfac(kcfg), false);
-    (backend, params, ds)
+    let opt = Kfac::new(&arch, KfacConfig { lambda0: 15.0, ..Default::default() });
+    let report = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(iters)
+        .schedule(BatchSchedule::Fixed(n_data))
+        .seed(seed)
+        .eval_every(usize::MAX)
+        .eval_rows(1)
+        .no_polyak()
+        .params(arch.sparse_init(&mut Rng::new(seed ^ 0xA5)))
+        .optimizer(opt)
+        .backend(&mut backend)
+        .run();
+    (backend, report.params, ds)
 }

@@ -8,43 +8,35 @@
 //! - [`tridiag`]: the block-tridiagonal inverse `F̂⁻¹` (Section 4.3),
 //!   built from the Ψ/Σ/Λ/Ξ machinery and the Appendix-B structured
 //!   inverse.
+//! - [`ekfac`]: diagonal rescaling in the Kronecker eigenbasis (George
+//!   et al. 2018).
+//! - [`precond`]: the open [`Preconditioner`] seam + registry through
+//!   which the optimizer reaches all of the above (and external
+//!   structures can plug in).
 //! - [`exact`]: dense exact `F` and exact `F̃` over a layer range for
 //!   small networks — the substrate behind the Figure 2/3/5/6
 //!   structure experiments.
 
 pub mod blockdiag;
 pub mod damping;
+pub mod ekfac;
 pub mod exact;
+pub mod precond;
 pub mod stats;
 pub mod tridiag;
 
 pub use blockdiag::BlockDiagInverse;
+pub use ekfac::EkfacInverse;
+pub use precond::{PrecondRef, Preconditioner};
 pub use stats::{KfacStats, RawStats};
 pub use tridiag::TridiagInverse;
 
 use crate::nn::Params;
 
-/// A preconditioner: applies an approximate inverse Fisher to a
+/// A built approximate inverse Fisher: applies `F₀⁻¹` to a
 /// gradient-shaped `Params` (i.e. computes the update proposal
-/// `Δ = -F₀⁻¹ ∇h` up to sign).
+/// `Δ = -F₀⁻¹ ∇h` up to sign). Produced by a [`Preconditioner`] at
+/// every inverse refresh.
 pub trait FisherInverse {
     fn apply(&self, grads: &Params) -> Params;
-}
-
-/// Which inverse approximation the optimizer uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum InverseKind {
-    /// `F̌⁻¹` — block-diagonal (Section 4.2).
-    BlockDiag,
-    /// `F̂⁻¹` — block-tridiagonal (Section 4.3).
-    BlockTridiag,
-}
-
-impl InverseKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            InverseKind::BlockDiag => "blkdiag",
-            InverseKind::BlockTridiag => "blktridiag",
-        }
-    }
 }

@@ -1,0 +1,208 @@
+//! The open preconditioner seam.
+//!
+//! K-FAC's outer loop (statistics → damped inverse → rescaled update)
+//! is generic over the curvature structure used for the update
+//! proposal. [`Preconditioner`] is the factory interface the optimizer
+//! calls at every inverse refresh: given the current factor statistics
+//! and a damping strength γ, build a [`FisherInverse`] it can apply to
+//! gradients until the next refresh.
+//!
+//! The paper's two structures (block-diagonal §4.2, block-tridiagonal
+//! §4.3) and the EKFAC eigenbasis-diagonal structure (George et al.
+//! 2018) ship as built-in implementations; external code can implement
+//! the trait and (optionally) [`register`] instances under a name so
+//! CLIs and config files can select them.
+
+use super::blockdiag::BlockDiagInverse;
+use super::ekfac::EkfacInverse;
+use super::stats::RawStats;
+use super::tridiag::TridiagInverse;
+use super::FisherInverse;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Shared handle to a (stateless) preconditioner factory.
+pub type PrecondRef = Arc<dyn Preconditioner + Send + Sync>;
+
+/// Factory for approximate Fisher inverses: the structure-specific
+/// part of a K-FAC-family optimizer.
+pub trait Preconditioner {
+    /// Stable identifier (used by CLIs, logs and the registry).
+    fn name(&self) -> &str;
+
+    /// Build the approximate inverse from factor statistics with
+    /// damping strength `gamma`. Must be deterministic in its inputs —
+    /// checkpoint resume rebuilds cached inverses through this method
+    /// and relies on bit-identical results.
+    fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send>;
+}
+
+/// `F̌⁻¹` — block-diagonal (paper §4.2), factored Tikhonov damping.
+pub struct BlockDiagPrecond;
+
+impl Preconditioner for BlockDiagPrecond {
+    fn name(&self) -> &str {
+        "blkdiag"
+    }
+
+    fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
+        Box::new(BlockDiagInverse::build(stats, gamma))
+    }
+}
+
+/// `F̂⁻¹` — block-tridiagonal (paper §4.3), factored Tikhonov damping.
+pub struct TridiagPrecond;
+
+impl Preconditioner for TridiagPrecond {
+    fn name(&self) -> &str {
+        "blktridiag"
+    }
+
+    fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
+        Box::new(TridiagInverse::build(stats, gamma))
+    }
+}
+
+/// EKFAC — diagonal rescaling in the Kronecker eigenbasis with exact
+/// (eigenbasis) Tikhonov damping.
+pub struct EkfacPrecond;
+
+impl Preconditioner for EkfacPrecond {
+    fn name(&self) -> &str {
+        "ekfac"
+    }
+
+    fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
+        Box::new(EkfacInverse::build(stats, gamma))
+    }
+}
+
+/// The block-diagonal preconditioner (paper §4.2).
+pub fn block_diag() -> PrecondRef {
+    Arc::new(BlockDiagPrecond)
+}
+
+/// The block-tridiagonal preconditioner (paper §4.3, the default).
+pub fn block_tridiag() -> PrecondRef {
+    Arc::new(TridiagPrecond)
+}
+
+/// The EKFAC eigenbasis-diagonal preconditioner.
+pub fn ekfac() -> PrecondRef {
+    Arc::new(EkfacPrecond)
+}
+
+fn registry() -> &'static Mutex<Vec<PrecondRef>> {
+    static REG: OnceLock<Mutex<Vec<PrecondRef>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(vec![block_diag(), block_tridiag(), ekfac()]))
+}
+
+/// Register a preconditioner under its `name()`, replacing any
+/// previous registration with the same name.
+pub fn register(p: PrecondRef) {
+    let mut reg = registry().lock().unwrap();
+    let name = p.name().to_string();
+    reg.retain(|q| q.name() != name);
+    reg.push(p);
+}
+
+/// Look up a registered preconditioner by name.
+pub fn from_name(name: &str) -> Option<PrecondRef> {
+    registry().lock().unwrap().iter().find(|p| p.name() == name).cloned()
+}
+
+/// Names of all registered preconditioners (for CLI help/errors).
+pub fn names() -> Vec<String> {
+    registry().lock().unwrap().iter().map(|p| p.name().to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fisher::stats::KfacStats;
+    use crate::linalg::Mat;
+    use crate::nn::net::Net;
+    use crate::nn::{Act, Arch, LossKind, Params};
+    use crate::rng::Rng;
+
+    fn toy_stats() -> (Arch, RawStats) {
+        let arch = Arch::new(
+            vec![5, 4, 3],
+            vec![Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(1);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(64, 5, 1.0, &mut rng);
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut rng);
+        let mut st = KfacStats::new(&arch);
+        st.update(&crate::fisher::RawStats::from_batch(&fwd, &gs));
+        (arch, st.s)
+    }
+
+    #[test]
+    fn builtins_are_registered() {
+        for name in ["blkdiag", "blktridiag", "ekfac"] {
+            let p = from_name(name).unwrap_or_else(|| panic!("{name} not registered"));
+            assert_eq!(p.name(), name);
+        }
+        assert!(from_name("nonexistent").is_none());
+        let all = names();
+        assert!(all.iter().any(|n| n == "ekfac"), "names() missing ekfac: {all:?}");
+    }
+
+    #[test]
+    fn every_builtin_builds_a_working_inverse() {
+        let (arch, stats) = toy_stats();
+        let mut rng = Rng::new(2);
+        let grads = Params(
+            (0..arch.num_layers())
+                .map(|i| {
+                    let (r, c) = arch.weight_shape(i);
+                    Mat::randn(r, c, 1.0, &mut rng)
+                })
+                .collect(),
+        );
+        for p in [block_diag(), block_tridiag(), ekfac()] {
+            let inv = p.build(&stats, 0.5);
+            let u = inv.apply(&grads);
+            assert_eq!(u.0.len(), grads.0.len(), "{}", p.name());
+            assert!(
+                u.0.iter().all(|m| m.data.iter().all(|v| v.is_finite())),
+                "{} produced non-finite update",
+                p.name()
+            );
+            // descent-direction sanity: ⟨g, F⁻¹g⟩ > 0
+            assert!(grads.dot(&u) > 0.0, "{} not positive definite", p.name());
+        }
+    }
+
+    #[test]
+    fn external_preconditioners_plug_in() {
+        // The seam is open: a custom structure registers and resolves
+        // like the built-ins.
+        struct IdentityInverse;
+        impl FisherInverse for IdentityInverse {
+            fn apply(&self, grads: &Params) -> Params {
+                grads.clone()
+            }
+        }
+        struct IdentityPrecond;
+        impl Preconditioner for IdentityPrecond {
+            fn name(&self) -> &str {
+                "identity-test"
+            }
+            fn build(&self, _stats: &RawStats, _gamma: f64) -> Box<dyn FisherInverse + Send> {
+                Box::new(IdentityInverse)
+            }
+        }
+        register(Arc::new(IdentityPrecond));
+        let p = from_name("identity-test").expect("custom preconditioner registered");
+        let (_, stats) = toy_stats();
+        let mut rng = Rng::new(3);
+        let g = Params(vec![Mat::randn(4, 6, 1.0, &mut rng)]);
+        let u = p.build(&stats, 1.0).apply(&g);
+        assert!(u.0[0].sub(&g.0[0]).max_abs() < 1e-15);
+    }
+}

@@ -40,10 +40,13 @@ pub mod experiments;
 /// Convenient re-exports for library users.
 pub mod prelude {
     pub use crate::backend::{BatchStats, ModelBackend, RustBackend};
+    pub use crate::coordinator::{Event, Problem, TrainReport, TrainSession};
     pub use crate::data::dataset::Dataset;
+    pub use crate::fisher::{PrecondRef, Preconditioner};
     pub use crate::linalg::Mat;
     pub use crate::nn::{Act, Arch, LossKind, Params};
     pub use crate::optim::kfac::{Kfac, KfacConfig};
     pub use crate::optim::sgd::{Sgd, SgdConfig};
+    pub use crate::optim::{BatchSchedule, OptState, Optimizer, StepInfo};
     pub use crate::rng::Rng;
 }

@@ -1,18 +1,24 @@
-//! `kfac` CLI — train the paper's benchmark problems with K-FAC or the
-//! SGD baseline, on either the pure-Rust backend or the AOT/PJRT
-//! backend.
+//! `kfac` CLI — train the paper's benchmark problems with K-FAC (any
+//! registered preconditioner) or the SGD baseline, on either the
+//! pure-Rust backend or the AOT/PJRT backend, with checkpoint
+//! save/resume.
 //!
 //! Examples:
 //!   kfac train --problem mnist_ae --iters 200 --batch 1000
 //!   kfac train --problem curves_ae --optimizer sgd --lr 0.05
+//!   kfac train --problem mnist_ae --optimizer kfac_ekfac
+//!   kfac train --problem mnist_ae --checkpoint results/run.ckpt
+//!   kfac train --problem mnist_ae --resume results/run.ckpt --iters 400
 //!   kfac train --problem mnist_ae --backend pjrt --artifacts artifacts
 //!   kfac list-archs --artifacts artifacts
 
 use kfac::backend::{ModelBackend, PjrtBackend, RustBackend};
 use kfac::coordinator::cli::Args;
-use kfac::coordinator::trainer::{log_to_csv, Optimizer, Problem, TrainConfig, Trainer};
-use kfac::fisher::InverseKind;
-use kfac::optim::{BatchSchedule, KfacConfig, SgdConfig};
+use kfac::coordinator::{log_to_csv, LogRow, Problem, TrainSession};
+use kfac::data::Dataset;
+use kfac::fisher::precond;
+use kfac::nn::Arch;
+use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 use std::path::PathBuf;
 
@@ -26,11 +32,14 @@ fn main() {
                 "usage: kfac <command> [options]\n\
                  commands:\n\
                  \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf\n\
-                 \x20              --optimizer kfac|kfac_blkdiag|sgd  --iters N --batch M\n\
+                 \x20              --optimizer kfac|kfac_<precond>|sgd  --iters N --batch M\n\
+                 \x20              (preconditioners: {})\n\
                  \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
                  \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
                  \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
-                 \x20 list-archs   --artifacts DIR"
+                 \x20              --checkpoint PATH --checkpoint-every N --resume PATH\n\
+                 \x20 list-archs   --artifacts DIR",
+                precond::names().join("|")
             );
             std::process::exit(2);
         }
@@ -59,6 +68,82 @@ fn list_archs(args: &Args) {
     }
 }
 
+/// Build the optimizer named by `--optimizer`: `sgd`, `kfac` (paper
+/// default, block-tridiagonal), or `kfac_<name>` for any registered
+/// preconditioner.
+fn build_optimizer(args: &Args, arch: &Arch) -> Box<dyn Optimizer> {
+    let name = args.get_or("optimizer", "kfac");
+    if name == "sgd" {
+        return Box::new(Sgd::new(SgdConfig {
+            lr: args.get_f64("lr", 0.02),
+            mu_max: args.get_f64("mu-max", 0.99),
+            ..Default::default()
+        }));
+    }
+    let pname = match name.as_str() {
+        "kfac" => "blktridiag".to_string(),
+        other => match other.strip_prefix("kfac_") {
+            Some(p) => p.to_string(),
+            None => {
+                eprintln!("unknown --optimizer {other} (use sgd, kfac, or kfac_<precond>)");
+                std::process::exit(2);
+            }
+        },
+    };
+    let precond = precond::from_name(&pname).unwrap_or_else(|| {
+        eprintln!(
+            "unknown preconditioner '{pname}' (registered: {})",
+            precond::names().join(", ")
+        );
+        std::process::exit(2);
+    });
+    Box::new(Kfac::new(
+        arch,
+        KfacConfig {
+            precond,
+            momentum: !args.get_flag("no-momentum"),
+            lambda0: args.get_f64("lambda0", 150.0),
+            ..Default::default()
+        },
+    ))
+}
+
+fn run_session(
+    args: &Args,
+    arch: &Arch,
+    ds: &Dataset,
+    backend: &mut dyn ModelBackend,
+    iters: usize,
+    schedule: BatchSchedule,
+    seed: u64,
+) -> Vec<LogRow> {
+    let optimizer = build_optimizer(args, arch);
+    let mut session = TrainSession::for_dataset(arch.clone(), ds)
+        .iters(iters)
+        .schedule(schedule)
+        .seed(seed)
+        .eval_every(args.get_usize("eval-every", 10))
+        .eval_rows(args.get_usize("eval-rows", 1000))
+        .polyak(0.99)
+        .params(arch.sparse_init(&mut Rng::new(seed ^ 0xA5)))
+        .optimizer_boxed(optimizer)
+        .backend(backend)
+        .verbose(true);
+    if let Some(path) = args.get("checkpoint") {
+        session = session.checkpoint_every(args.get_usize("checkpoint-every", 25), path);
+    }
+    if let Some(path) = args.get("resume") {
+        session = session.resume_from(path);
+    }
+    match session.try_run() {
+        Ok(report) => report.log,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn train(args: &Args) {
     let problem = Problem::from_name(&args.get_or("problem", "mnist_ae"))
         .expect("unknown --problem");
@@ -72,48 +157,15 @@ fn train(args: &Args) {
         BatchSchedule::Fixed(batch)
     };
 
-    let optimizer = match args.get_or("optimizer", "kfac").as_str() {
-        "kfac" | "kfac_blktridiag" => Optimizer::Kfac(KfacConfig {
-            inverse: InverseKind::BlockTridiag,
-            momentum: !args.get_flag("no-momentum"),
-            lambda0: args.get_f64("lambda0", 150.0),
-            ..Default::default()
-        }),
-        "kfac_blkdiag" => Optimizer::Kfac(KfacConfig {
-            inverse: InverseKind::BlockDiag,
-            momentum: !args.get_flag("no-momentum"),
-            lambda0: args.get_f64("lambda0", 150.0),
-            ..Default::default()
-        }),
-        "sgd" => Optimizer::Sgd(SgdConfig {
-            lr: args.get_f64("lr", 0.02),
-            mu_max: args.get_f64("mu-max", 0.99),
-            ..Default::default()
-        }),
-        other => {
-            eprintln!("unknown --optimizer {other}");
-            std::process::exit(2);
-        }
-    };
-
     println!("# generating {} dataset (n={n_data})…", problem.name());
     let ds = problem.dataset(n_data, seed);
     let arch = problem.arch();
     println!("# arch {:?} ({} params)", arch.widths, arch.num_params());
-    let cfg = TrainConfig {
-        iters,
-        schedule,
-        seed,
-        eval_every: args.get_usize("eval-every", 10),
-        eval_rows: args.get_usize("eval-rows", 1000),
-        polyak: Some(0.99),
-    };
 
-    let mut params = arch.sparse_init(&mut Rng::new(seed ^ 0xA5));
     let log = match args.get_or("backend", "rust").as_str() {
         "rust" => {
             let mut backend = RustBackend::new(arch.clone());
-            Trainer::new(cfg, &ds).run(&mut backend, &mut params, optimizer, true)
+            run_session(args, &arch, &ds, &mut backend, iters, schedule, seed)
         }
         "pjrt" => {
             let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -126,7 +178,7 @@ fn train(args: &Args) {
                 arch.widths,
                 "artifact arch mismatch — re-run `make artifacts`"
             );
-            Trainer::new(cfg, &ds).run(&mut backend, &mut params, optimizer, true)
+            run_session(args, &arch, &ds, &mut backend, iters, schedule, seed)
         }
         other => {
             eprintln!("unknown --backend {other}");
@@ -134,14 +186,16 @@ fn train(args: &Args) {
         }
     };
 
-    let _ = params; // final parameters could be serialized here
     if let Some(out) = args.get("out") {
         log_to_csv(&PathBuf::from(out), &log).expect("writing log CSV");
         println!("# wrote {out}");
     }
-    let last = log.last().expect("no log rows");
-    println!(
-        "# done: iters={} time={:.1}s final train_err={:.5} train_loss={:.5}",
-        last.iter, last.time_s, last.train_err, last.train_loss
-    );
+    match log.last() {
+        Some(last) => println!(
+            "# done: iters={} time={:.1}s final train_err={:.5} train_loss={:.5}",
+            last.iter, last.time_s, last.train_err, last.train_loss
+        ),
+        // e.g. resuming a checkpoint already at/past --iters
+        None => println!("# done: no iterations to run"),
+    }
 }

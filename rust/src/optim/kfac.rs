@@ -5,8 +5,9 @@
 //!    τ₁ sub-batch, with model-sampled targets);
 //! 2. exponentially-decayed online factor estimates (Section 5);
 //! 3. approximate-inverse refresh every `T₃` iterations (or the first 3)
-//!    with the factored Tikhonov damping of Section 6.3, using either
-//!    the block-diagonal (§4.2) or block-tridiagonal (§4.3) structure;
+//!    with the factored Tikhonov damping of Section 6.3, through the
+//!    open [`Preconditioner`] seam (block-diagonal §4.2,
+//!    block-tridiagonal §4.3, EKFAC, or anything user-registered);
 //! 4. update proposal `Δ = -F₀⁻¹∇h`, re-scaled on the **exact** Fisher's
 //!    quadratic model (Section 6.4) via the Appendix-C FVP trick on the
 //!    τ₂ sub-batch — with the previous update `δ₀` as a second direction
@@ -15,17 +16,22 @@
 //!    the quadratic model value `M(δ)`;
 //! 6. Levenberg–Marquardt λ adaptation every `T₁` iterations from the
 //!    reduction ratio ρ (Section 6.5).
+//!
+//! `Kfac` implements the [`Optimizer`] trait, including full state
+//! snapshot/restore for bit-exact checkpoint resume.
 
 use crate::backend::ModelBackend;
-use crate::fisher::{BlockDiagInverse, FisherInverse, InverseKind, KfacStats, TridiagInverse};
+use crate::fisher::precond;
+use crate::fisher::{FisherInverse, KfacStats, PrecondRef, RawStats};
 use crate::linalg::Mat;
 use crate::nn::{Arch, Params};
+use crate::optim::optimizer::{check_dims, check_mat_shapes, OptState, Optimizer, StepInfo};
 
 /// Hyper-parameters. The defaults are the paper's (Sections 6 and 8).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct KfacConfig {
-    /// Which inverse-Fisher structure to use.
-    pub inverse: InverseKind,
+    /// Which inverse-Fisher structure to use (the preconditioner seam).
+    pub precond: PrecondRef,
     /// Use the (α, μ) momentum of Section 7.
     pub momentum: bool,
     /// Initial λ (paper: 150; "err on the side of too large").
@@ -53,12 +59,26 @@ pub struct KfacConfig {
     pub gamma_max: f64,
 }
 
+impl std::fmt::Debug for KfacConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KfacConfig")
+            .field("precond", &self.precond.name())
+            .field("momentum", &self.momentum)
+            .field("lambda0", &self.lambda0)
+            .field("eta", &self.eta)
+            .field("t1", &self.t1)
+            .field("t2", &self.t2)
+            .field("t3", &self.t3)
+            .finish()
+    }
+}
+
 impl Default for KfacConfig {
     fn default() -> Self {
         let t1 = 5usize;
         let t2 = 20usize;
         KfacConfig {
-            inverse: InverseKind::BlockTridiag,
+            precond: precond::block_tridiag(),
             momentum: true,
             lambda0: 150.0,
             eta: 1e-5,
@@ -78,34 +98,20 @@ impl Default for KfacConfig {
 }
 
 impl KfacConfig {
+    /// Paper defaults with the block-diagonal preconditioner (§4.2).
     pub fn block_diag() -> Self {
-        KfacConfig { inverse: InverseKind::BlockDiag, ..Default::default() }
+        KfacConfig { precond: precond::block_diag(), ..Default::default() }
+    }
+
+    /// Paper defaults with the EKFAC eigenbasis preconditioner.
+    pub fn ekfac() -> Self {
+        KfacConfig { precond: precond::ekfac(), ..Default::default() }
     }
 
     pub fn no_momentum(mut self) -> Self {
         self.momentum = false;
         self
     }
-}
-
-/// Per-step diagnostics.
-#[derive(Clone, Copy, Debug)]
-pub struct StepInfo {
-    /// Regularized objective h(θ) on the mini-batch (before the step).
-    pub loss: f64,
-    /// Quadratic-model value M(δ) (negative ⇒ predicted decrease).
-    pub model_value: f64,
-    /// Chosen re-scaling coefficient α.
-    pub alpha: f64,
-    /// Chosen momentum coefficient μ (0 if momentum off / first step).
-    pub mu: f64,
-    /// Current λ and γ after any adaptation this step.
-    pub lambda: f64,
-    pub gamma: f64,
-    /// Reduction ratio ρ (NaN on iterations where it isn't evaluated).
-    pub rho: f64,
-    /// Update norm ‖δ‖₂.
-    pub delta_norm: f64,
 }
 
 /// K-FAC optimizer state.
@@ -115,6 +121,9 @@ pub struct Kfac {
     pub lambda: f64,
     pub gamma: f64,
     inv: Option<Box<dyn FisherInverse + Send>>,
+    /// The (stats, γ) snapshot the cached inverse was built from —
+    /// checkpointed so resume can rebuild `inv` bit-exactly.
+    refresh: Option<(RawStats, f64)>,
     delta_prev: Option<Params>,
     k: usize,
 }
@@ -123,7 +132,16 @@ impl Kfac {
     pub fn new(arch: &Arch, cfg: KfacConfig) -> Kfac {
         let lambda = cfg.lambda0;
         let gamma = (lambda + cfg.eta).sqrt();
-        Kfac { cfg, stats: KfacStats::new(arch), lambda, gamma, inv: None, delta_prev: None, k: 0 }
+        Kfac {
+            cfg,
+            stats: KfacStats::new(arch),
+            lambda,
+            gamma,
+            inv: None,
+            refresh: None,
+            delta_prev: None,
+            k: 0,
+        }
     }
 
     /// Current iteration count.
@@ -134,13 +152,6 @@ impl Kfac {
     /// The previous iteration's update δ₀ (the momentum direction).
     pub fn last_update(&self) -> Option<&Params> {
         self.delta_prev.as_ref()
-    }
-
-    fn build_inverse(&self, gamma: f64) -> Box<dyn FisherInverse + Send> {
-        match self.cfg.inverse {
-            InverseKind::BlockDiag => Box::new(BlockDiagInverse::build(&self.stats.s, gamma)),
-            InverseKind::BlockTridiag => Box::new(TridiagInverse::build(&self.stats.s, gamma)),
-        }
     }
 
     /// Solve for the optimal (α, μ) on the exact-Fisher quadratic model
@@ -173,9 +184,15 @@ impl Kfac {
         let mval = quad + b[0] * alpha + b[1] * mu;
         (vec![alpha, mu], mval)
     }
+}
+
+impl Optimizer for Kfac {
+    fn name(&self) -> &str {
+        "kfac"
+    }
 
     /// One K-FAC iteration on mini-batch `(x, y)`. Mutates `params`.
-    pub fn step(
+    fn step(
         &mut self,
         backend: &mut dyn ModelBackend,
         params: &mut Params,
@@ -222,7 +239,7 @@ impl Kfac {
         let mut best: Option<Cand> = None;
         for &g in &gammas {
             let inv_box: Option<Box<dyn FisherInverse + Send>> = if refresh_inv || adjust_gamma {
-                Some(self.build_inverse(g))
+                Some(cfg.precond.build(&self.stats.s, g))
             } else {
                 None
             };
@@ -262,6 +279,11 @@ impl Kfac {
         self.gamma = cand.gamma;
         if let Some(inv) = cand.inv {
             self.inv = Some(inv);
+            // snapshot the build inputs so checkpoints can rebuild the
+            // cached inverse bit-exactly on resume — a stats memcpy per
+            // refresh, negligible next to the O(n³) factorizations the
+            // refresh itself just performed
+            self.refresh = Some((self.stats.s.clone(), self.gamma));
         }
 
         // assemble δ = αΔ (+ μ δ₀)
@@ -273,15 +295,16 @@ impl Kfac {
         }
 
         // (6) ρ and λ (Section 6.5), every T₁ iterations
-        let mut rho = f64::NAN;
+        let mut rho = None;
         if cfg.t1 > 0 && k % cfg.t1 == 0 && cand.mval < 0.0 {
             let mut theta_new = params.clone();
             theta_new.axpy(1.0, &delta);
             let h1 = backend.loss(&theta_new, x, y) + 0.5 * cfg.eta * theta_new.norm_sq();
-            rho = (h1 - h0) / cand.mval;
-            if rho > 0.75 {
+            let r = (h1 - h0) / cand.mval;
+            rho = Some(r);
+            if r > 0.75 {
                 self.lambda *= cfg.omega1;
-            } else if rho < 0.25 {
+            } else if r < 0.25 {
                 self.lambda /= cfg.omega1;
             }
             self.lambda = self.lambda.clamp(cfg.lambda_min, cfg.lambda_max);
@@ -294,14 +317,103 @@ impl Kfac {
 
         StepInfo {
             loss: h0,
-            model_value: cand.mval,
-            alpha,
-            mu,
-            lambda: self.lambda,
-            gamma: self.gamma,
+            model_value: Some(cand.mval),
+            alpha: Some(alpha),
+            mu: Some(mu),
+            lambda: Some(self.lambda),
+            gamma: Some(self.gamma),
             rho,
-            delta_norm,
+            delta_norm: Some(delta_norm),
         }
+    }
+
+    fn state(&self) -> OptState {
+        let mut st = OptState::new("kfac");
+        st.set_str("precond", self.cfg.precond.name());
+        st.set_scalar("k", self.k as f64);
+        st.set_scalar("lambda", self.lambda);
+        st.set_scalar("gamma", self.gamma);
+        st.set_scalar("stats_k", self.stats.k as f64);
+        st.set_mats("stats_aa", self.stats.s.aa.clone());
+        st.set_mats("stats_aa_off", self.stats.s.aa_off.clone());
+        st.set_mats("stats_gg", self.stats.s.gg.clone());
+        st.set_mats("stats_gg_off", self.stats.s.gg_off.clone());
+        if let Some(d) = &self.delta_prev {
+            st.set_mats("delta_prev", d.0.clone());
+        }
+        if let Some((snap, g)) = &self.refresh {
+            st.set_scalar("refresh_gamma", *g);
+            st.set_mats("refresh_aa", snap.aa.clone());
+            st.set_mats("refresh_aa_off", snap.aa_off.clone());
+            st.set_mats("refresh_gg", snap.gg.clone());
+            st.set_mats("refresh_gg_off", snap.gg_off.clone());
+        }
+        st
+    }
+
+    fn load_state(&mut self, st: &OptState) -> Result<(), String> {
+        if st.kind != "kfac" {
+            return Err(format!("kfac: cannot load '{}' optimizer state", st.kind));
+        }
+        // Resuming with a different curvature structure would silently
+        // change the trajectory — the checkpoint pins the preconditioner.
+        let pname = st.require_str("precond")?;
+        if pname != self.cfg.precond.name() {
+            return Err(format!(
+                "kfac: checkpoint used preconditioner '{pname}', session uses '{}'",
+                self.cfg.precond.name()
+            ));
+        }
+        let aa = st.require_mats("stats_aa")?;
+        let aa_off = st.require_mats("stats_aa_off")?;
+        let gg = st.require_mats("stats_gg")?;
+        let gg_off = st.require_mats("stats_gg_off")?;
+        check_mat_shapes("stats_aa", aa, &self.stats.s.aa)?;
+        check_mat_shapes("stats_aa_off", aa_off, &self.stats.s.aa_off)?;
+        check_mat_shapes("stats_gg", gg, &self.stats.s.gg)?;
+        check_mat_shapes("stats_gg_off", gg_off, &self.stats.s.gg_off)?;
+        self.k = st.require_scalar("k")? as usize;
+        self.lambda = st.require_scalar("lambda")?;
+        self.gamma = st.require_scalar("gamma")?;
+        self.stats.k = st.require_scalar("stats_k")? as usize;
+        self.stats.s.aa = aa.to_vec();
+        self.stats.s.aa_off = aa_off.to_vec();
+        self.stats.s.gg = gg.to_vec();
+        self.stats.s.gg_off = gg_off.to_vec();
+        self.delta_prev = match st.mats("delta_prev") {
+            Some(d) => {
+                // weight-shaped: gg[i].rows × aa[i].rows per layer
+                let want = self
+                    .stats
+                    .s
+                    .aa
+                    .iter()
+                    .zip(self.stats.s.gg.iter())
+                    .map(|(a, g)| (g.rows, a.rows));
+                check_dims("delta_prev", d, want)?;
+                Some(Params(d.to_vec()))
+            }
+            None => None,
+        };
+        match (st.scalar("refresh_gamma"), st.mats("refresh_aa")) {
+            (Some(g), Some(raa)) => {
+                check_mat_shapes("refresh_aa", raa, &self.stats.s.aa)?;
+                let snap = RawStats {
+                    aa: raa.to_vec(),
+                    aa_off: st.require_mats("refresh_aa_off")?.to_vec(),
+                    gg: st.require_mats("refresh_gg")?.to_vec(),
+                    gg_off: st.require_mats("refresh_gg_off")?.to_vec(),
+                };
+                // deterministic rebuild of the cached inverse
+                self.inv = Some(self.cfg.precond.build(&snap, g));
+                self.refresh = Some((snap, g));
+            }
+            _ => {
+                self.inv = None;
+                self.refresh = None;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -347,10 +459,11 @@ mod tests {
 
     #[test]
     fn loss_decreases_over_training() {
-        for kind in [InverseKind::BlockDiag, InverseKind::BlockTridiag] {
+        for p in [precond::block_diag(), precond::block_tridiag()] {
+            let name = p.name().to_string();
             let (arch, mut params, x, y) = toy_problem(1);
             let mut backend = RustBackend::new(arch.clone());
-            let cfg = KfacConfig { inverse: kind, lambda0: 10.0, ..Default::default() };
+            let cfg = KfacConfig { precond: p, lambda0: 10.0, ..Default::default() };
             let mut opt = Kfac::new(&arch, cfg);
             let first = {
                 use crate::backend::ModelBackend;
@@ -361,10 +474,33 @@ mod tests {
                 let info = opt.step(&mut backend, &mut params, &x, &y);
                 last = info.loss;
                 assert!(info.loss.is_finite());
-                assert!(info.model_value <= 1e-12, "model value must be non-positive");
+                assert!(
+                    info.model_value.unwrap() <= 1e-12,
+                    "model value must be non-positive"
+                );
             }
-            assert!(last < first * 0.7, "{kind:?}: first={first} last={last}");
+            assert!(last < first * 0.7, "{name}: first={first} last={last}");
         }
+    }
+
+    #[test]
+    fn ekfac_trains_through_the_seam() {
+        let (arch, mut params, x, y) = toy_problem(1);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { lambda0: 10.0, ..KfacConfig::ekfac() };
+        let mut opt = Kfac::new(&arch, cfg);
+        let first = {
+            use crate::backend::ModelBackend;
+            backend.loss(&params, &x, &y)
+        };
+        let mut last = f64::NAN;
+        for _ in 0..30 {
+            let info = opt.step(&mut backend, &mut params, &x, &y);
+            last = info.loss;
+            assert!(info.loss.is_finite());
+            assert!(info.model_value.unwrap() <= 1e-12);
+        }
+        assert!(last < first, "ekfac: first={first} last={last}");
     }
 
     #[test]
@@ -373,10 +509,10 @@ mod tests {
         let mut backend = RustBackend::new(arch.clone());
         let mut opt = Kfac::new(&arch, KfacConfig { lambda0: 5.0, ..Default::default() });
         let i1 = opt.step(&mut backend, &mut params, &x, &y);
-        assert_eq!(i1.mu, 0.0, "no momentum available on step 1");
+        assert_eq!(i1.mu, Some(0.0), "no momentum available on step 1");
         let i2 = opt.step(&mut backend, &mut params, &x, &y);
         // μ can be any finite value, but must have been solved (non-NaN).
-        assert!(i2.mu.is_finite());
+        assert!(i2.mu.unwrap().is_finite());
     }
 
     #[test]
@@ -389,8 +525,9 @@ mod tests {
         // With a huge λ the update is tiny and the quadratic model is
         // accurate, so ρ ≈ 1 > 3/4 and λ must decay.
         let info = opt.step(&mut backend, &mut params, &x, &y);
-        assert!(!info.rho.is_nan());
-        assert!(info.lambda <= 1000.0 * om1 + 1e-9, "lambda={}", info.lambda);
+        assert!(info.rho.is_some());
+        let lambda = info.lambda.unwrap();
+        assert!(lambda <= 1000.0 * om1 + 1e-9, "lambda={lambda}");
     }
 
     #[test]
@@ -404,12 +541,11 @@ mod tests {
         let i2 = opt.step(&mut backend, &mut params, &x, &y);
         // on the T2 boundary gamma is re-selected from {γ, ω2γ, γ/ω2}
         let om2 = opt.cfg.omega2;
+        let g2 = i2.gamma.unwrap();
         let choices = [g0, g0 * om2, g0 / om2];
         assert!(
-            choices.iter().any(|c| (c - i2.gamma).abs() < 1e-12),
-            "gamma {} not in {:?}",
-            i2.gamma,
-            choices
+            choices.iter().any(|c| (c - g2).abs() < 1e-12),
+            "gamma {g2} not in {choices:?}"
         );
     }
 
@@ -423,7 +559,51 @@ mod tests {
             Kfac::new(&arch, KfacConfig { lambda0: 0.01, ..KfacConfig::block_diag() });
         for _ in 0..5 {
             let info = opt.step(&mut backend, &mut params, &x, &y);
-            assert!(info.model_value <= 1e-12);
+            assert!(info.model_value.unwrap() <= 1e-12);
         }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        // Snapshot mid-run, restore into a fresh optimizer, and check
+        // that both continue on bit-identical trajectories.
+        let (arch, mut params_a, x, y) = toy_problem(6);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { lambda0: 10.0, t3: 4, ..Default::default() };
+        let mut opt_a = Kfac::new(&arch, cfg.clone());
+        for _ in 0..7 {
+            opt_a.step(&mut backend, &mut params_a, &x, &y);
+        }
+        let snapshot = opt_a.state();
+        let mut params_b = params_a.clone();
+        let mut opt_b = Kfac::new(&arch, cfg);
+        opt_b.load_state(&snapshot).expect("state loads");
+        for s in 0..5 {
+            let ia = opt_a.step(&mut backend, &mut params_a, &x, &y);
+            let ib = opt_b.step(&mut backend, &mut params_b, &x, &y);
+            assert_eq!(ia.loss.to_bits(), ib.loss.to_bits(), "loss diverged at step {s}");
+            assert_eq!(ia.lambda, ib.lambda, "lambda diverged at step {s}");
+            assert_eq!(ia.gamma, ib.gamma, "gamma diverged at step {s}");
+            assert!(params_a == params_b, "params diverged at step {s}");
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_mismatches() {
+        let (arch, _, _, _) = toy_problem(7);
+        let mut opt = Kfac::new(&arch, KfacConfig::default());
+        let mut wrong = OptState::new("sgd");
+        wrong.set_scalar("t", 1.0);
+        assert!(opt.load_state(&wrong).is_err(), "wrong kind must be rejected");
+        let other_arch = Arch::new(
+            vec![4, 3, 2],
+            vec![Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let other = Kfac::new(&other_arch, KfacConfig::default()).state();
+        assert!(opt.load_state(&other).is_err(), "wrong shapes must be rejected");
+        let ek = Kfac::new(&arch, KfacConfig::ekfac()).state();
+        let err = opt.load_state(&ek).unwrap_err();
+        assert!(err.contains("preconditioner"), "wrong precond must be rejected: {err}");
     }
 }

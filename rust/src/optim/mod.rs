@@ -1,14 +1,17 @@
-//! Optimizers: the K-FAC algorithm (paper Algorithm 2) and the
-//! SGD-with-Nesterov-momentum baseline of Sutskever et al. (2013) used
-//! in the paper's evaluation, plus mini-batch-size schedules and
-//! Polyak-style iterate averaging.
+//! Optimizers: the open [`Optimizer`] trait with its unified
+//! [`StepInfo`] diagnostics and checkpointable [`OptState`], the K-FAC
+//! algorithm (paper Algorithm 2) and the SGD-with-Nesterov-momentum
+//! baseline of Sutskever et al. (2013) that implement it, plus
+//! mini-batch-size schedules and Polyak-style iterate averaging.
 
 pub mod kfac;
+pub mod optimizer;
 pub mod polyak;
 pub mod schedule;
 pub mod sgd;
 
-pub use kfac::{Kfac, KfacConfig, StepInfo};
+pub use kfac::{Kfac, KfacConfig};
+pub use optimizer::{OptState, Optimizer, StateVal, StepInfo};
 pub use polyak::PolyakAverager;
 pub use schedule::BatchSchedule;
 pub use sgd::{Sgd, SgdConfig};

@@ -1,0 +1,231 @@
+//! The open optimizer interface.
+//!
+//! [`Optimizer`] is the seam the training coordinator drives: one
+//! `step` per mini-batch, a unified [`StepInfo`] diagnostic record, and
+//! a structured [`OptState`] snapshot for checkpoint save/resume. Both
+//! [`Kfac`](crate::optim::Kfac) and [`Sgd`](crate::optim::Sgd)
+//! implement it, and downstream crates can plug in their own
+//! optimizers without touching the coordinator.
+
+use crate::backend::ModelBackend;
+use crate::linalg::Mat;
+use crate::nn::Params;
+use std::collections::BTreeMap;
+
+/// Per-step diagnostics, unified across optimizers.
+///
+/// `loss` is always present (the regularized mini-batch objective at
+/// the pre-step parameters). Everything else is optional: an optimizer
+/// reports the quantities it actually computes (K-FAC fills in λ/γ/α/μ
+/// and the quadratic-model value; SGD only its momentum coefficient),
+/// and consumers must not assume more than `loss`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepInfo {
+    /// Regularized objective h(θ) on the mini-batch (before the step).
+    pub loss: f64,
+    /// Quadratic-model value M(δ) (negative ⇒ predicted decrease).
+    pub model_value: Option<f64>,
+    /// Chosen re-scaling coefficient α.
+    pub alpha: Option<f64>,
+    /// Momentum coefficient μ.
+    pub mu: Option<f64>,
+    /// Damping λ after any adaptation this step.
+    pub lambda: Option<f64>,
+    /// Factored-Tikhonov strength γ after any adaptation this step.
+    pub gamma: Option<f64>,
+    /// Reduction ratio ρ (only on iterations where it is evaluated).
+    pub rho: Option<f64>,
+    /// Update norm ‖δ‖₂.
+    pub delta_norm: Option<f64>,
+}
+
+impl StepInfo {
+    /// A record carrying only the loss.
+    pub fn with_loss(loss: f64) -> StepInfo {
+        StepInfo { loss, ..Default::default() }
+    }
+}
+
+/// One value in an optimizer state snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateVal {
+    Scalar(f64),
+    Str(String),
+    Mats(Vec<Mat>),
+}
+
+/// A structured, serializable snapshot of an optimizer's full mutable
+/// state (the checkpoint payload). Deliberately schema-free — a tagged
+/// key/value tree — so new optimizers can checkpoint without touching
+/// the serialization layer.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct OptState {
+    /// Which optimizer produced this state (e.g. `"kfac"`, `"sgd"`).
+    pub kind: String,
+    /// Named state entries, sorted for stable serialization.
+    pub entries: BTreeMap<String, StateVal>,
+}
+
+impl OptState {
+    pub fn new(kind: &str) -> OptState {
+        OptState { kind: kind.to_string(), entries: BTreeMap::new() }
+    }
+
+    pub fn set_scalar(&mut self, key: &str, v: f64) {
+        self.entries.insert(key.to_string(), StateVal::Scalar(v));
+    }
+
+    pub fn set_str(&mut self, key: &str, v: &str) {
+        self.entries.insert(key.to_string(), StateVal::Str(v.to_string()));
+    }
+
+    pub fn set_mats(&mut self, key: &str, v: Vec<Mat>) {
+        self.entries.insert(key.to_string(), StateVal::Mats(v));
+    }
+
+    pub fn scalar(&self, key: &str) -> Option<f64> {
+        match self.entries.get(key) {
+            Some(StateVal::Scalar(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn str_val(&self, key: &str) -> Option<&str> {
+        match self.entries.get(key) {
+            Some(StateVal::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn mats(&self, key: &str) -> Option<&[Mat]> {
+        match self.entries.get(key) {
+            Some(StateVal::Mats(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Fetch a required scalar with a descriptive error.
+    pub fn require_scalar(&self, key: &str) -> Result<f64, String> {
+        self.scalar(key).ok_or_else(|| format!("{} state: missing scalar '{key}'", self.kind))
+    }
+
+    /// Fetch a required matrix list with a descriptive error.
+    pub fn require_mats(&self, key: &str) -> Result<&[Mat], String> {
+        self.mats(key).ok_or_else(|| format!("{} state: missing mats '{key}'", self.kind))
+    }
+
+    /// Fetch a required string with a descriptive error.
+    pub fn require_str(&self, key: &str) -> Result<&str, String> {
+        self.str_val(key).ok_or_else(|| format!("{} state: missing string '{key}'", self.kind))
+    }
+}
+
+/// Check that a restored matrix list matches expected (rows, cols)
+/// dimensions without materializing reference matrices.
+pub fn check_dims(
+    name: &str,
+    got: &[Mat],
+    want: impl ExactSizeIterator<Item = (usize, usize)>,
+) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{name}: expected {} matrices, got {}", want.len(), got.len()));
+    }
+    for (i, (g, (rows, cols))) in got.iter().zip(want).enumerate() {
+        if (g.rows, g.cols) != (rows, cols) {
+            return Err(format!(
+                "{name}[{i}]: expected {rows}x{cols}, got {}x{}",
+                g.rows, g.cols
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Check that a restored matrix list matches the expected shapes.
+pub fn check_mat_shapes(name: &str, got: &[Mat], want: &[Mat]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{name}: expected {} matrices, got {}", want.len(), got.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if (g.rows, g.cols) != (w.rows, w.cols) {
+            return Err(format!(
+                "{name}[{i}]: expected {}x{}, got {}x{}",
+                w.rows, w.cols, g.rows, g.cols
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// A stochastic optimizer the training coordinator can drive.
+///
+/// Implementations own all their mutable state (iteration counters,
+/// damping, momentum buffers, curvature estimates) and mutate `params`
+/// in place once per `step`.
+pub trait Optimizer {
+    /// Short identifier for logs, registries and checkpoint headers.
+    fn name(&self) -> &str;
+
+    /// One iteration on mini-batch `(x, y)`. Mutates `params`.
+    fn step(
+        &mut self,
+        backend: &mut dyn ModelBackend,
+        params: &mut Params,
+        x: &Mat,
+        y: &Mat,
+    ) -> StepInfo;
+
+    /// Snapshot the full mutable state for checkpointing.
+    fn state(&self) -> OptState;
+
+    /// Restore from a snapshot taken by [`Optimizer::state`] on an
+    /// optimizer constructed with the same configuration. Must restore
+    /// *everything* the trajectory depends on (resume is bit-exact).
+    fn load_state(&mut self, state: &OptState) -> Result<(), String>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optstate_roundtrips_values() {
+        let mut st = OptState::new("test");
+        st.set_scalar("a", 1.5);
+        st.set_str("s", "blkdiag");
+        st.set_mats("m", vec![Mat::eye(2)]);
+        assert_eq!(st.scalar("a"), Some(1.5));
+        assert_eq!(st.scalar("missing"), None);
+        assert_eq!(st.str_val("s"), Some("blkdiag"));
+        assert_eq!(st.mats("m").unwrap().len(), 1);
+        assert!(st.require_scalar("a").is_ok());
+        assert!(st.require_scalar("b").is_err());
+        assert!(st.require_mats("a").is_err(), "scalar is not a mat list");
+        assert!(st.require_str("a").is_err(), "scalar is not a string");
+    }
+
+    #[test]
+    fn dims_check_catches_mismatches() {
+        let got = vec![Mat::zeros(2, 3)];
+        assert!(check_dims("x", &got, [(2usize, 3usize)].into_iter()).is_ok());
+        assert!(check_dims("x", &got, [(3usize, 2usize)].into_iter()).is_err());
+        assert!(check_dims("x", &got, std::iter::empty()).is_err());
+    }
+
+    #[test]
+    fn shape_check_catches_mismatches() {
+        let a = vec![Mat::zeros(2, 3)];
+        let b = vec![Mat::zeros(2, 3)];
+        let c = vec![Mat::zeros(3, 2)];
+        assert!(check_mat_shapes("x", &a, &b).is_ok());
+        assert!(check_mat_shapes("x", &a, &c).is_err());
+        assert!(check_mat_shapes("x", &a, &[]).is_err());
+    }
+
+    #[test]
+    fn stepinfo_defaults_are_absent() {
+        let i = StepInfo::with_loss(2.0);
+        assert_eq!(i.loss, 2.0);
+        assert!(i.lambda.is_none() && i.rho.is_none() && i.delta_norm.is_none());
+    }
+}

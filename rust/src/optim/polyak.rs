@@ -1,6 +1,10 @@
 //! Exponentially-decayed iterate averaging (paper Section 13): the
 //! "averaged" estimate is `ξ·avg + (1−ξ)·θ_k` with ξ = 0.99, and the
 //! reported error is the min over {current, averaged}.
+//!
+//! [`PolyakAverager::get`] returns `None` until the first update —
+//! callers evaluating before any training step (or on zero-iteration
+//! runs) must treat the averaged estimate as absent, not panic.
 
 use crate::nn::Params;
 
@@ -12,6 +16,12 @@ pub struct PolyakAverager {
 impl PolyakAverager {
     pub fn new(xi: f64) -> PolyakAverager {
         PolyakAverager { xi, avg: None }
+    }
+
+    /// Rebuild from checkpointed state (`avg` is `None` when the
+    /// averager had not yet absorbed an update).
+    pub fn restore(xi: f64, avg: Option<Params>) -> PolyakAverager {
+        PolyakAverager { xi, avg }
     }
 
     pub fn update(&mut self, params: &Params) {
@@ -45,5 +55,23 @@ mod tests {
         }
         let a = avg.get().unwrap();
         assert!((a.0[0].at(0, 0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_averager_reports_absent_not_panicking() {
+        let avg = PolyakAverager::new(0.99);
+        assert!(avg.get().is_none());
+    }
+
+    #[test]
+    fn restore_roundtrips() {
+        let p = Params(vec![Mat::filled(2, 2, 3.0)]);
+        let mut avg = PolyakAverager::new(0.9);
+        avg.update(&p);
+        let re = PolyakAverager::restore(avg.xi, avg.get().cloned());
+        assert_eq!(re.xi, 0.9);
+        assert!(re.get().unwrap() == &p);
+        let empty = PolyakAverager::restore(0.5, None);
+        assert!(empty.get().is_none());
     }
 }

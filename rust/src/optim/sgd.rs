@@ -1,12 +1,15 @@
 //! Baseline: SGD with Nesterov's Accelerated Gradient, tuned as in
 //! Sutskever et al. (2013) — the baseline the paper compares against
-//! (Section 13).
+//! (Section 13). Implements the [`Optimizer`] trait, including state
+//! snapshot/restore for checkpointing.
 //!
 //! Update: `v ← μ_t v − ε ∇h(θ + μ_t v)`, `θ ← θ + v`, with the
 //! momentum schedule `μ_t = min(1 − 2^{−1−log₂(⌊t/250⌋+1)}, μ_max)`.
 
 use crate::backend::ModelBackend;
+use crate::linalg::Mat;
 use crate::nn::Params;
+use crate::optim::optimizer::{check_mat_shapes, OptState, Optimizer, StepInfo};
 
 #[derive(Clone, Debug)]
 pub struct SgdConfig {
@@ -48,15 +51,22 @@ impl Sgd {
         let mu = 1.0 - 2.0_f64.powf(-1.0 - base.log2());
         mu.min(self.cfg.mu_max)
     }
+}
 
-    /// One NAG step; returns the (regularized) loss at the lookahead point.
-    pub fn step(
+impl Optimizer for Sgd {
+    fn name(&self) -> &str {
+        "sgd"
+    }
+
+    /// One NAG step; `loss` is the (regularized) objective at the
+    /// lookahead point.
+    fn step(
         &mut self,
         backend: &mut dyn ModelBackend,
         params: &mut Params,
-        x: &crate::linalg::Mat,
-        y: &crate::linalg::Mat,
-    ) -> f64 {
+        x: &Mat,
+        y: &Mat,
+    ) -> StepInfo {
         self.t += 1;
         let mu = self.mu_at(self.t);
         let v = self.v.get_or_insert_with(|| params.zeros_like());
@@ -70,8 +80,45 @@ impl Sgd {
         let mut vnew = v.scale(mu);
         vnew.axpy(-self.cfg.lr, &grad);
         params.axpy(1.0, &vnew);
+        let delta_norm = vnew.norm_sq().sqrt();
         *v = vnew;
-        h
+        StepInfo {
+            loss: h,
+            mu: Some(mu),
+            delta_norm: Some(delta_norm),
+            ..Default::default()
+        }
+    }
+
+    fn state(&self) -> OptState {
+        let mut st = OptState::new("sgd");
+        st.set_scalar("t", self.t as f64);
+        if let Some(v) = &self.v {
+            st.set_mats("v", v.0.clone());
+        }
+        st
+    }
+
+    /// Note: `Sgd` learns its buffer shapes lazily (from the first
+    /// `step`), so a fresh optimizer can only validate `v` against an
+    /// existing buffer; on the checkpoint-resume path the coordinator
+    /// has already validated the checkpoint's parameters against the
+    /// architecture, which pins the same shapes.
+    fn load_state(&mut self, st: &OptState) -> Result<(), String> {
+        if st.kind != "sgd" {
+            return Err(format!("sgd: cannot load '{}' optimizer state", st.kind));
+        }
+        self.t = st.require_scalar("t")? as usize;
+        self.v = match st.mats("v") {
+            Some(v) => {
+                if let Some(cur) = &self.v {
+                    check_mat_shapes("v", v, &cur.0)?;
+                }
+                Some(Params(v.to_vec()))
+            }
+            None => None,
+        };
+        Ok(())
     }
 }
 
@@ -79,7 +126,6 @@ impl Sgd {
 mod tests {
     use super::*;
     use crate::backend::{ModelBackend, RustBackend};
-    use crate::linalg::Mat;
     use crate::nn::{Act, Arch, LossKind};
     use crate::rng::Rng;
 
@@ -92,23 +138,50 @@ mod tests {
         assert!((sgd.mu_at(1) - 0.5).abs() < 1e-12, "t<250 gives μ=1-2^-1=0.5");
     }
 
-    #[test]
-    fn sgd_decreases_loss_on_toy_problem() {
+    fn toy() -> (Arch, Params, Mat, Mat) {
         let arch = Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
         let mut rng = Rng::new(1);
-        let mut params = arch.sparse_init(&mut rng);
+        let params = arch.sparse_init(&mut rng);
         let x = Mat::randn(64, 5, 1.0, &mut rng);
         let mut y = Mat::zeros(64, 3);
         for r in 0..64 {
             y.set(r, if x.at(r, 0) > 0.0 { 0 } else { 2 }, 1.0);
         }
+        (arch, params, x, y)
+    }
+
+    #[test]
+    fn sgd_decreases_loss_on_toy_problem() {
+        let (arch, mut params, x, y) = toy();
         let mut be = RustBackend::new(arch.clone());
         let first = be.loss(&params, &x, &y);
         let mut sgd = Sgd::new(SgdConfig { lr: 0.1, ..Default::default() });
         for _ in 0..200 {
-            sgd.step(&mut be, &mut params, &x, &y);
+            let info = sgd.step(&mut be, &mut params, &x, &y);
+            assert!(info.mu.unwrap() > 0.0);
         }
         let last = be.loss(&params, &x, &y);
         assert!(last < first * 0.5, "first={first} last={last}");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        let (arch, mut pa, x, y) = toy();
+        let mut be = RustBackend::new(arch.clone());
+        let mut a = Sgd::new(SgdConfig { lr: 0.05, ..Default::default() });
+        for _ in 0..5 {
+            a.step(&mut be, &mut pa, &x, &y);
+        }
+        let snap = a.state();
+        let mut pb = pa.clone();
+        let mut b = Sgd::new(SgdConfig { lr: 0.05, ..Default::default() });
+        b.load_state(&snap).unwrap();
+        for s in 0..5 {
+            let ia = a.step(&mut be, &mut pa, &x, &y);
+            let ib = b.step(&mut be, &mut pb, &x, &y);
+            assert_eq!(ia.loss.to_bits(), ib.loss.to_bits(), "diverged at step {s}");
+            assert!(pa == pb, "params diverged at step {s}");
+        }
+        assert!(b.load_state(&OptState::new("kfac")).is_err());
     }
 }

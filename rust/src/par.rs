@@ -1,12 +1,22 @@
-//! Minimal scoped-thread parallelism (a tiny rayon substitute).
+//! Minimal data parallelism (a tiny rayon substitute).
 //!
 //! The K-FAC hot paths that benefit from threads on the Rust side are the
 //! dense matmuls in `linalg` (layer-sized GEMMs, covariance updates,
 //! preconditioner application). We split the output row range into one
-//! contiguous chunk per worker and run them under `std::thread::scope`,
-//! so no `'static` bounds or channels are needed.
+//! contiguous chunk per worker and execute the chunks on a **persistent
+//! worker pool** (`num_threads() − 1` long-lived threads plus the
+//! caller), so the many mid-sized GEMMs in a K-FAC step do not pay a
+//! thread spawn each. While a caller waits for its chunks it *helps* by
+//! draining the shared queue, which makes nested parallel calls (e.g. a
+//! GEMM inside a per-layer `par_map_send`) deadlock-free.
+//!
+//! Set `KFAC_POOL=0` to fall back to the original per-call
+//! `std::thread::scope` path, and `KFAC_THREADS=1` to run everything
+//! inline on the caller.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (cores − 1, at least 1), overridable
 /// with the `KFAC_THREADS` environment variable.
@@ -32,10 +42,96 @@ pub fn num_threads() -> usize {
 /// Chunking heuristic for flop-shaped work (the GEMM macro-kernel and
 /// row loops): the smallest chunk of `items` whose cost reaches
 /// `TARGET_FLOPS`, so tiny problems run inline on the caller thread and
-/// only work that amortizes a thread spawn is split across the pool.
+/// only work that amortizes a dispatch is split across the pool.
 pub fn chunk_for_flops(items: usize, flops_per_item: usize) -> usize {
     const TARGET_FLOPS: usize = 1 << 16;
     (TARGET_FLOPS / flops_per_item.max(1)).clamp(1, items.max(1))
+}
+
+// ---------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+impl Pool {
+    fn submit(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.available.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = self.available.wait(q).unwrap();
+                }
+            };
+            job();
+        }
+    }
+}
+
+/// Completion latch for one `par_ranges` dispatch.
+struct Latch {
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: AtomicUsize::new(n), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+}
+
+fn pool_enabled() -> bool {
+    !matches!(
+        std::env::var("KFAC_POOL").as_deref(),
+        Ok("0") | Ok("off") | Ok("false") | Ok("scoped")
+    )
+}
+
+/// The process-wide pool: `num_threads() − 1` detached workers, spawned
+/// lazily on first parallel call. `None` when threads are disabled or
+/// `KFAC_POOL=0` selects the scoped fallback.
+fn pool() -> Option<&'static Pool> {
+    static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let workers = num_threads();
+        if workers <= 1 || !pool_enabled() {
+            return None;
+        }
+        let pool: &'static Pool =
+            Box::leak(Box::new(Pool { queue: Mutex::new(VecDeque::new()), available: Condvar::new() }));
+        for w in 0..workers - 1 {
+            std::thread::Builder::new()
+                .name(format!("kfac-pool-{w}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawn kfac pool worker");
+        }
+        Some(pool)
+    })
 }
 
 /// Run `body(lo, hi)` over a partition of `0..n` into contiguous chunks,
@@ -51,16 +147,93 @@ where
         return;
     }
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|s| {
-        for w in 0..workers {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
+    let ranges: Vec<(usize, usize)> = (0..workers)
+        .map(|w| (w * chunk, ((w + 1) * chunk).min(n)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    if ranges.len() == 1 {
+        body(0, n);
+        return;
+    }
+    match pool() {
+        Some(pool) => par_ranges_pooled(pool, &ranges, &body),
+        None => par_ranges_scoped(&ranges, &body),
+    }
+}
+
+/// Monomorphized trampoline: recovers the `&F` behind the laundered
+/// address. Taking this as a plain `fn` pointer keeps the pool's boxed
+/// jobs free of `F` (and of its lifetimes — the `'static` job bound).
+fn chunk_trampoline<F>(addr: usize, lo: usize, hi: usize)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    // SAFETY: see par_ranges_pooled — `addr` points at a live `F` for
+    // the whole dispatch, and `F: Sync` makes shared access sound.
+    let f = unsafe { &*(addr as *const F) };
+    f(lo, hi);
+}
+
+/// Dispatch chunks onto the persistent pool; the caller runs the first
+/// chunk itself and then helps drain the queue until its latch opens.
+fn par_ranges_pooled<F>(pool: &'static Pool, ranges: &[(usize, usize)], body: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let latch = Arc::new(Latch::new(ranges.len() - 1));
+    // Lifetime laundering: jobs on the 'static pool capture the closure
+    // address as a plain usize. SAFETY: this function does not return
+    // until `latch` confirms every submitted job has finished running
+    // `body`, so the reference never dangles, and each job runs exactly
+    // once.
+    let body_addr = body as *const F as usize;
+    let trampoline: fn(usize, usize, usize) = chunk_trampoline::<F>;
+    for &(lo, hi) in &ranges[1..] {
+        let latch = Arc::clone(&latch);
+        pool.submit(Box::new(move || {
+            let call = || trampoline(body_addr, lo, hi);
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(call)).is_ok();
+            if !ok {
+                latch.panicked.store(true, Ordering::Release);
             }
-            let body = &body;
+            latch.count_down();
+        }));
+    }
+    // The caller's own chunk must also be panic-guarded: unwinding out
+    // of this frame before the latch opens would free the stack slot
+    // behind `body_addr` while queued jobs still reference it (UB). So
+    // catch, drain the latch, then resume the unwind.
+    let (lo0, hi0) = ranges[0];
+    let caller_result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(lo0, hi0)));
+    // Help-first wait: execute whatever is queued (ours or an unrelated
+    // dispatch) so nested parallel calls cannot deadlock the pool.
+    while !latch.done() {
+        match pool.try_pop() {
+            Some(job) => job(),
+            None => std::thread::yield_now(),
+        }
+    }
+    if let Err(payload) = caller_result {
+        std::panic::resume_unwind(payload);
+    }
+    assert!(
+        !latch.panicked.load(Ordering::Acquire),
+        "par_ranges: a worker chunk panicked"
+    );
+}
+
+/// The original per-call scoped-thread fallback (`KFAC_POOL=0`).
+fn par_ranges_scoped<F>(ranges: &[(usize, usize)], body: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    std::thread::scope(|s| {
+        for &(lo, hi) in &ranges[1..] {
             s.spawn(move || body(lo, hi));
         }
+        let (lo0, hi0) = ranges[0];
+        body(lo0, hi0);
     });
 }
 
@@ -143,6 +316,31 @@ mod tests {
     fn small_n_runs_inline() {
         let got = par_map(3, 1000, |i| i);
         assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        // A worker chunk that itself dispatches to the pool must not
+        // deadlock (the help-first wait drains the inner jobs).
+        let got = par_map(8, 1, |i| {
+            let inner = par_map(64, 4, move |j| (i * 64 + j) as u64);
+            inner.iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..8u64)
+            .map(|i| (0..64u64).map(|j| i * 64 + j).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn repeated_dispatches_reuse_the_pool() {
+        // Exercise many small dispatches back-to-back — the shape the
+        // persistent pool exists for — and check correctness each time.
+        for round in 0..50u64 {
+            let got = par_map(97, 4, move |i| i as u64 + round);
+            let want: Vec<u64> = (0..97u64).map(|i| i + round).collect();
+            assert_eq!(got, want, "round {round}");
+        }
     }
 
     #[test]

@@ -1,14 +1,13 @@
-//! End-to-end training behaviour (rust backend): K-FAC optimizes the
-//! paper's problem family, beats SGD per-iteration, and the
-//! block-tridiagonal variant is at least as good per-iteration as the
-//! block-diagonal one on average.
+//! End-to-end training behaviour (rust backend) through the
+//! `TrainSession` API: K-FAC optimizes the paper's problem family,
+//! beats SGD per-iteration, and every registered preconditioner trains
+//! stably through the `Preconditioner` seam.
 
-use kfac::backend::{ModelBackend, RustBackend};
-use kfac::coordinator::trainer::{Optimizer, TrainConfig, Trainer};
+use kfac::coordinator::{LogRow, TrainSession};
 use kfac::data::mnist_like;
-use kfac::fisher::InverseKind;
+use kfac::fisher::precond;
 use kfac::nn::{Act, Arch};
-use kfac::optim::{BatchSchedule, KfacConfig, SgdConfig};
+use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 
 fn small_ae_setup() -> (Arch, kfac::data::Dataset) {
@@ -20,21 +19,21 @@ fn small_ae_setup() -> (Arch, kfac::data::Dataset) {
 fn run(
     arch: &Arch,
     ds: &kfac::data::Dataset,
-    optimizer: Optimizer,
+    opt: Box<dyn Optimizer>,
     iters: usize,
     seed: u64,
-) -> Vec<kfac::coordinator::trainer::LogRow> {
-    let mut backend = RustBackend::new(arch.clone());
-    let mut params = arch.sparse_init(&mut Rng::new(seed));
-    let cfg = TrainConfig {
-        iters,
-        schedule: BatchSchedule::Fixed(256),
-        eval_every: iters,
-        eval_rows: 256,
-        polyak: Some(0.99),
-        seed,
-    };
-    Trainer::new(cfg, ds).run(&mut backend, &mut params, optimizer, false)
+) -> Vec<LogRow> {
+    TrainSession::for_dataset(arch.clone(), ds)
+        .iters(iters)
+        .schedule(BatchSchedule::Fixed(256))
+        .eval_every(iters)
+        .eval_rows(256)
+        .polyak(0.99)
+        .seed(seed)
+        .params(arch.sparse_init(&mut Rng::new(seed)))
+        .optimizer_boxed(opt)
+        .run()
+        .log
 }
 
 #[test]
@@ -44,14 +43,14 @@ fn kfac_beats_sgd_per_iteration_on_autoencoder() {
     // λ₀ scaled down and adapted every iteration: a 40-iteration run is
     // far shorter than the paper's, so the LM rule needs to move fast.
     let kfac_cfg = KfacConfig { lambda0: 2.0, t1: 1, ..Default::default() };
-    let k = run(&arch, &ds, Optimizer::Kfac(kfac_cfg), iters, 1);
+    let k = run(&arch, &ds, Box::new(Kfac::new(&arch, kfac_cfg)), iters, 1);
     // modestly-tuned SGD baseline (lr from a small grid; larger diverges)
     let mut best_sgd = f64::INFINITY;
     for lr in [0.003, 0.01, 0.03] {
         let s = run(
             &arch,
             &ds,
-            Optimizer::Sgd(SgdConfig { lr, ..Default::default() }),
+            Box::new(Sgd::new(SgdConfig { lr, ..Default::default() })),
             iters,
             1,
         );
@@ -71,20 +70,20 @@ fn classifier_reaches_low_training_error() {
     // our synthetic digits are easier, so just require a large drop.
     let arch = Arch::classifier(&[256, 20, 20, 20, 20, 10], Act::Tanh);
     let ds = mnist_like::classification_dataset(256, 16, 5);
-    let mut backend = RustBackend::new(arch.clone());
-    let mut params = arch.sparse_init(&mut Rng::new(2));
-    let cfg = TrainConfig {
-        iters: 30,
-        schedule: BatchSchedule::Fixed(256),
-        eval_every: 5,
-        eval_rows: 256,
-        polyak: None,
-        seed: 3,
-    };
     let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
-    let log = Trainer::new(cfg, &ds).run(&mut backend, &mut params, Optimizer::Kfac(kcfg), false);
-    let first = log.first().unwrap().train_err;
-    let last = log.last().unwrap().train_err;
+    let opt = Kfac::new(&arch, kcfg);
+    let report = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(30)
+        .schedule(BatchSchedule::Fixed(256))
+        .eval_every(5)
+        .eval_rows(256)
+        .no_polyak()
+        .seed(3)
+        .params(arch.sparse_init(&mut Rng::new(2)))
+        .optimizer(opt)
+        .run();
+    let first = report.log.first().unwrap().train_err;
+    let last = report.log.last().unwrap().train_err;
     assert!(first > 0.5, "initial error should be near chance, got {first}");
     assert!(last < 0.1, "final training error too high: {last}");
 }
@@ -96,14 +95,17 @@ fn momentum_accelerates_batch_optimization() {
     let with = run(
         &arch,
         &ds,
-        Optimizer::Kfac(KfacConfig { lambda0: 15.0, ..Default::default() }),
+        Box::new(Kfac::new(&arch, KfacConfig { lambda0: 15.0, ..Default::default() })),
         25,
         7,
     );
     let without = run(
         &arch,
         &ds,
-        Optimizer::Kfac(KfacConfig { lambda0: 15.0, ..Default::default() }.no_momentum()),
+        Box::new(Kfac::new(
+            &arch,
+            KfacConfig { lambda0: 15.0, ..Default::default() }.no_momentum(),
+        )),
         25,
         7,
     );
@@ -118,42 +120,46 @@ fn momentum_accelerates_batch_optimization() {
 #[test]
 fn exponential_batch_schedule_runs_and_learns() {
     let (arch, ds) = small_ae_setup();
-    let mut backend = RustBackend::new(arch.clone());
-    let mut params = arch.sparse_init(&mut Rng::new(4));
-    let cfg = TrainConfig {
-        iters: 15,
-        schedule: BatchSchedule::exponential_reaching(64, 512, 10),
-        eval_every: 15,
-        eval_rows: 256,
-        polyak: Some(0.99),
-        seed: 5,
-    };
-    let (l0, e0) = {
-        let b: &mut dyn ModelBackend = &mut backend;
-        b.eval(&params, &ds.x.top_rows(256), &ds.y.top_rows(256))
-    };
     let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
-    let log = Trainer::new(cfg, &ds).run(&mut backend, &mut params, Optimizer::Kfac(kcfg), false);
-    let last = log.last().unwrap();
-    assert!(last.train_err < e0, "err {} -> {}", e0, last.train_err);
-    assert!(last.train_loss < l0);
+    let opt = Kfac::new(&arch, kcfg);
+    let report = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(15)
+        .schedule(BatchSchedule::exponential_reaching(64, 512, 10))
+        .eval_every(15)
+        .eval_rows(256)
+        .eval_initial()
+        .polyak(0.99)
+        .seed(5)
+        .params(arch.sparse_init(&mut Rng::new(4)))
+        .optimizer(opt)
+        .run();
+    // the eval_initial row is the untrained baseline
+    let first = report.log.first().unwrap();
+    assert_eq!(first.iter, 0);
+    let last = report.log.last().unwrap();
+    assert!(last.train_err < first.train_err, "err {} -> {}", first.train_err, last.train_err);
+    assert!(last.train_loss < first.train_loss);
     // schedule actually grew the batches
     assert!(last.cases > 15.0 * 64.0);
 }
 
 #[test]
-fn both_inverse_kinds_train_stably() {
+fn all_registered_preconditioners_train_stably() {
     let (arch, ds) = small_ae_setup();
-    for kind in [InverseKind::BlockDiag, InverseKind::BlockTridiag] {
+    for p in [precond::block_diag(), precond::block_tridiag(), precond::ekfac()] {
+        let name = p.name().to_string();
         let log = run(
             &arch,
             &ds,
-            Optimizer::Kfac(KfacConfig { inverse: kind, lambda0: 15.0, ..Default::default() }),
+            Box::new(Kfac::new(
+                &arch,
+                KfacConfig { precond: p, lambda0: 15.0, ..Default::default() },
+            )),
             15,
             9,
         );
         for row in &log {
-            assert!(row.train_loss.is_finite(), "{kind:?} diverged");
+            assert!(row.train_loss.is_finite(), "{name} diverged");
         }
     }
 }

@@ -7,7 +7,7 @@ use kfac::fisher::stats::RawStats;
 use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
 use kfac::linalg::Mat;
 use kfac::nn::{Act, Arch, LossKind, Params};
-use kfac::optim::{Kfac, KfacConfig};
+use kfac::optim::{Kfac, KfacConfig, Optimizer};
 use kfac::rng::Rng;
 
 fn tiny() -> (Arch, Params, Mat, Mat) {
@@ -32,7 +32,7 @@ fn single_case_minibatch_does_not_panic() {
     for _ in 0..5 {
         let info = opt.step(&mut be, &mut p, &x1, &y1);
         assert!(info.loss.is_finite());
-        assert!(info.delta_norm.is_finite());
+        assert!(info.delta_norm.unwrap().is_finite());
     }
 }
 
@@ -47,8 +47,9 @@ fn near_zero_gradient_produces_near_zero_update() {
         opt.step(&mut be, &mut p, &x, &y);
     }
     let info = opt.step(&mut be, &mut p, &x, &y);
-    assert!(info.delta_norm.is_finite());
-    assert!(info.delta_norm < 10.0, "update exploded near optimum: {}", info.delta_norm);
+    let dn = info.delta_norm.unwrap();
+    assert!(dn.is_finite());
+    assert!(dn < 10.0, "update exploded near optimum: {dn}");
 }
 
 #[test]
@@ -60,7 +61,7 @@ fn extreme_damping_values_are_stable() {
         let mut opt = Kfac::new(&arch, KfacConfig { lambda0, ..Default::default() });
         let info = opt.step(&mut be, &mut params, &x, &y);
         assert!(info.loss.is_finite(), "λ0={lambda0}");
-        assert!(info.delta_norm.is_finite(), "λ0={lambda0}");
+        assert!(info.delta_norm.unwrap().is_finite(), "λ0={lambda0}");
         for w in &params.0 {
             assert!(w.data.iter().all(|v| v.is_finite()), "λ0={lambda0}");
         }
@@ -107,7 +108,7 @@ fn momentum_with_identical_directions_falls_back() {
     // two identical steps in a row make Δ and δ0 nearly parallel
     for _ in 0..4 {
         let info = opt.step(&mut be, &mut p, &x, &y);
-        assert!(info.alpha.is_finite() && info.mu.is_finite());
+        assert!(info.alpha.unwrap().is_finite() && info.mu.unwrap().is_finite());
     }
 }
 

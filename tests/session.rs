@@ -1,0 +1,322 @@
+//! Integration tests for the redesigned optimization API: the
+//! `TrainSession` builder, versioned checkpoint save→load→resume
+//! (bit-exact trajectories), golden-seed determinism of `Kfac`/`Sgd`
+//! behind the `Optimizer` trait, and the EKFAC preconditioner plugged
+//! through the `Preconditioner` seam.
+
+use kfac::coordinator::{checkpoint, Event, LogRow, Problem, TrainSession};
+use kfac::data::mnist_like;
+use kfac::nn::{Act, Arch, Params};
+use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
+use kfac::rng::Rng;
+use std::path::PathBuf;
+
+fn small_setup() -> (Arch, kfac::data::Dataset) {
+    let arch = Arch::autoencoder(&[64, 24, 8, 24, 64], Act::Tanh);
+    let ds = mnist_like::autoencoder_dataset(128, 8, 3);
+    (arch, ds)
+}
+
+fn kfac_cfg() -> KfacConfig {
+    KfacConfig { lambda0: 5.0, ..Default::default() }
+}
+
+fn tmp_ckpt(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("kfac_session_tests/{name}.ckpt"))
+}
+
+/// Log rows must match bit-for-bit on everything except wall-clock.
+fn assert_rows_bit_equal(a: &LogRow, b: &LogRow, what: &str) {
+    assert_eq!(a.iter, b.iter, "{what}: iter");
+    assert_eq!(a.cases.to_bits(), b.cases.to_bits(), "{what}: cases");
+    assert_eq!(a.batch_loss.to_bits(), b.batch_loss.to_bits(), "{what}: batch_loss");
+    assert_eq!(a.train_err.to_bits(), b.train_err.to_bits(), "{what}: train_err");
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{what}: train_loss");
+}
+
+#[test]
+fn checkpoint_save_load_resume_is_bit_exact() {
+    let (arch, ds) = small_setup();
+    let seed = 42u64;
+    let init = arch.sparse_init(&mut Rng::new(seed));
+    let session = |opt: Kfac, iters: usize| {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(iters)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(5)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(seed)
+            .params(init.clone())
+            .optimizer(opt)
+    };
+
+    // reference: 20 uninterrupted iterations
+    let full = session(Kfac::new(&arch, kfac_cfg()), 20).run();
+
+    // interrupted: 10 iterations with a checkpoint, then resume to 20
+    let path = tmp_ckpt("bit_exact");
+    let first_leg = session(Kfac::new(&arch, kfac_cfg()), 10).checkpoint_every(10, &path).run();
+    assert!(path.exists(), "checkpoint file written");
+    let resumed = session(Kfac::new(&arch, kfac_cfg()), 20).resume_from(&path).run();
+    assert_eq!(resumed.iters_run, 10, "resume continues from iteration 10");
+
+    // the resumed parameters must equal the uninterrupted run's exactly
+    assert!(
+        full.params == resumed.params,
+        "resumed parameters differ from the uninterrupted run"
+    );
+    assert!(
+        full.avg_params == resumed.avg_params,
+        "resumed Polyak average differs from the uninterrupted run"
+    );
+
+    // and every post-resume evaluation point must match bit-for-bit
+    for row in &resumed.log {
+        let want = full
+            .log
+            .iter()
+            .find(|r| r.iter == row.iter)
+            .unwrap_or_else(|| panic!("uninterrupted run has no eval at iter {}", row.iter));
+        assert_rows_bit_equal(want, row, "post-resume eval");
+    }
+    // the first leg's rows also prefix-match the uninterrupted run
+    for row in &first_leg.log {
+        let want = full.log.iter().find(|r| r.iter == row.iter).unwrap();
+        assert_rows_bit_equal(want, row, "pre-checkpoint eval");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sgd_checkpoint_resume_is_bit_exact() {
+    let (arch, ds) = small_setup();
+    let init = arch.sparse_init(&mut Rng::new(7));
+    let session = |iters: usize| {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(iters)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(4)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(7)
+            .params(init.clone())
+            .optimizer(Sgd::new(SgdConfig { lr: 0.05, ..Default::default() }))
+    };
+    let full = session(16).run();
+    let path = tmp_ckpt("sgd_bit_exact");
+    session(8).checkpoint_every(8, &path).run();
+    let resumed = session(16).resume_from(&path).run();
+    assert!(full.params == resumed.params, "sgd resume diverged");
+    for row in &resumed.log {
+        let want = full.log.iter().find(|r| r.iter == row.iter).unwrap();
+        assert_rows_bit_equal(want, row, "sgd post-resume eval");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn golden_seed_trajectories_are_deterministic_and_learn() {
+    // The redesigned API must preserve the pre-refactor training
+    // behaviour: fixed seeds give reproducible trajectories, and both
+    // optimizers make progress through the same `Optimizer` trait.
+    let (arch, ds) = small_setup();
+    let run_kfac = || {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(12)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(3)
+            .eval_rows(64)
+            .seed(5)
+            .params(arch.sparse_init(&mut Rng::new(5)))
+            .optimizer(Kfac::new(&arch, kfac_cfg()))
+            .run()
+    };
+    let a = run_kfac();
+    let b = run_kfac();
+    assert_eq!(a.log.len(), b.log.len());
+    for (ra, rb) in a.log.iter().zip(b.log.iter()) {
+        assert_rows_bit_equal(ra, rb, "kfac golden seed");
+    }
+    assert!(a.params == b.params);
+    let first = a.log.first().unwrap().train_loss;
+    let last = a.log.last().unwrap().train_loss;
+    assert!(last < first, "kfac failed to learn: {first} -> {last}");
+
+    let run_sgd = || {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(40)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(10)
+            .eval_rows(64)
+            .seed(6)
+            .params(arch.sparse_init(&mut Rng::new(6)))
+            .optimizer(Sgd::new(SgdConfig { lr: 0.05, ..Default::default() }))
+            .run()
+    };
+    let sa = run_sgd();
+    let sb = run_sgd();
+    for (ra, rb) in sa.log.iter().zip(sb.log.iter()) {
+        assert_rows_bit_equal(ra, rb, "sgd golden seed");
+    }
+    let sgd_first = sa.log.first().unwrap().train_loss;
+    let sgd_last = sa.log.last().unwrap().train_loss;
+    assert!(sgd_last < sgd_first, "sgd failed to learn: {sgd_first} -> {sgd_last}");
+}
+
+#[test]
+fn ekfac_preconditioner_trains_through_session() {
+    // EKFAC plugs into the optimizer through the Preconditioner seam
+    // and trains the Figure-2 classifier through the session API.
+    let report = TrainSession::for_problem(Problem::MnistClf)
+        .data(128, 1)
+        .iters(10)
+        .schedule(BatchSchedule::Fixed(128))
+        .eval_every(5)
+        .eval_rows(128)
+        .eval_initial()
+        .optimizer(Kfac::new(
+            &Problem::MnistClf.arch(),
+            KfacConfig { lambda0: 5.0, ..KfacConfig::ekfac() },
+        ))
+        .run();
+    let first = report.log.first().unwrap();
+    let last = report.log.last().unwrap();
+    assert_eq!(first.iter, 0);
+    assert!(last.train_loss.is_finite());
+    assert!(
+        last.train_err < first.train_err,
+        "ekfac did not reduce error: {} -> {}",
+        first.train_err,
+        last.train_err
+    );
+}
+
+#[test]
+fn resume_rejects_wrong_optimizer_and_arch() {
+    let (arch, ds) = small_setup();
+    let path = tmp_ckpt("mismatch");
+    TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(2)
+        .schedule(BatchSchedule::Fixed(32))
+        .eval_rows(32)
+        .optimizer(Kfac::new(&arch, kfac_cfg()))
+        .checkpoint_every(2, &path)
+        .run();
+
+    // wrong optimizer kind
+    let err = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(4)
+        .optimizer(Sgd::new(SgdConfig::default()))
+        .resume_from(&path)
+        .try_run()
+        .unwrap_err();
+    assert!(err.contains("optimizer"), "unexpected error: {err}");
+
+    // wrong architecture
+    let other = Arch::autoencoder(&[64, 12, 64], Act::Tanh);
+    let err = TrainSession::for_dataset(other.clone(), &ds)
+        .iters(4)
+        .optimizer(Kfac::new(&other, kfac_cfg()))
+        .resume_from(&path)
+        .try_run()
+        .unwrap_err();
+    assert!(err.contains("layers") || err.contains("arch"), "unexpected error: {err}");
+
+    // corrupt file
+    std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+    let err = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(4)
+        .optimizer(Kfac::new(&arch, kfac_cfg()))
+        .resume_from(&path)
+        .try_run()
+        .unwrap_err();
+    assert!(err.contains("magic") || err.contains("truncated"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_file_is_versioned_and_self_describing() {
+    let (arch, ds) = small_setup();
+    let path = tmp_ckpt("versioned");
+    let mut ckpt_events = 0usize;
+    TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(3)
+        .schedule(BatchSchedule::Fixed(32))
+        .eval_rows(32)
+        .optimizer(Kfac::new(&arch, kfac_cfg()))
+        .checkpoint_every(3, &path)
+        .observer(|e| {
+            if let Event::Checkpoint { iter, .. } = e {
+                assert_eq!(*iter, 3);
+                ckpt_events += 1;
+            }
+        })
+        .run();
+    assert_eq!(ckpt_events, 1, "one checkpoint event at the final iteration");
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.version, checkpoint::CHECKPOINT_VERSION);
+    assert_eq!(ck.iter, 3);
+    assert_eq!(ck.opt.kind, "kfac");
+    assert_eq!(ck.params.0.len(), arch.num_layers());
+    // the full optimizer state rides along: preconditioner identity,
+    // λ/γ, EMA factors, δ₀
+    assert_eq!(ck.opt.str_val("precond"), Some("blktridiag"));
+    assert!(ck.opt.scalar("lambda").is_some());
+    assert!(ck.opt.scalar("gamma").is_some());
+    assert!(ck.opt.mats("stats_aa").is_some());
+    assert!(ck.opt.mats("delta_prev").is_some());
+    let (xi, avg) = ck.polyak.expect("polyak state saved");
+    assert_eq!(xi, 0.99);
+    assert!(avg.is_some());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn custom_optimizer_drives_session_through_the_trait() {
+    // The Optimizer seam is open: a hand-rolled gradient-descent
+    // optimizer (no K-FAC machinery at all) drives the same session.
+    struct PlainGd {
+        lr: f64,
+    }
+    impl Optimizer for PlainGd {
+        fn name(&self) -> &str {
+            "plain-gd"
+        }
+        fn step(
+            &mut self,
+            backend: &mut dyn kfac::backend::ModelBackend,
+            params: &mut Params,
+            x: &kfac::linalg::Mat,
+            y: &kfac::linalg::Mat,
+        ) -> kfac::optim::StepInfo {
+            let (loss, grad) = backend.grad(params, x, y);
+            params.axpy(-self.lr, &grad);
+            kfac::optim::StepInfo::with_loss(loss)
+        }
+        fn state(&self) -> kfac::optim::OptState {
+            kfac::optim::OptState::new("plain-gd")
+        }
+        fn load_state(&mut self, st: &kfac::optim::OptState) -> Result<(), String> {
+            if st.kind != "plain-gd" {
+                return Err("wrong kind".into());
+            }
+            Ok(())
+        }
+    }
+
+    let (arch, ds) = small_setup();
+    let report = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(40)
+        .schedule(BatchSchedule::Fixed(128))
+        .eval_every(10)
+        .eval_rows(64)
+        .eval_initial()
+        .no_polyak()
+        .seed(9)
+        .optimizer(PlainGd { lr: 0.1 })
+        .run();
+    let first = report.log.first().unwrap().train_loss;
+    let last = report.log.last().unwrap().train_loss;
+    assert!(last.is_finite() && last < first, "plain GD via the trait: {first} -> {last}");
+}
