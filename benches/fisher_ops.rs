@@ -1,13 +1,15 @@
 //! Benchmarks for the Fisher-approximation operations on a
 //! paper-scale architecture (the MNIST autoencoder): statistics
 //! computation, inverse refresh (task 5), preconditioner application
-//! (task 6) for both structures.
+//! (task 6) for both structures, and the EKFAC amortized scale-refresh
+//! path (per-example gradient projection + diagonal swap).
 
 use kfac::backend::{ModelBackend, RustBackend};
 use kfac::bench::{bench, default_budget};
 use kfac::coordinator::Problem;
 use kfac::fisher::stats::KfacStats;
 use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, TridiagInverse};
+use kfac::linalg::KronBasis;
 use kfac::rng::Rng;
 
 fn main() {
@@ -55,5 +57,18 @@ fn main() {
     bench("fvp_quad_2dirs_m64", budget, || {
         let d2 = grad.scale(0.5);
         std::hint::black_box(backend.fvp_quad(&params, &x, 64, &[&grad, &d2]));
+    });
+
+    // EKFAC amortized scale refresh: project per-example gradients into
+    // the cached eigenbasis (one forward + sampled backward + two
+    // squared GEMMs per layer), then swap the diagonal in.
+    let bases: Vec<KronBasis> = ek.eigenbases().expect("ekfac exposes bases").to_vec();
+    bench("ekfac_grad_sq_in_basis_m32", budget, || {
+        std::hint::black_box(backend.grad_sq_in_basis(&params, &x, &y, 32, 7, &bases));
+    });
+    let sq = backend.grad_sq_in_basis(&params, &x, &y, 32, 7, &bases);
+    let mut ek_refresh = EkfacInverse::build(&stats.s, gamma);
+    bench("ekfac_set_scales(mnist_ae)", budget, || {
+        std::hint::black_box(ek_refresh.set_scales(&sq, gamma));
     });
 }

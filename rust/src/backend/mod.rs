@@ -18,7 +18,7 @@ pub use pjrt::PjrtBackend;
 pub use rust_backend::RustBackend;
 
 use crate::fisher::stats::RawStats;
-use crate::linalg::Mat;
+use crate::linalg::{KronBasis, Mat};
 use crate::nn::{Arch, Params};
 
 /// Per-batch second-moment statistics (alias of the Fisher-factor raw
@@ -58,4 +58,28 @@ pub trait ModelBackend {
     /// `fvp_rows` rows of `x` (the τ₂ subset), as a `k×k` matrix
     /// (Appendix C trick; no damping terms included).
     fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat;
+
+    /// Batch-mean of **squared per-example gradients** projected into
+    /// the per-layer Kronecker eigenbases `U_A ⊗ U_G` — the EKFAC
+    /// second-moment scales (George et al. 2018) — computed on the
+    /// first `rows` rows of `x` with model-sampled targets seeded by
+    /// `seed` (Section 5 convention, so the moments estimate the
+    /// standard Fisher; `y` is passed for backends that estimate from
+    /// empirical gradients instead). Returns one `d_out × (d_in+1)`
+    /// matrix per layer.
+    ///
+    /// Implementations must **not** materialize per-example weight
+    /// gradients: the per-example gradient is the rank-1 outer product
+    /// `g āᵀ`, so its projection factors into projections of the two
+    /// vectors — `O(rows·(a+g)·ag)` total instead of `O(rows·a²g²)`
+    /// (see [`Net::grad_sq_in_basis`](crate::nn::Net::grad_sq_in_basis)).
+    fn grad_sq_in_basis(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        y: &Mat,
+        rows: usize,
+        seed: u64,
+        bases: &[KronBasis],
+    ) -> Vec<Mat>;
 }

@@ -30,7 +30,7 @@ pub use stub::PjrtBackend;
 #[cfg(not(feature = "pjrt"))]
 mod stub {
     use crate::backend::{BatchStats, ModelBackend};
-    use crate::linalg::Mat;
+    use crate::linalg::{KronBasis, Mat};
     use crate::nn::{Arch, Params};
     use crate::runtime::{rt_err, Result};
     use std::path::Path;
@@ -87,6 +87,18 @@ mod stub {
         fn fvp_quad(&mut self, _p: &Params, _x: &Mat, _fvp_rows: usize, _dirs: &[&Params]) -> Mat {
             unreachable!("{UNAVAILABLE}")
         }
+
+        fn grad_sq_in_basis(
+            &mut self,
+            _p: &Params,
+            _x: &Mat,
+            _y: &Mat,
+            _rows: usize,
+            _seed: u64,
+            _bases: &[KronBasis],
+        ) -> Vec<Mat> {
+            unreachable!("{UNAVAILABLE}")
+        }
     }
 }
 
@@ -94,7 +106,7 @@ mod stub {
 mod real {
     use crate::backend::{BatchStats, ModelBackend};
     use crate::fisher::stats::RawStats;
-    use crate::linalg::Mat;
+    use crate::linalg::{KronBasis, Mat};
     use crate::nn::{Arch, Params};
     use crate::runtime::exec::{i32_literal, literal_scalar_f64, literal_to_mat, mat_to_literal};
     use crate::runtime::{Manifest, Program};
@@ -372,6 +384,34 @@ mod real {
             } else {
                 Mat::from_vec(2, 2, vec![vfv * inv, vfu * inv, vfu * inv, ufu * inv])
             }
+        }
+
+        fn grad_sq_in_basis(
+            &mut self,
+            p: &Params,
+            x: &Mat,
+            y: &Mat,
+            rows: usize,
+            seed: u64,
+            bases: &[KronBasis],
+        ) -> Vec<Mat> {
+            // The AOT artifact set has no per-example-gradient program
+            // yet (ROADMAP: "PJRT in CI"). Delegate to the f64 reference
+            // substrate rather than aborting mid-training: the EKFAC
+            // scale refresh is an amortized statistical estimate on the
+            // τ₁ sub-batch, so the reference path's cost is acceptable
+            // and `--backend pjrt --optimizer kfac_ekfac` keeps working
+            // end-to-end (in f64 instead of the artifacts' f32).
+            static FALLBACK_NOTE: std::sync::Once = std::sync::Once::new();
+            FALLBACK_NOTE.call_once(|| {
+                eprintln!(
+                    "note: pjrt backend has no compiled grad_sq program; EKFAC \
+                     scale refresh runs on the f64 reference substrate \
+                     (--t-scale 0 disables)"
+                );
+            });
+            let mut fallback = crate::backend::RustBackend::new(self.arch.clone());
+            fallback.grad_sq_in_basis(p, x, y, rows, seed, bases)
         }
     }
 }

@@ -2,7 +2,7 @@
 
 use super::{BatchStats, ModelBackend};
 use crate::fisher::stats::RawStats;
-use crate::linalg::Mat;
+use crate::linalg::{KronBasis, Mat};
 use crate::nn::net::Net;
 use crate::nn::{Arch, Params};
 use crate::rng::Rng;
@@ -72,6 +72,26 @@ impl ModelBackend for RustBackend {
         let xs = x.top_rows(rows);
         self.net.fvp_quad(p, &xs, dirs)
     }
+
+    fn grad_sq_in_basis(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        _y: &Mat,
+        rows: usize,
+        seed: u64,
+        bases: &[KronBasis],
+    ) -> Vec<Mat> {
+        // Model-sampled targets (Section 5), like `grad_and_stats`:
+        // the second moments estimate the standard Fisher, so `y` is
+        // unused here. One forward + one sampled backward pass.
+        let rows = rows.clamp(1, x.rows);
+        let xs = x.top_rows(rows);
+        let fwd = self.net.forward(p, &xs);
+        let mut rng = Rng::new(seed);
+        let gs = self.net.sampled_backward(p, &fwd, &mut rng);
+        self.net.grad_sq_in_basis(&fwd, &gs, bases)
+    }
 }
 
 #[cfg(test)]
@@ -100,5 +120,46 @@ mod tests {
         // deterministic given seed
         let (_, _, stats2) = be.grad_and_stats(&p, &x, &y, 5, 7);
         assert!(stats.gg[0].sub(&stats2.gg[0]).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn grad_sq_in_basis_is_deterministic_and_matches_net() {
+        let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+        let mut be = RustBackend::new(arch.clone());
+        let mut rng = Rng::new(2);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(12, 4, 1.0, &mut rng);
+        let y = Mat::zeros(12, 2);
+        let ortho = |n: usize, rng: &mut Rng| {
+            crate::linalg::SymEig::new_jacobi(&Mat::randn(n, n, 1.0, rng).symmetrize()).v
+        };
+        let bases: Vec<KronBasis> = (0..arch.num_layers())
+            .map(|i| {
+                let (r, c) = arch.weight_shape(i);
+                KronBasis { ua: ortho(c, &mut rng), ug: ortho(r, &mut rng) }
+            })
+            .collect();
+        let rows = 8;
+        let seed = 5;
+        let s1 = be.grad_sq_in_basis(&p, &x, &y, rows, seed, &bases);
+        let s2 = be.grad_sq_in_basis(&p, &x, &y, rows, seed, &bases);
+        for (a, b) in s1.iter().zip(s2.iter()) {
+            assert!(a.sub(b).max_abs() == 0.0, "not deterministic given seed");
+        }
+        // shapes are weight-shaped, entries are non-negative means
+        for (i, s) in s1.iter().enumerate() {
+            assert_eq!((s.rows, s.cols), arch.weight_shape(i));
+            assert!(s.data.iter().all(|v| *v >= 0.0 && v.is_finite()));
+        }
+        // consistent with the documented contract: forward on the τ₁
+        // rows, then a sampled backward seeded by `seed`
+        let net = be.net().clone();
+        let xs = x.top_rows(rows);
+        let fwd = net.forward(&p, &xs);
+        let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(seed));
+        let want = net.grad_sq_in_basis(&fwd, &gs, &bases);
+        for (a, b) in s1.iter().zip(want.iter()) {
+            assert!(a.sub(b).max_abs() == 0.0, "backend deviates from Net contract");
+        }
     }
 }

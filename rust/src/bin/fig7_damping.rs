@@ -45,7 +45,7 @@ fn main() {
         y = yy;
         let info = opt.step(&mut backend, &mut params, &x, &y);
         if k % 20 == 0 {
-            println!("#   iter {k}: loss {:.4} λ {:.2}", info.loss, info.lambda.unwrap_or(f64::NAN));
+            println!("# iter {k}: loss {:.4} λ {:.2}", info.loss, info.lambda.unwrap_or(f64::NAN));
         }
     }
 
@@ -125,8 +125,12 @@ fn main() {
     let worst = |idx: usize| rows.iter().map(|r| r[idx]).fold(f64::INFINITY, f64::min);
     let (best_raw, best_resc, best_mom) = (best(1), best(2), best(3));
     let (worst_raw, worst_resc, worst_mom) = (worst(1), worst(2), worst(3));
-    println!("\nbest improvement:  raw {best_raw:.5}   rescaled {best_resc:.5}   resc+mom {best_mom:.5}");
-    println!("worst improvement: raw {worst_raw:.5}   rescaled {worst_resc:.5}   resc+mom {worst_mom:.5}");
+    println!(
+        "\nbest improvement:  raw {best_raw:.5}   rescaled {best_resc:.5}   resc+mom {best_mom:.5}"
+    );
+    println!(
+        "worst improvement: raw {worst_raw:.5}   rescaled {worst_resc:.5}   resc+mom {worst_mom:.5}"
+    );
     assert!(worst_raw < 0.0, "raw updates should be harmful at small γ (paper Figure 7)");
     assert!(worst_resc > -1e-6, "re-scaled updates must never be harmful (robustness in γ)");
     assert!(worst_mom > -1e-6, "re-scaled+momentum updates must never be harmful");

@@ -2,7 +2,7 @@
 //! trainer state (RNG stream, Polyak average, counters), serialized to
 //! a self-describing little-endian binary format.
 //!
-//! Layout (version 1):
+//! Layout (version 2):
 //!
 //! ```text
 //! magic    8 bytes  "KFACCKPT"
@@ -19,6 +19,13 @@
 //! `u64 cols`, then row-major f64 bits; optionals are a `u8` presence
 //! flag. Every f64 is stored as its exact bit pattern, so a resumed run
 //! continues the saved trajectory bit-for-bit.
+//!
+//! Version history: v2 adds the EKFAC re-estimated scale state
+//! (`scale_k` / `scale_s` optimizer entries). The wire format is
+//! unchanged, but a v1 reader would silently rebuild cached inverses
+//! *without* the re-estimated scales and diverge from the saved
+//! trajectory, so the version is bumped and mismatched files are
+//! rejected (both directions) instead of mis-read.
 
 use crate::linalg::Mat;
 use crate::nn::Params;
@@ -27,7 +34,7 @@ use std::io::Write;
 use std::path::Path;
 
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFACCKPT";
-pub const CHECKPOINT_VERSION: u32 = 1;
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 /// A full training snapshot.
 #[derive(Clone, Debug)]
@@ -362,9 +369,15 @@ mod tests {
         assert!(from_bytes(b"").is_err());
         assert!(from_bytes(b"NOTKFACX________").is_err());
         let mut bytes = to_bytes(&sample());
-        // version bump
+        // future version
         bytes[8] = 99;
         assert!(from_bytes(&bytes).unwrap_err().contains("version"));
+        // stale v1 file (pre EKFAC-scale-state): cleanly rejected, not
+        // mis-read
+        let mut v1 = to_bytes(&sample());
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let err = from_bytes(&v1).unwrap_err();
+        assert!(err.contains("version 1"), "unexpected error: {err}");
         // truncation
         let ok = to_bytes(&sample());
         assert!(from_bytes(&ok[..ok.len() - 3]).is_err());

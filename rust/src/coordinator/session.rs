@@ -438,8 +438,17 @@ impl<'a> TrainSession<'a> {
 
         let mut log = Vec::new();
         if eval_initial && k0 == 0 {
-            let row =
-                eval_row(backend, &params, avg.as_ref(), &eval_x, &eval_y, 0, cases, train_time, f64::NAN);
+            let row = eval_row(
+                backend,
+                &params,
+                avg.as_ref(),
+                &eval_x,
+                &eval_y,
+                0,
+                cases,
+                train_time,
+                f64::NAN,
+            );
             print_row(verbose, 0, &row);
             if let Some(obs) = observer.as_mut() {
                 obs(&Event::Eval { row });
@@ -551,7 +560,9 @@ pub fn log_to_csv(path: &std::path::Path, log: &[LogRow]) -> std::io::Result<()>
         path,
         &["iter", "cases", "time_s", "batch_loss", "train_err", "train_loss"],
         &log.iter()
-            .map(|r| vec![r.iter as f64, r.cases, r.time_s, r.batch_loss, r.train_err, r.train_loss])
+            .map(|r| {
+                vec![r.iter as f64, r.cases, r.time_s, r.batch_loss, r.train_err, r.train_loss]
+            })
             .collect::<Vec<_>>(),
     )
 }

@@ -49,7 +49,9 @@ impl Variant {
 
 /// Results directory (override with KFAC_RESULTS_DIR).
 pub fn results_dir() -> PathBuf {
-    std::env::var("KFAC_RESULTS_DIR").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("results"))
+    std::env::var("KFAC_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
 }
 
 /// Scale factor for experiment sizes (override with KFAC_EXP_SCALE, in

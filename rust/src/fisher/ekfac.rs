@@ -8,30 +8,44 @@
 //!
 //! `U = U_G [ (U_Gᵀ V U_A) ⊘ D ] U_Aᵀ`,  `D_{pq} = s^G_p s^A_q + γ²`.
 //!
-//! With the eigenvalue-product scales used here this is algebraically
-//! the **exact** Tikhonov-damped block inverse `(Ā ⊗ G + γ²I)⁻¹`
-//! (paper eqn. 6) — the damping lives in the eigenbasis instead of
-//! being factored onto `Ā` and `G` — computed with two
-//! eigendecompositions per refresh and four layer-sized GEMMs per
-//! apply. At `γ = 0` it coincides with the block-diagonal inverse
-//! `G⁻¹ V Ā⁻¹`. The eigenbasis is also the natural seam for the full
-//! EKFAC scale re-estimation (second moments of projected per-example
-//! gradients), which needs per-example gradient access from the
-//! backend and is left as a roadmap item.
+//! With the eigenvalue-product scales a fresh build starts from, this
+//! is algebraically the **exact** Tikhonov-damped block inverse
+//! `(Ā ⊗ G + γ²I)⁻¹` (paper eqn. 6) — the damping lives in the
+//! eigenbasis instead of being factored onto `Ā` and `G` — computed
+//! with two eigendecompositions per refresh and four layer-sized GEMMs
+//! per apply. At `γ = 0` it coincides with the block-diagonal inverse
+//! `G⁻¹ V Ā⁻¹`.
+//!
+//! The full EKFAC algorithm then **re-estimates** the diagonal between
+//! eigenbasis rebuilds from second moments of per-example gradients
+//! projected into `U_A ⊗ U_G` (the cheap, frequent update the
+//! eigendecompositions amortize — provably the Frobenius-optimal
+//! diagonal for the basis, George et al. Prop. 1): the optimizer
+//! obtains the moments through
+//! [`ModelBackend::grad_sq_in_basis`](crate::backend::ModelBackend::grad_sq_in_basis)
+//! using the bases exposed by [`FisherInverse::eigenbases`], and swaps
+//! them in with [`FisherInverse::set_scales`].
 
 use super::stats::RawStats;
 use super::FisherInverse;
-use crate::linalg::{Mat, SymEig};
+use crate::linalg::{KronBasis, Mat, SymEig};
 use crate::nn::Params;
+
+/// Floor for the damped diagonal: a tiny fraction of the largest scale
+/// so rank-deficient spectra at `γ = 0` stay finite (jitter-style
+/// recovery). Deterministic, so checkpoint resume reproduces it.
+fn scale_floor(max_scale: f64) -> f64 {
+    (1e-13 * max_scale).max(1e-300)
+}
 
 /// Cached Kronecker eigenbases and inverse diagonal scales.
 pub struct EkfacInverse {
-    /// Per layer: eigenvectors of `Ā_{i-1,i-1}` (columns), `(d+1)²`.
-    ua: Vec<Mat>,
-    /// Per layer: eigenvectors of `G_{i,i}` (columns), `d²`.
-    ug: Vec<Mat>,
-    /// Per layer: `1 / D` with `D_{pq} = s^G_p s^A_q + γ²`, shaped like
-    /// the layer's weight matrix (`d_out × (d_in+1)`).
+    /// Per layer: eigenvectors of `Ā_{i-1,i-1}` and `G_{i,i}`.
+    bases: Vec<KronBasis>,
+    /// Per layer: `1 / D` with `D_{pq} = s_{pq} + γ²`, shaped like the
+    /// layer's weight matrix (`d_out × (d_in+1)`). `s` starts as the
+    /// eigenvalue products `s^G_p s^A_q` and is replaced by
+    /// re-estimated second moments via [`FisherInverse::set_scales`].
     inv_scale: Vec<Mat>,
 }
 
@@ -45,12 +59,9 @@ impl EkfacInverse {
         let parts = crate::par::par_map_send(l, 1, |i| {
             let ea = SymEig::new(&stats.aa[i]);
             let eg = SymEig::new(&stats.gg[i]);
-            // Guard rank-deficient spectra: floor the denominator at a
-            // tiny fraction of the largest eigenvalue product so γ = 0
-            // on singular factors stays finite (jitter-style recovery).
             let max_a = ea.w.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
             let max_g = eg.w.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
-            let floor = (1e-13 * max_a * max_g).max(1e-300);
+            let floor = scale_floor(max_a * max_g);
             let mut inv_scale = Mat::zeros(eg.w.len(), ea.w.len());
             for p in 0..eg.w.len() {
                 for q in 0..ea.w.len() {
@@ -60,15 +71,13 @@ impl EkfacInverse {
             }
             (ea.v, eg.v, inv_scale)
         });
-        let mut ua = Vec::with_capacity(l);
-        let mut ug = Vec::with_capacity(l);
+        let mut bases = Vec::with_capacity(l);
         let mut inv_scale = Vec::with_capacity(l);
-        for (a, g, s) in parts {
-            ua.push(a);
-            ug.push(g);
+        for (ua, ug, s) in parts {
+            bases.push(KronBasis { ua, ug });
             inv_scale.push(s);
         }
-        EkfacInverse { ua, ug, inv_scale }
+        EkfacInverse { bases, inv_scale }
     }
 }
 
@@ -81,12 +90,41 @@ impl FisherInverse for EkfacInverse {
                 .enumerate()
                 .map(|(i, v)| {
                     // project into the eigenbasis, rescale, project back
-                    let proj = self.ug[i].matmul_tn(v).matmul(&self.ua[i]);
+                    let b = &self.bases[i];
+                    let proj = b.ug.matmul_tn(v).matmul(&b.ua);
                     let scaled = proj.hadamard(&self.inv_scale[i]);
-                    self.ug[i].matmul(&scaled).matmul_nt(&self.ua[i])
+                    b.ug.matmul(&scaled).matmul_nt(&b.ua)
                 })
                 .collect(),
         )
+    }
+
+    fn eigenbases(&self) -> Option<&[KronBasis]> {
+        Some(&self.bases)
+    }
+
+    /// Swap in re-estimated second-moment scales: `D_{pq} = s_{pq} + γ²`
+    /// with the same rank-deficiency floor as [`EkfacInverse::build`].
+    /// Negative estimates (impossible for true second moments, possible
+    /// for externally supplied ones) are clamped to 0.
+    fn set_scales(&mut self, scales: &[Mat], gamma: f64) -> bool {
+        assert_eq!(scales.len(), self.inv_scale.len(), "ekfac: scale layer count");
+        let damp = gamma * gamma;
+        let rescaled: Vec<Mat> = scales
+            .iter()
+            .zip(self.inv_scale.iter())
+            .map(|(s, old)| {
+                assert_eq!(
+                    (s.rows, s.cols),
+                    (old.rows, old.cols),
+                    "ekfac: scale shape mismatch"
+                );
+                let floor = scale_floor(s.max_abs());
+                s.map(|v| 1.0 / (v.max(0.0) + damp).max(floor))
+            })
+            .collect();
+        self.inv_scale = rescaled;
+        true
     }
 }
 
@@ -197,6 +235,87 @@ mod tests {
         let small = EkfacInverse::build(&st, 1e-3).apply(&g);
         let large = EkfacInverse::build(&st, 10.0).apply(&g);
         assert!(large.norm_sq() < small.norm_sq());
+    }
+
+    #[test]
+    fn set_scales_with_eigenvalue_products_reproduces_build() {
+        // Feeding the eigenvalue products back through set_scales must
+        // reproduce the freshly built (exact-Tikhonov) operator.
+        let arch = Arch::new(
+            vec![5, 4, 3],
+            vec![Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let st = build_stats(&arch, 64, 11);
+        let gamma = 0.4;
+        let fresh = EkfacInverse::build(&st, gamma);
+        let mut swapped = EkfacInverse::build(&st, gamma);
+        let products: Vec<Mat> = (0..arch.num_layers())
+            .map(|i| {
+                let ea = SymEig::new(&st.aa[i]);
+                let eg = SymEig::new(&st.gg[i]);
+                Mat::from_fn(eg.w.len(), ea.w.len(), |p, q| {
+                    eg.w[p].max(0.0) * ea.w[q].max(0.0)
+                })
+            })
+            .collect();
+        assert!(swapped.set_scales(&products, gamma));
+        let mut rng = Rng::new(12);
+        let g = Params(
+            (0..arch.num_layers())
+                .map(|i| {
+                    let (r, c) = arch.weight_shape(i);
+                    Mat::randn(r, c, 1.0, &mut rng)
+                })
+                .collect(),
+        );
+        let a = fresh.apply(&g);
+        let b = swapped.apply(&g);
+        for i in 0..arch.num_layers() {
+            let scale = a.0[i].max_abs().max(1e-12);
+            let err = a.0[i].sub(&b.0[i]).max_abs() / scale;
+            assert!(err < 1e-13, "layer {i}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn set_scales_matches_dense_diagonal_rescaling() {
+        // With arbitrary (well-conditioned) scales S, the operator must
+        // equal the dense U diag(1/(S+γ²)) Uᵀ with U = U_A ⊗ U_G.
+        let arch = Arch::new(vec![4, 3], vec![Act::Identity], LossKind::SquaredError);
+        let st = build_stats(&arch, 48, 13);
+        let gamma = 0.2;
+        let mut inv = EkfacInverse::build(&st, gamma);
+        let mut rng = Rng::new(14);
+        // scales in [0.5, 1.5] keep the rank-deficiency floor inert
+        let s = Mat::from_fn(3, 5, |_, _| 0.5 + rng.normal().abs().min(1.0));
+        assert!(inv.set_scales(&[s.clone()], gamma));
+        let bases = inv.eigenbases().unwrap().to_vec();
+        let g = Mat::randn(3, 5, 1.0, &mut rng);
+        let got = inv.apply(&Params(vec![g.clone()]));
+        let u = kron(&bases[0].ua, &bases[0].ug);
+        let vg = vec_mat(&g);
+        let proj = u.transpose().matvec(&vg);
+        let rescaled: Vec<f64> = proj
+            .iter()
+            .enumerate()
+            .map(|(idx, v)| {
+                let (p, q) = (idx % 3, idx / 3); // column-stacking
+                v / (s.at(p, q) + gamma * gamma)
+            })
+            .collect();
+        let want = unvec(&u.matvec(&rescaled), 3, 5);
+        let err = got.0[0].sub(&want).max_abs() / want.max_abs().max(1e-12);
+        assert!(err < 1e-10, "rel err {err}");
+    }
+
+    #[test]
+    fn structures_without_scales_use_the_default_no_ops() {
+        let arch = Arch::new(vec![4, 3], vec![Act::Identity], LossKind::SquaredError);
+        let st = build_stats(&arch, 32, 15);
+        let mut bd = BlockDiagInverse::build(&st, 0.5);
+        assert!(bd.eigenbases().is_none());
+        assert!(!bd.set_scales(&[Mat::filled(3, 5, 1.0)], 0.5));
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub use precond::{PrecondRef, Preconditioner};
 pub use stats::{KfacStats, RawStats};
 pub use tridiag::TridiagInverse;
 
+use crate::linalg::{KronBasis, Mat};
 use crate::nn::Params;
 
 /// A built approximate inverse Fisher: applies `F₀⁻¹` to a
@@ -39,4 +40,22 @@ use crate::nn::Params;
 /// every inverse refresh.
 pub trait FisherInverse {
     fn apply(&self, grads: &Params) -> Params;
+
+    /// The per-layer Kronecker eigenbases `(U_A, U_G)` when this
+    /// inverse is a diagonal operator in an eigenbasis (EKFAC); `None`
+    /// for structures without one (the default). The optimizer hands
+    /// these to `ModelBackend::grad_sq_in_basis` (the backend seam) to
+    /// project per-example gradients for the amortized scale
+    /// re-estimation.
+    fn eigenbases(&self) -> Option<&[KronBasis]> {
+        None
+    }
+
+    /// Replace the diagonal scales with externally re-estimated
+    /// second moments `scales` (one weight-shaped matrix per layer),
+    /// damped by `γ²`. Returns `false` when the structure has no
+    /// re-estimable scales (the default no-op).
+    fn set_scales(&mut self, _scales: &[Mat], _gamma: f64) -> bool {
+        false
+    }
 }

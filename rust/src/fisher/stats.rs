@@ -46,7 +46,8 @@ impl RawStats {
         let aa_off: Vec<Mat> = (0..l - 1)
             .map(|i| fwd.abars[i].matmul_tn(&fwd.abars[i + 1]).scale(scale))
             .collect();
-        let gg_off: Vec<Mat> = (0..l - 1).map(|i| gs[i].matmul_tn(&gs[i + 1]).scale(scale)).collect();
+        let gg_off: Vec<Mat> =
+            (0..l - 1).map(|i| gs[i].matmul_tn(&gs[i + 1]).scale(scale)).collect();
         RawStats { aa, aa_off, gg, gg_off }
     }
 

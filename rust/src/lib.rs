@@ -42,8 +42,8 @@ pub mod prelude {
     pub use crate::backend::{BatchStats, ModelBackend, RustBackend};
     pub use crate::coordinator::{Event, Problem, TrainReport, TrainSession};
     pub use crate::data::dataset::Dataset;
-    pub use crate::fisher::{PrecondRef, Preconditioner};
-    pub use crate::linalg::Mat;
+    pub use crate::fisher::{FisherInverse, PrecondRef, Preconditioner};
+    pub use crate::linalg::{KronBasis, Mat};
     pub use crate::nn::{Act, Arch, LossKind, Params};
     pub use crate::optim::kfac::{Kfac, KfacConfig};
     pub use crate::optim::sgd::{Sgd, SgdConfig};

@@ -360,7 +360,10 @@ mod tests {
                     let mut got = vec![0.0; m * n];
                     gemm_strided(m, n, k, a, ars, acs, b, brs, bcs, &mut got);
                     let err = max_abs_diff(&got, &want);
-                    assert!(err < 1e-10, "({m},{n},{k}) strides a=({ars},{acs}) b=({brs},{bcs}): {err}");
+                    assert!(
+                        err < 1e-10,
+                        "({m},{n},{k}) strides a=({ars},{acs}) b=({brs},{bcs}): {err}"
+                    );
                 }
             }
         }

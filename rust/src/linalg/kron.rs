@@ -64,6 +64,23 @@ pub fn unvec(v: &[f64], rows: usize, cols: usize) -> Mat {
     x
 }
 
+/// A Kronecker basis pair `U_A ⊗ U_G` for one layer's weight space.
+///
+/// Follows the K-FAC convention of this module: `U_A` acts on the
+/// input (column) side and `U_G` on the output (row) side, so the
+/// basis change of a weight-shaped matrix `V` (`d_out × (d_in+1)`) is
+/// `U_Gᵀ V U_A`, and `vec(V)`'s coordinate `(q·d_out + p)` in the
+/// basis is `(U_Gᵀ V U_A)_{p,q}`. Built from the eigenvectors of the
+/// factor statistics by the EKFAC preconditioner, and consumed by the
+/// per-example gradient projection (`ModelBackend::grad_sq_in_basis`).
+#[derive(Clone, Debug)]
+pub struct KronBasis {
+    /// Input-side basis (columns), `(d_in+1)²`.
+    pub ua: Mat,
+    /// Output-side basis (columns), `d_out²`.
+    pub ug: Mat,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,6 +15,7 @@ pub mod stein;
 
 pub use chol::Cholesky;
 pub use eig::SymEig;
+pub use kron::KronBasis;
 pub use stein::KronPairInverse;
 
 /// Dense row-major matrix of `f64`.
@@ -279,7 +280,15 @@ impl Mat {
 
     /// `self * other`
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul: {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            self.cols,
+            other.rows,
+            "matmul: {}x{} * {}x{}",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
         gemm::gemm_strided(m, n, k, &self.data, k, 1, &other.data, n, 1, &mut out.data);

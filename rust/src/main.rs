@@ -35,6 +35,7 @@ fn main() {
                  \x20              --optimizer kfac|kfac_<precond>|sgd  --iters N --batch M\n\
                  \x20              (preconditioners: {})\n\
                  \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
+                 \x20              --t-scale N  (EKFAC scale-refresh period; 0 disables)\n\
                  \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
                  \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
                  \x20              --checkpoint PATH --checkpoint-every N --resume PATH\n\
@@ -97,13 +98,17 @@ fn build_optimizer(args: &Args, arch: &Arch) -> Box<dyn Optimizer> {
         );
         std::process::exit(2);
     });
+    let defaults = KfacConfig::default();
     Box::new(Kfac::new(
         arch,
         KfacConfig {
             precond,
             momentum: !args.get_flag("no-momentum"),
             lambda0: args.get_f64("lambda0", 150.0),
-            ..Default::default()
+            // amortized EKFAC scale re-estimation cadence (ignored by
+            // structures without re-estimable scales)
+            t_scale: args.get_usize("t-scale", defaults.t_scale),
+            ..defaults
         },
     ))
 }

@@ -261,11 +261,11 @@ impl LossKind {
     pub fn error(self, z: &Mat, y: &Mat) -> f64 {
         match self {
             LossKind::SoftmaxCe => {
+                let argmax = |row: &[f64]| {
+                    row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+                };
                 let mut wrong = 0usize;
                 for r in 0..z.rows {
-                    let argmax = |row: &[f64]| {
-                        row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
-                    };
                     if argmax(z.row(r)) != argmax(y.row(r)) {
                         wrong += 1;
                     }

@@ -2,7 +2,7 @@
 //! Appendix C), batched over mini-batches.
 
 use super::{Arch, Params};
-use crate::linalg::Mat;
+use crate::linalg::{KronBasis, Mat};
 use crate::rng::Rng;
 
 /// Cached forward-pass quantities for a mini-batch.
@@ -114,6 +114,34 @@ impl Net {
         self.backward(params, fwd, &dz)
     }
 
+    /// Batch-mean of **squared per-example gradients** projected into
+    /// per-layer Kronecker bases (the EKFAC second-moment scales of
+    /// George et al. 2018). The per-example weight gradient of layer
+    /// `i` for case `n` is the rank-1 outer product
+    /// `DW_n = g_n ā_{i-1,n}ᵀ`, so its basis change factors as
+    /// `U_Gᵀ DW_n U_A = (U_Gᵀ g_n)(ā_nᵀ U_A)` — the per-example
+    /// *vectors* are projected first and only then squared, costing
+    /// `O(m·(a+g)·ag)` in total instead of the `O(m·a²g²)` of
+    /// materializing `m` weight-shaped per-example gradients:
+    ///
+    /// `S_i[p,q] = (1/m) Σ_n (G_i U_G)²_{n,p} (Ā_{i-1} U_A)²_{n,q}`.
+    ///
+    /// `gs` must *not* be scaled by 1/m (the convention of
+    /// [`Net::backward`]); one `d_out × (d_in+1)` matrix per layer.
+    pub fn grad_sq_in_basis(&self, fwd: &Fwd, gs: &[Mat], bases: &[KronBasis]) -> Vec<Mat> {
+        assert_eq!(gs.len(), bases.len(), "grad_sq_in_basis: one basis per layer");
+        let m = fwd.abars[0].rows as f64;
+        gs.iter()
+            .zip(fwd.abars.iter())
+            .zip(bases.iter())
+            .map(|((g, abar), b)| {
+                let gt = g.matmul(&b.ug); // [m, d_out], row n = (U_Gᵀ g_n)ᵀ
+                let at = abar.matmul(&b.ua); // [m, d_in+1], row n = (U_Aᵀ ā_n)ᵀ
+                gt.hadamard(&gt).matmul_tn(&at.hadamard(&at)).scale(1.0 / m)
+            })
+            .collect()
+    }
+
     /// Linearized forward pass (the `Jv` of Appendix C): directional
     /// derivative of `z` w.r.t. parameters along `v`, evaluated with the
     /// activations cached in `fwd`. Returns `Jz` of shape `[m, d_ℓ]`.
@@ -221,7 +249,10 @@ mod tests {
                     pm.0[li].set(r, c, params.0[li].at(r, c) - eps);
                     let fd = (net.loss(&pp, &x, &y) - net.loss(&pm, &x, &y)) / (2.0 * eps);
                     let g = grad.0[li].at(r, c);
-                    assert!((fd - g).abs() < 1e-5 * (1.0 + g.abs()), "{loss:?} l{li} fd={fd} g={g}");
+                    assert!(
+                        (fd - g).abs() < 1e-5 * (1.0 + g.abs()),
+                        "{loss:?} l{li} fd={fd} g={g}"
+                    );
                 }
             }
         }
@@ -234,7 +265,8 @@ mod tests {
         let mut rng = Rng::new(2);
         let params = arch.glorot_init(&mut rng);
         let x = Mat::randn(4, 5, 1.0, &mut rng);
-        let v = Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect());
+        let v =
+            Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect());
         let fwd = net.forward(&params, &x);
         let jz = net.jvp(&params, &fwd, &v);
         let eps = 1e-6;
@@ -285,6 +317,44 @@ mod tests {
             );
             let q = net.fvp_quad(&params, &x, &[&v]);
             assert!(q.at(0, 0) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn grad_sq_in_basis_matches_per_example_outer_products() {
+        // Dense check of the projection-first trick: materialize every
+        // per-example weight gradient DW_n = g_n ā_nᵀ, project it as a
+        // matrix, square, and average. The identity is pure algebra, so
+        // it must hold for *arbitrary* (not just orthogonal) bases.
+        let arch = tiny_arch(LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(6);
+        let params = arch.glorot_init(&mut rng);
+        let x = Mat::randn(5, 5, 1.0, &mut rng);
+        let fwd = net.forward(&params, &x);
+        let gs = net.sampled_backward(&params, &fwd, &mut rng);
+        let bases: Vec<KronBasis> = (0..arch.num_layers())
+            .map(|i| {
+                let (r, c) = arch.weight_shape(i);
+                KronBasis {
+                    ua: Mat::randn(c, c, 1.0, &mut rng),
+                    ug: Mat::randn(r, r, 1.0, &mut rng),
+                }
+            })
+            .collect();
+        let got = net.grad_sq_in_basis(&fwd, &gs, &bases);
+        let m = x.rows;
+        for i in 0..arch.num_layers() {
+            let (r, c) = arch.weight_shape(i);
+            let mut want = Mat::zeros(r, c);
+            for n in 0..m {
+                let dw = Mat::from_fn(r, c, |p, q| gs[i].at(n, p) * fwd.abars[i].at(n, q));
+                let proj = bases[i].ug.matmul_tn(&dw).matmul(&bases[i].ua);
+                want.axpy(1.0 / m as f64, &proj.hadamard(&proj));
+            }
+            let scale = want.max_abs().max(1e-12);
+            let err = got[i].sub(&want).max_abs() / scale;
+            assert!(err < 1e-12, "layer {i}: rel err {err}");
         }
     }
 

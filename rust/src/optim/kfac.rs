@@ -44,6 +44,14 @@ pub struct KfacConfig {
     pub t2: usize,
     /// Inverse-refresh period T₃ (paper: 20).
     pub t3: usize,
+    /// Scale-refresh period T_scale for eigenbasis-diagonal
+    /// preconditioners (EKFAC, George et al. 2018): every T_scale
+    /// iterations the diagonal scales of the cached inverse are
+    /// re-estimated from second moments of per-example gradients
+    /// projected into its eigenbasis — the cheap, frequent update the
+    /// T₃-amortized eigendecompositions enable. 0 disables; ignored by
+    /// structures without re-estimable scales (block-diag/tridiag).
+    pub t_scale: usize,
     /// λ decay ω₁ (paper: (19/20)^T₁).
     pub omega1: f64,
     /// γ step ω₂ (paper: sqrt(19/20)^T₂).
@@ -69,6 +77,7 @@ impl std::fmt::Debug for KfacConfig {
             .field("t1", &self.t1)
             .field("t2", &self.t2)
             .field("t3", &self.t3)
+            .field("t_scale", &self.t_scale)
             .finish()
     }
 }
@@ -85,6 +94,7 @@ impl Default for KfacConfig {
             t1,
             t2,
             t3: 20,
+            t_scale: 5,
             omega1: (19.0_f64 / 20.0).powi(t1 as i32),
             omega2: (19.0_f64 / 20.0).sqrt().powi(t2 as i32),
             tau1: 1.0 / 8.0,
@@ -114,6 +124,17 @@ impl KfacConfig {
     }
 }
 
+/// Running second-moment scale estimates for an eigenbasis-diagonal
+/// inverse (EKFAC): EMA'd over the scale refreshes of the current
+/// eigenbasis epoch (the moments are basis-dependent, so eigenbasis
+/// rebuilds reset the state).
+struct ScaleState {
+    /// One weight-shaped second-moment matrix per layer.
+    s: Vec<Mat>,
+    /// Refreshes absorbed in this epoch (drives the EMA decay).
+    k: usize,
+}
+
 /// K-FAC optimizer state.
 pub struct Kfac {
     pub cfg: KfacConfig,
@@ -124,6 +145,9 @@ pub struct Kfac {
     /// The (stats, γ) snapshot the cached inverse was built from —
     /// checkpointed so resume can rebuild `inv` bit-exactly.
     refresh: Option<(RawStats, f64)>,
+    /// Re-estimated EKFAC scales applied on top of the cached inverse
+    /// (checkpointed; re-applied after the rebuild on resume).
+    scale: Option<ScaleState>,
     delta_prev: Option<Params>,
     k: usize,
 }
@@ -139,6 +163,7 @@ impl Kfac {
             gamma,
             inv: None,
             refresh: None,
+            scale: None,
             delta_prev: None,
             k: 0,
         }
@@ -284,6 +309,9 @@ impl Optimizer for Kfac {
             // refresh, negligible next to the O(n³) factorizations the
             // refresh itself just performed
             self.refresh = Some((self.stats.s.clone(), self.gamma));
+            // re-estimated scales live in the old eigenbasis — a new
+            // basis starts a fresh second-moment epoch
+            self.scale = None;
         }
 
         // assemble δ = αΔ (+ μ δ₀)
@@ -314,6 +342,40 @@ impl Optimizer for Kfac {
         params.axpy(1.0, &delta);
         let delta_norm = delta.norm_sq().sqrt();
         self.delta_prev = Some(delta);
+
+        // (8) amortized EKFAC scale re-estimation (George et al. 2018):
+        // every T_scale iterations, estimate second moments of
+        // per-example gradients projected into the cached inverse's
+        // eigenbasis (τ₁ sub-batch, model-sampled targets), fold them
+        // into the running epoch estimate, and swap them in as the
+        // diagonal scales — effective from the next iteration. No-op
+        // for structures without an eigenbasis.
+        if cfg.t_scale > 0 && k % cfg.t_scale == 0 {
+            let sq = self.inv.as_ref().and_then(|inv| inv.eigenbases()).map(|bases| {
+                backend.grad_sq_in_basis(
+                    params,
+                    x,
+                    y,
+                    stats_rows,
+                    (k as u64).wrapping_add(0x5CA1E),
+                    bases,
+                )
+            });
+            if let Some(sq) = sq {
+                match self.scale.as_mut() {
+                    Some(sc) => {
+                        sc.k += 1;
+                        let eps = KfacStats::epsilon(sc.k);
+                        for (d, s) in sc.s.iter_mut().zip(sq.iter()) {
+                            d.ema(eps, 1.0 - eps, s);
+                        }
+                    }
+                    None => self.scale = Some(ScaleState { s: sq, k: 1 }),
+                }
+                let sc = self.scale.as_ref().expect("scale state just set");
+                self.inv.as_mut().expect("inverse cache").set_scales(&sc.s, self.gamma);
+            }
+        }
 
         StepInfo {
             loss: h0,
@@ -348,6 +410,10 @@ impl Optimizer for Kfac {
             st.set_mats("refresh_gg", snap.gg.clone());
             st.set_mats("refresh_gg_off", snap.gg_off.clone());
         }
+        if let Some(sc) = &self.scale {
+            st.set_scalar("scale_k", sc.k as f64);
+            st.set_mats("scale_s", sc.s.clone());
+        }
         st
     }
 
@@ -380,17 +446,19 @@ impl Optimizer for Kfac {
         self.stats.s.aa_off = aa_off.to_vec();
         self.stats.s.gg = gg.to_vec();
         self.stats.s.gg_off = gg_off.to_vec();
+        // weight-shaped entries: gg[i].rows × aa[i].rows per layer
+        // (shared by the delta_prev and scale_s dimension checks)
+        let weight_dims: Vec<(usize, usize)> = self
+            .stats
+            .s
+            .aa
+            .iter()
+            .zip(self.stats.s.gg.iter())
+            .map(|(a, g)| (g.rows, a.rows))
+            .collect();
         self.delta_prev = match st.mats("delta_prev") {
             Some(d) => {
-                // weight-shaped: gg[i].rows × aa[i].rows per layer
-                let want = self
-                    .stats
-                    .s
-                    .aa
-                    .iter()
-                    .zip(self.stats.s.gg.iter())
-                    .map(|(a, g)| (g.rows, a.rows));
-                check_dims("delta_prev", d, want)?;
+                check_dims("delta_prev", d, weight_dims.iter().copied())?;
                 Some(Params(d.to_vec()))
             }
             None => None,
@@ -412,6 +480,20 @@ impl Optimizer for Kfac {
                 self.inv = None;
                 self.refresh = None;
             }
+        }
+        self.scale = match (st.scalar("scale_k"), st.mats("scale_s")) {
+            (Some(sk), Some(ss)) => {
+                check_dims("scale_s", ss, weight_dims.iter().copied())?;
+                Some(ScaleState { s: ss.to_vec(), k: sk as usize })
+            }
+            _ => None,
+        };
+        // re-apply the running scales on top of the rebuilt inverse so
+        // the resumed trajectory is bit-exact (γ has not changed since
+        // the scales were applied: γ changes only on rebuilds, which
+        // reset the scale state)
+        if let (Some(sc), Some(inv)) = (self.scale.as_ref(), self.inv.as_mut()) {
+            inv.set_scales(&sc.s, self.gamma);
         }
         Ok(())
     }
@@ -487,7 +569,9 @@ mod tests {
     fn ekfac_trains_through_the_seam() {
         let (arch, mut params, x, y) = toy_problem(1);
         let mut backend = RustBackend::new(arch.clone());
-        let cfg = KfacConfig { lambda0: 10.0, ..KfacConfig::ekfac() };
+        // t_scale = 2: the amortized scale re-estimation is active on
+        // the training path, not just the default cadence
+        let cfg = KfacConfig { lambda0: 10.0, t_scale: 2, ..KfacConfig::ekfac() };
         let mut opt = Kfac::new(&arch, cfg);
         let first = {
             use crate::backend::ModelBackend;
@@ -586,6 +670,53 @@ mod tests {
             assert_eq!(ia.gamma, ib.gamma, "gamma diverged at step {s}");
             assert!(params_a == params_b, "params diverged at step {s}");
         }
+    }
+
+    #[test]
+    fn ekfac_scale_state_roundtrip_is_bit_exact() {
+        // Snapshot mid-refresh-interval with live re-estimated scales;
+        // the restored optimizer must continue bit-identically.
+        let (arch, mut params_a, x, y) = toy_problem(8);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { lambda0: 10.0, t3: 6, t_scale: 2, ..KfacConfig::ekfac() };
+        let mut opt_a = Kfac::new(&arch, cfg.clone());
+        // scale refreshes at k = 2, 4, 6, 8; the rebuilds at k ≤ 3 and
+        // k = 6 reset the epoch, so after k = 8 the live epoch holds
+        // the EMA of the k = 6 and k = 8 estimates (sc.k = 2) and the
+        // k = 9 snapshot lands mid-refresh-interval
+        for _ in 0..9 {
+            opt_a.step(&mut backend, &mut params_a, &x, &y);
+        }
+        let snapshot = opt_a.state();
+        assert!(snapshot.mats("scale_s").is_some(), "scale state must checkpoint");
+        assert!(snapshot.scalar("scale_k").is_some());
+        let mut params_b = params_a.clone();
+        let mut opt_b = Kfac::new(&arch, cfg);
+        opt_b.load_state(&snapshot).expect("state loads");
+        for s in 0..5 {
+            let ia = opt_a.step(&mut backend, &mut params_a, &x, &y);
+            let ib = opt_b.step(&mut backend, &mut params_b, &x, &y);
+            assert_eq!(ia.loss.to_bits(), ib.loss.to_bits(), "loss diverged at step {s}");
+            assert_eq!(ia.gamma, ib.gamma, "gamma diverged at step {s}");
+            assert!(params_a == params_b, "params diverged at step {s}");
+        }
+    }
+
+    #[test]
+    fn scale_refresh_is_noop_for_structures_without_eigenbases() {
+        // blktridiag has no re-estimable scales: with t_scale = 1 the
+        // trajectory must match t_scale = 0 exactly.
+        let run = |t_scale: usize| {
+            let (arch, mut params, x, y) = toy_problem(9);
+            let mut backend = RustBackend::new(arch.clone());
+            let cfg = KfacConfig { lambda0: 10.0, t_scale, ..Default::default() };
+            let mut opt = Kfac::new(&arch, cfg);
+            for _ in 0..6 {
+                opt.step(&mut backend, &mut params, &x, &y);
+            }
+            params
+        };
+        assert!(run(1) == run(0), "t_scale must not perturb blktridiag");
     }
 
     #[test]

@@ -122,8 +122,10 @@ fn pool() -> Option<&'static Pool> {
         if workers <= 1 || !pool_enabled() {
             return None;
         }
-        let pool: &'static Pool =
-            Box::leak(Box::new(Pool { queue: Mutex::new(VecDeque::new()), available: Condvar::new() }));
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        }));
         for w in 0..workers - 1 {
             std::thread::Builder::new()
                 .name(format!("kfac-pool-{w}"))

@@ -2,7 +2,9 @@
 //! beyond GEMM, on seeded SPD inputs of sizes 1..64:
 //!
 //! - `Cholesky`: `L Lᵀ = A`, and `A x = b` solves round-trip;
-//! - `SymEig`: `Q Λ Qᵀ = A` and `Qᵀ Q = I`;
+//! - `SymEig`: `Q Λ Qᵀ = A` and `Qᵀ Q = I`, plus seeded boundary tests
+//!   at sizes 23–26 straddling the `n > 24` QL/Jacobi dispatch switch
+//!   (including degenerate spectra);
 //! - `KronPairInverse`: `(A ⊗ B ± C ⊗ D)` applied to the structured
 //!   inverse's output round-trips the input.
 
@@ -75,6 +77,75 @@ fn symeig_reconstructs_and_is_orthogonal() {
         }
         let tr: f64 = e.w.iter().sum();
         assert!((tr - a.trace()).abs() < 1e-8 * (1.0 + a.trace().abs()), "n={n}: trace");
+    }
+}
+
+#[test]
+fn symeig_ql_and_jacobi_agree_across_dispatch_boundary() {
+    // `SymEig::new` switches from cyclic Jacobi to tred2/tql2 at
+    // n > 24; both paths must agree on the spectrum and reconstruct
+    // `Q Λ Qᵀ = A` at the sizes straddling the switch.
+    for n in [23usize, 24, 25, 26] {
+        for seed in 0..3u64 {
+            let mut mrng = Rng::new(1_000 * n as u64 + seed);
+            let a = Mat::randn(n, n, 1.0, &mut mrng).symmetrize();
+            let ql = SymEig::new_ql(&a);
+            let ja = SymEig::new_jacobi(&a);
+            let scale = 1.0 + a.max_abs();
+            for i in 0..n {
+                assert!(
+                    (ql.w[i] - ja.w[i]).abs() < 1e-9 * scale,
+                    "n={n} seed={seed} eigenvalue {i}: ql={} jacobi={}",
+                    ql.w[i],
+                    ja.w[i]
+                );
+            }
+            for e in [&ql, &ja] {
+                assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} seed={seed}");
+                assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs() < 1e-9, "n={n}");
+            }
+            // the dispatching front door reconstructs too, whichever
+            // path it picked
+            let e = SymEig::new(&a);
+            assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} dispatch");
+        }
+    }
+}
+
+#[test]
+fn symeig_boundary_sizes_handle_degenerate_spectra() {
+    // Repeated eigenvalues (including a zero cluster) at the dispatch
+    // boundary: both paths must recover the multiset of eigenvalues and
+    // reconstruct A, even though individual eigenvectors are not unique.
+    let mut rng = Rng::new(17);
+    for n in [23usize, 24, 25, 26] {
+        // random orthogonal Q from a helper eigendecomposition
+        let q = SymEig::new_jacobi(&Mat::randn(n, n, 1.0, &mut rng).symmetrize()).v;
+        // spectrum with heavy multiplicities: 0 (×3), 1.5, and 4.0
+        let w: Vec<f64> = (0..n)
+            .map(|i| match i {
+                0..=2 => 0.0,
+                i if i < n / 2 => 1.5,
+                _ => 4.0,
+            })
+            .collect();
+        let qd = Mat::from_fn(n, n, |r, c| q.at(r, c) * w[c]);
+        let a = qd.matmul_nt(&q).symmetrize(); // Q diag(w) Qᵀ
+        let ql = SymEig::new_ql(&a);
+        let ja = SymEig::new_jacobi(&a);
+        let scale = 1.0 + a.max_abs();
+        for i in 0..n {
+            // sorted spectra must agree with the construction and with
+            // each other
+            let mut sorted = w.clone();
+            sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert!((ql.w[i] - sorted[i]).abs() < 1e-8 * scale, "n={n} ql eigenvalue {i}");
+            assert!((ql.w[i] - ja.w[i]).abs() < 1e-8 * scale, "n={n} eigenvalue {i}");
+        }
+        for e in [&ql, &ja] {
+            assert!(e.reconstruct().sub(&a).max_abs() < 1e-8 * scale, "n={n} degenerate");
+            assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs() < 1e-8, "n={n} orth");
+        }
     }
 }
 

@@ -89,6 +89,77 @@ fn checkpoint_save_load_resume_is_bit_exact() {
 }
 
 #[test]
+fn ekfac_scale_state_checkpoint_roundtrip_is_bit_exact() {
+    // The EKFAC amortized scale re-estimation adds mutable optimizer
+    // state (running second moments in the current eigenbasis); a
+    // checkpoint taken mid-refresh-interval must carry it and resume
+    // bit-exactly. t3 = 4 / t_scale = 3: at the k = 7 checkpoint the
+    // scale epoch seeded at k = 6 is live and the next rebuild (k = 8)
+    // has not yet happened.
+    let (arch, ds) = small_setup();
+    let seed = 11u64;
+    let init = arch.sparse_init(&mut Rng::new(seed));
+    let cfg = || KfacConfig { lambda0: 5.0, t3: 4, t_scale: 3, ..KfacConfig::ekfac() };
+    let session = |opt: Kfac, iters: usize| {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(iters)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(2)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(seed)
+            .params(init.clone())
+            .optimizer(opt)
+    };
+    let full = session(Kfac::new(&arch, cfg()), 14).run();
+    let path = tmp_ckpt("ekfac_scales");
+    session(Kfac::new(&arch, cfg()), 7).checkpoint_every(7, &path).run();
+
+    // the checkpoint must carry the running scale state
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.version, checkpoint::CHECKPOINT_VERSION);
+    assert_eq!(ck.opt.str_val("precond"), Some("ekfac"));
+    assert!(ck.opt.mats("scale_s").is_some(), "scale state missing from checkpoint");
+    assert!(ck.opt.scalar("scale_k").is_some());
+
+    let resumed = session(Kfac::new(&arch, cfg()), 14).resume_from(&path).run();
+    assert!(full.params == resumed.params, "EKFAC scale resume diverged");
+    assert!(full.avg_params == resumed.avg_params, "Polyak average diverged");
+    for row in &resumed.log {
+        let want = full.log.iter().find(|r| r.iter == row.iter).unwrap();
+        assert_rows_bit_equal(want, row, "ekfac post-resume eval");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn v1_checkpoints_are_cleanly_rejected() {
+    // The scale state bumped KFACCKPT to v2; a v1 file must be refused
+    // with a version error, not mis-read into a diverging trajectory.
+    assert_eq!(checkpoint::CHECKPOINT_VERSION, 2);
+    let (arch, ds) = small_setup();
+    let path = tmp_ckpt("v1_reject");
+    TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(2)
+        .schedule(BatchSchedule::Fixed(32))
+        .eval_rows(32)
+        .optimizer(Kfac::new(&arch, kfac_cfg()))
+        .checkpoint_every(2, &path)
+        .run();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8..12].copy_from_slice(&1u32.to_le_bytes()); // forge version 1
+    std::fs::write(&path, &bytes).unwrap();
+    let err = TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(4)
+        .optimizer(Kfac::new(&arch, kfac_cfg()))
+        .resume_from(&path)
+        .try_run()
+        .unwrap_err();
+    assert!(err.contains("version 1"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn sgd_checkpoint_resume_is_bit_exact() {
     let (arch, ds) = small_setup();
     let init = arch.sparse_init(&mut Rng::new(7));
