@@ -9,7 +9,7 @@ use kfac::bench::{bench, default_budget};
 use kfac::coordinator::Problem;
 use kfac::fisher::stats::KfacStats;
 use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, TridiagInverse};
-use kfac::linalg::KronBasis;
+use kfac::linalg::{KronBasis, SymEig};
 use kfac::rng::Rng;
 
 fn main() {
@@ -30,6 +30,21 @@ fn main() {
     let mut stats = KfacStats::new(&arch);
     stats.update(&raw);
     let gamma = 1.0;
+
+    // One eigendecomposition of a real (damped) activation factor — the
+    // unit of work the blocked eigensolver threads inside every
+    // tridiag/EKFAC refresh. Pick the factor closest to 256 wide so the
+    // number is comparable to the sym_eig_256 linalg bench.
+    let aa = &stats.s.aa;
+    let (fi, _) = aa
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, m)| (m.rows as i64 - 256).unsigned_abs())
+        .expect("at least one layer");
+    let factor = aa[fi].add_diag(1.0);
+    bench(&format!("sym_eig_factor_{}(mnist_ae)", factor.rows), budget, || {
+        std::hint::black_box(SymEig::new(&factor));
+    });
 
     bench("blockdiag_build(mnist_ae)", budget, || {
         std::hint::black_box(BlockDiagInverse::build(&stats.s, gamma));

@@ -8,7 +8,9 @@
 //!
 //! Besides the console report, results are written as JSON to
 //! `BENCH_linalg.json` (override with `KFAC_BENCH_JSON`) so CI can
-//! archive GFLOP/s baselines per commit.
+//! archive GFLOP/s baselines per commit — including per-size `SymEig`
+//! timings (n = 64/256/512, blocked vs. scalar-QL reference) so the
+//! eigensolver speedup is tracked alongside GEMM.
 
 use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
 use kfac::linalg::{chol::spd_inverse, KronPairInverse, Mat, SymEig};
@@ -67,7 +69,7 @@ fn main() {
         results.push((r, Some(g)));
     }
 
-    // ---- factor inversions / eigensolver ----
+    // ---- factor inversions ----
     for n in [101usize, 257, 401] {
         let x = Mat::randn(n + 8, n, 1.0, &mut rng);
         let spd = x.matmul_tn(&x).add_diag(0.5);
@@ -75,8 +77,22 @@ fn main() {
             std::hint::black_box(spd_inverse(&spd));
         });
         results.push((r, None));
+    }
+
+    // ---- eigensolver: per-size SymEig timings tracked per-commit in
+    // BENCH_linalg.json alongside GEMM (the blocked, pool-parallel path
+    // that dominates every T₃ inverse refresh) ----
+    for n in [64usize, 256, 512] {
+        let x = Mat::randn(n + 8, n, 1.0, &mut rng);
+        let spd = x.matmul_tn(&x).add_diag(0.5);
         let r = bench(&format!("sym_eig_{n}"), budget, || {
             std::hint::black_box(SymEig::new(&spd));
+        });
+        results.push((r, None));
+        // the scalar reference path at the same size, for the speedup
+        // ratio the blocked rebuild is meant to move
+        let r = bench(&format!("sym_eig_ql_ref_{n}"), budget, || {
+            std::hint::black_box(SymEig::new_ql(&spd));
         });
         results.push((r, None));
     }

@@ -27,6 +27,7 @@ impl BlockDiagInverse {
     pub fn build(stats: &RawStats, gamma: f64) -> BlockDiagInverse {
         let l = stats.num_layers();
         let pairs = crate::par::par_map_send(l, 1, |i| {
+            super::check_factors_finite("blkdiag", i, &stats.aa[i], &stats.gg[i]);
             let (ad, gd) = damped_factors(&stats.aa[i], &stats.gg[i], gamma);
             (spd_inverse(&ad), spd_inverse(&gd))
         });

@@ -57,6 +57,7 @@ impl EkfacInverse {
         let l = stats.num_layers();
         let damp = gamma * gamma;
         let parts = crate::par::par_map_send(l, 1, |i| {
+            super::check_factors_finite("ekfac", i, &stats.aa[i], &stats.gg[i]);
             let ea = SymEig::new(&stats.aa[i]);
             let eg = SymEig::new(&stats.gg[i]);
             let max_a = ea.w.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
@@ -316,6 +317,30 @@ mod tests {
         let mut bd = BlockDiagInverse::build(&st, 0.5);
         assert!(bd.eigenbases().is_none());
         assert!(!bd.set_scales(&[Mat::filled(3, 5, 1.0)], 0.5));
+    }
+
+    #[test]
+    fn poisoned_factor_panics_naming_the_layer() {
+        // NaN-poisoned statistics must be rejected with a message that
+        // names the structure and layer, not an opaque unwrap deep in a
+        // sort. One layer keeps the build inline on the caller, so the
+        // panic payload is observable here.
+        let arch = Arch::new(vec![3, 2], vec![Act::Identity], LossKind::SquaredError);
+        let mut st = RawStats::zeros(&arch);
+        st.aa[0] = Mat::eye(4);
+        st.gg[0] = Mat::eye(2);
+        st.aa[0].set(0, 1, f64::NAN);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            EkfacInverse::build(&st, 0.1)
+        }));
+        let payload = r.expect_err("poisoned stats must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("layer 0"), "panic message lacks layer: {msg}");
+        assert!(msg.contains("non-finite"), "panic message lacks cause: {msg}");
     }
 
     #[test]

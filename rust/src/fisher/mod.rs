@@ -34,6 +34,23 @@ pub use tridiag::TridiagInverse;
 use crate::linalg::{KronBasis, Mat};
 use crate::nn::Params;
 
+/// Reject NaN/Inf-poisoned factor statistics *before* they reach a
+/// factorization, with a message naming the structure and layer (the
+/// eigensolver's own guard can only report matrix dimensions). Called
+/// by every per-layer inverse build.
+pub(crate) fn check_factors_finite(structure: &str, layer: usize, aa: &Mat, gg: &Mat) {
+    assert!(
+        aa.all_finite(),
+        "{structure}: non-finite activation statistics Ā for layer {layer} — \
+         refusing to build an inverse from poisoned factors"
+    );
+    assert!(
+        gg.all_finite(),
+        "{structure}: non-finite pre-activation-gradient statistics G for layer {layer} — \
+         refusing to build an inverse from poisoned factors"
+    );
+}
+
 /// A built approximate inverse Fisher: applies `F₀⁻¹` to a
 /// gradient-shaped `Params` (i.e. computes the update proposal
 /// `Δ = -F₀⁻¹ ∇h` up to sign). Produced by a [`Preconditioner`] at

@@ -47,10 +47,12 @@ impl TridiagInverse {
     /// used as-is.
     pub fn build(stats: &RawStats, gamma: f64) -> TridiagInverse {
         let l = stats.num_layers();
-        // Damped diagonal factors.
-        let damped: Vec<(Mat, Mat)> = (0..l)
-            .map(|i| damped_factors(&stats.aa[i], &stats.gg[i], gamma))
-            .collect();
+        // Damped diagonal factors (with the per-layer poisoned-stats
+        // guard), computed across the pool like the stages below.
+        let damped: Vec<(Mat, Mat)> = crate::par::par_map_send(l, 1, |i| {
+            super::check_factors_finite("blktridiag", i, &stats.aa[i], &stats.gg[i]);
+            damped_factors(&stats.aa[i], &stats.gg[i], gamma)
+        });
         // Ψ factors for each adjacent pair (i, i+1), i = 0..l-2; each pair
         // needs the *next* block's damped-factor inverses — computed in
         // parallel across pairs (paper §8: task 5 parallelizes across

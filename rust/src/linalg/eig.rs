@@ -1,13 +1,74 @@
-//! Symmetric eigendecomposition (cyclic Jacobi) and PSD matrix functions.
+//! Symmetric eigendecomposition and PSD matrix functions.
 //!
-//! The block-tridiagonal inverse approximation (paper §4.3 + Appendix B)
-//! needs symmetric eigendecompositions and inverse square roots of the
-//! damped Kronecker factors. Jacobi is simple, numerically excellent for
-//! symmetric matrices, and O(n³) with a modest constant — fine for the
-//! layer-sized (≤ ~800) matrices K-FAC inverts, especially since
-//! inverses are only refreshed every `T₃` iterations.
+//! The inverse-refresh pipeline (paper §6.3/§8: two eigendecompositions
+//! per layer per `T₃` refresh for the tridiagonal and EKFAC paths)
+//! funnels through this module, so it offers three paths with one
+//! contract (`A = V diag(w) Vᵀ`, `w` ascending):
+//!
+//! - **Blocked** ([`SymEig::new_blocked`], the `n > 24` production
+//!   path): Householder tridiagonalization in panels of [`NB`] columns
+//!   (the LAPACK `dsytrd`/`dlatrd` decomposition), with each panel's
+//!   rank-2b trailing update lowered onto two pool-parallel
+//!   [`gemm`] calls and the orthogonal factor accumulated per panel in
+//!   compact-WY form (`Q ← Q(I − V T Vᵀ)`, two more GEMMs). The
+//!   implicit-shift QL stage records each step's plane rotations and
+//!   applies them to the eigenvector rows in parallel over
+//!   [`par::par_ranges`].
+//! - **Unblocked QL** ([`SymEig::new_ql`]): the classic scalar
+//!   tred2/tql2 pair (EISPACK/NR layout), kept as the reference the
+//!   blocked path is property-tested against at 1e-9.
+//! - **Jacobi** ([`SymEig::new_jacobi`]): cyclic Jacobi with threshold
+//!   sweeps — the `n ≤ 24` dispatch target, the independent
+//!   cross-check, and the fallback when tql2 exhausts its iteration
+//!   budget on a pathological spectrum (instead of aborting a whole
+//!   training run; see [`tql2_fallback_count`]).
+//!
+//! All paths are deterministic and thread-count-invariant: parallel
+//! loops only partition disjoint row ranges, so `KFAC_THREADS=1` and
+//! `KFAC_POOL=0` produce bit-identical decompositions.
 
-use super::Mat;
+use super::{gemm, Mat};
+use crate::par::{self, SendPtr};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Panel width of the blocked Householder reduction: wide enough that
+/// the rank-2b trailing GEMMs dominate the panel's BLAS-2 work, small
+/// enough that the panel stays cache-resident.
+pub const NB: usize = 32;
+
+/// Largest size routed to cyclic Jacobi by [`SymEig::new`].
+const JACOBI_MAX: usize = 24;
+
+/// tql2 gives up on an eigenvalue after this many implicit-shift
+/// iterations and the caller falls back to Jacobi.
+const TQL2_MAX_ITER: usize = 50;
+
+/// Grain for the O(n) Jacobi rotation loops: far above any factor size
+/// K-FAC actually inverts, so the row/column sweeps only split across
+/// the pool for very large fallback matrices where an O(n) loop
+/// amortizes a dispatch.
+const ROT_MIN_CHUNK: usize = 2048;
+
+static TQL2_FALLBACKS: AtomicUsize = AtomicUsize::new(0);
+static TQL2_FALLBACK_LOGGED: AtomicBool = AtomicBool::new(false);
+
+/// Process-wide count of QL→Jacobi fallbacks (pathological spectra
+/// that exhausted tql2's iteration budget). Observers/metrics code can
+/// poll this; the first occurrence is also logged to stderr once.
+pub fn tql2_fallback_count() -> usize {
+    TQL2_FALLBACKS.load(Ordering::Relaxed)
+}
+
+fn note_tql2_fallback(n: usize) {
+    TQL2_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    if !TQL2_FALLBACK_LOGGED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "kfac: tql2 exhausted its iteration budget on an n={n} matrix; \
+             falling back to the Jacobi eigensolver (logged once per process, \
+             see linalg::eig::tql2_fallback_count)"
+        );
+    }
+}
 
 /// Eigendecomposition `A = V diag(w) Vᵀ` of a symmetric matrix.
 pub struct SymEig {
@@ -18,25 +79,161 @@ pub struct SymEig {
 }
 
 impl SymEig {
-    /// Symmetric eigendecomposition. Householder tridiagonalization +
-    /// implicit-shift QL (the classic tred2/tql2 pair) for matrices big
-    /// enough for Jacobi's constant to hurt; cyclic Jacobi below that
-    /// (and as the reference implementation the QL path is tested
-    /// against).
+    /// Symmetric eigendecomposition. Blocked, pool-parallel Householder
+    /// tridiagonalization + implicit-shift QL for matrices big enough
+    /// for Jacobi's constant to hurt; cyclic Jacobi below that. Rejects
+    /// non-finite input with a descriptive panic (the per-layer inverse
+    /// builders name the offending layer before calling in here).
     pub fn new(a: &Mat) -> SymEig {
-        if a.rows > 24 {
-            Self::new_ql(a)
+        assert!(a.is_square(), "eig: non-square");
+        assert!(
+            a.all_finite(),
+            "SymEig::new: non-finite entries in a {}x{} matrix \
+             (NaN/Inf-poisoned curvature statistics?)",
+            a.rows,
+            a.cols
+        );
+        if a.rows > JACOBI_MAX {
+            Self::new_blocked(a)
         } else {
             Self::new_jacobi(a)
         }
     }
 
-    /// tred2: reduce symmetric `a` to tridiagonal (d, e) with accumulated
-    /// orthogonal transform in `z`; then tql2: implicit-shift QL on the
-    /// tridiagonal, rotating `z`'s columns into eigenvectors.
-    pub fn new_ql(a: &Mat) -> SymEig {
+    // -----------------------------------------------------------------
+    // blocked path
+    // -----------------------------------------------------------------
+
+    /// Blocked Householder tridiagonalization (panels of [`NB`]
+    /// columns, rank-2b trailing updates as two GEMMs, compact-WY
+    /// accumulation of `Q`) followed by implicit-shift QL with
+    /// row-parallel rotation application. Falls back to Jacobi on the
+    /// original matrix if QL exhausts its iteration budget.
+    pub fn new_blocked(a: &Mat) -> SymEig {
+        match Self::try_blocked(a, TQL2_MAX_ITER) {
+            Ok(e) => e,
+            Err(()) => Self::fallback_to_jacobi(a),
+        }
+    }
+
+    /// Test hook: the blocked path with an explicit tql2 iteration cap
+    /// (cap 0 deterministically exercises the Jacobi fallback).
+    #[doc(hidden)]
+    pub fn new_blocked_with_iter_cap(a: &Mat, max_iter: usize) -> SymEig {
+        match Self::try_blocked(a, max_iter) {
+            Ok(e) => e,
+            Err(()) => Self::fallback_to_jacobi(a),
+        }
+    }
+
+    fn fallback_to_jacobi(a: &Mat) -> SymEig {
+        note_tql2_fallback(a.rows);
+        Self::new_jacobi(a)
+    }
+
+    fn try_blocked(a: &Mat, max_iter: usize) -> Result<SymEig, ()> {
         assert!(a.is_square(), "eig: non-square");
         let n = a.rows;
+        if n == 0 {
+            return Ok(SymEig { w: Vec::new(), v: Mat::zeros(0, 0) });
+        }
+        if n <= 2 {
+            // already tridiagonal
+            let mut z = Mat::eye(n);
+            let mut d: Vec<f64> = (0..n).map(|i| a.at(i, i)).collect();
+            let mut e = vec![0.0f64; n];
+            if n == 2 {
+                e[0] = 0.5 * (a.at(0, 1) + a.at(1, 0));
+            }
+            tql2(&mut d, &mut e, &mut z, max_iter)?;
+            return Ok(Self::sorted(d, z));
+        }
+
+        let mut z = a.symmetrize();
+        // Householder vectors: column k in rows k+1..n with a stored
+        // unit at (k+1, k); taus alongside.
+        let mut vs = Mat::zeros(n, n);
+        let mut taus = vec![0.0f64; n];
+        let mut d = vec![0.0f64; n];
+        // e[i] = subdiagonal T[i+1, i]; e[n-1] stays 0.
+        let mut e = vec![0.0f64; n];
+
+        let mut k0 = 0;
+        while k0 < n - 2 {
+            let bp = NB.min(n - 2 - k0);
+            // W panel (dlatrd): column j holds w_j on rows k0+j+1..n.
+            let mut w = Mat::zeros(n, bp);
+            for j in 0..bp {
+                let k = k0 + j;
+                // (1) bring column k up to date with the panel's
+                // earlier rank-2 corrections:
+                //   z[r,k] -= Σ_t V[r,t]·W[k,t] + W[r,t]·V[k,t]
+                if j > 0 {
+                    for r in k..n {
+                        let mut acc = 0.0;
+                        for t in 0..j {
+                            acc += vs.at(r, k0 + t) * w.at(k, t) + w.at(r, t) * vs.at(k, k0 + t);
+                        }
+                        let zv = z.at(r, k) - acc;
+                        z.set(r, k, zv);
+                    }
+                }
+                d[k] = z.at(k, k);
+                // (2) reflector annihilating z[k+2.., k]
+                let (beta, tau) = make_householder(&z, &mut vs, k);
+                e[k] = beta;
+                taus[k] = tau;
+                // (3) w_j = τ(Z v − V(Wᵀv) − W(Vᵀv)) − ½τ(wᵀv)v
+                compute_w_column(&z, &vs, &mut w, k0, j, k, tau);
+            }
+            // (4) rank-2b trailing update, two GEMMs straight into z:
+            //   z[kend.., kend..] -= V₂W₂ᵀ + W₂V₂ᵀ
+            let kend = k0 + bp;
+            trailing_update(&mut z, &vs, &w, k0, bp, kend);
+            k0 = kend;
+        }
+        d[n - 2] = z.at(n - 2, n - 2);
+        d[n - 1] = z.at(n - 1, n - 1);
+        e[n - 2] = 0.5 * (z.at(n - 1, n - 2) + z.at(n - 2, n - 1));
+        e[n - 1] = 0.0;
+
+        let mut q = accumulate_q(&vs, &taus, n);
+        tql2(&mut d, &mut e, &mut q, max_iter)?;
+        Ok(Self::sorted(d, q))
+    }
+
+    // -----------------------------------------------------------------
+    // unblocked QL reference
+    // -----------------------------------------------------------------
+
+    /// tred2: reduce symmetric `a` to tridiagonal (d, e) with accumulated
+    /// orthogonal transform in `z`; then tql2: implicit-shift QL on the
+    /// tridiagonal, rotating `z`'s columns into eigenvectors. This is
+    /// the scalar reference implementation the blocked path is tested
+    /// against; on tql2 iteration exhaustion it falls back to Jacobi on
+    /// the original matrix instead of panicking mid-training.
+    pub fn new_ql(a: &Mat) -> SymEig {
+        match Self::try_ql(a, TQL2_MAX_ITER) {
+            Ok(e) => e,
+            Err(()) => Self::fallback_to_jacobi(a),
+        }
+    }
+
+    /// Test hook: the unblocked path with an explicit tql2 iteration cap.
+    #[doc(hidden)]
+    pub fn new_ql_with_iter_cap(a: &Mat, max_iter: usize) -> SymEig {
+        match Self::try_ql(a, max_iter) {
+            Ok(e) => e,
+            Err(()) => Self::fallback_to_jacobi(a),
+        }
+    }
+
+    fn try_ql(a: &Mat, max_iter: usize) -> Result<SymEig, ()> {
+        assert!(a.is_square(), "eig: non-square");
+        let n = a.rows;
+        if n == 0 {
+            return Ok(SymEig { w: Vec::new(), v: Mat::zeros(0, 0) });
+        }
         let mut z = a.symmetrize();
         let mut d = vec![0.0f64; n];
         let mut e = vec![0.0f64; n];
@@ -116,83 +313,23 @@ impl SymEig {
             }
         }
 
-        // --- tql2 (implicit-shift QL with eigenvector accumulation) ---
+        // shift to e[i] = subdiag(i, i+1), then QL
         for i in 1..n {
             e[i - 1] = e[i];
         }
         e[n - 1] = 0.0;
-        for l in 0..n {
-            let mut iter = 0;
-            loop {
-                // find small subdiagonal element
-                let mut m = l;
-                while m + 1 < n {
-                    let dd = d[m].abs() + d[m + 1].abs();
-                    if e[m].abs() <= f64::EPSILON * dd {
-                        break;
-                    }
-                    m += 1;
-                }
-                if m == l {
-                    break;
-                }
-                iter += 1;
-                assert!(iter <= 50, "tql2: too many iterations");
-                let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
-                let mut r = g.hypot(1.0);
-                let sign_r = if g >= 0.0 { r } else { -r };
-                g = d[m] - d[l] + e[l] / (g + sign_r);
-                let (mut s, mut c) = (1.0f64, 1.0f64);
-                let mut p = 0.0f64;
-                for i in (l..m).rev() {
-                    let mut f = s * e[i];
-                    let b = c * e[i];
-                    r = f.hypot(g);
-                    e[i + 1] = r;
-                    if r == 0.0 {
-                        d[i + 1] -= p;
-                        e[m] = 0.0;
-                        break;
-                    }
-                    s = f / r;
-                    c = g / r;
-                    g = d[i + 1] - p;
-                    r = (d[i] - g) * s + 2.0 * c * b;
-                    p = s * r;
-                    d[i + 1] = g + p;
-                    g = c * r - b;
-                    // accumulate eigenvectors
-                    for k in 0..n {
-                        f = z.at(k, i + 1);
-                        let v1 = s * z.at(k, i) + c * f;
-                        let v0 = c * z.at(k, i) - s * f;
-                        z.set(k, i + 1, v1);
-                        z.set(k, i, v0);
-                    }
-                }
-                if r == 0.0 && m > l {
-                    continue;
-                }
-                d[l] -= p;
-                e[l] = g;
-                e[m] = 0.0;
-            }
-        }
-
-        // sort ascending (tql2 output is unordered in general)
-        let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
-        let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
-        let mut vs = Mat::zeros(n, n);
-        for (new_c, &old_c) in idx.iter().enumerate() {
-            for r in 0..n {
-                vs.set(r, new_c, z.at(r, old_c));
-            }
-        }
-        SymEig { w, v: vs }
+        tql2(&mut d, &mut e, &mut z, max_iter)?;
+        Ok(Self::sorted(d, z))
     }
 
-    /// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+    // -----------------------------------------------------------------
+    // Jacobi
+    // -----------------------------------------------------------------
+
+    /// Cyclic Jacobi with threshold sweeps. `a` must be symmetric. The
+    /// per-rotation row/column updates run over `par::par_ranges`
+    /// (inert below `ROT_MIN_CHUNK` rows, so the usual layer-sized
+    /// inputs stay inline on the caller).
     pub fn new_jacobi(a: &Mat) -> SymEig {
         assert!(a.is_square(), "eig: non-square");
         let n = a.rows;
@@ -227,51 +364,58 @@ impl SymEig {
                     let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
                     let c = 1.0 / (t * t + 1.0).sqrt();
                     let s = t * c;
-                    // apply rotation to rows/cols p,q of m
-                    for k in 0..n {
-                        let mkp = m.at(k, p);
-                        let mkq = m.at(k, q);
-                        m.set(k, p, c * mkp - s * mkq);
-                        m.set(k, q, s * mkp + c * mkq);
-                    }
-                    for k in 0..n {
-                        let mpk = m.at(p, k);
-                        let mqk = m.at(q, k);
-                        m.set(p, k, c * mpk - s * mqk);
-                        m.set(q, k, s * mpk + c * mqk);
-                    }
+                    rotate_cols(&mut m, p, q, c, s);
+                    rotate_rows(&mut m, p, q, c, s);
                     // accumulate eigenvectors
-                    for k in 0..n {
-                        let vkp = v.at(k, p);
-                        let vkq = v.at(k, q);
-                        v.set(k, p, c * vkp - s * vkq);
-                        v.set(k, q, s * vkp + c * vkq);
-                    }
+                    rotate_cols(&mut v, p, q, c, s);
                 }
             }
         }
         // extract + sort ascending
-        let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.at(i, i), i)).collect();
-        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let w: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let d: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+        Self::sorted(d, v)
+    }
+
+    /// Sort the spectrum ascending (total order, so NaN-poisoned input
+    /// degrades to a garbage-but-ordered result instead of a panic) and
+    /// permute the eigenvector columns to match.
+    fn sorted(d: Vec<f64>, z: Mat) -> SymEig {
+        let n = d.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&i, &j| d[i].total_cmp(&d[j]));
+        let w: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
         let mut vs = Mat::zeros(n, n);
-        for (new_c, &(_, old_c)) in pairs.iter().enumerate() {
+        for (new_c, &old_c) in idx.iter().enumerate() {
             for r in 0..n {
-                vs.set(r, new_c, v.at(r, old_c));
+                vs.set(r, new_c, z.at(r, old_c));
             }
         }
         SymEig { w, v: vs }
     }
 
-    /// Apply a scalar function to the spectrum: `V f(diag(w)) Vᵀ`.
+    // -----------------------------------------------------------------
+    // spectral functions
+    // -----------------------------------------------------------------
+
+    /// Apply a scalar function to the spectrum: `V f(diag(w)) Vᵀ`. The
+    /// column rescaling runs row-parallel; the reconstruction GEMM is
+    /// pool-parallel already.
     pub fn matrix_fn(&self, f: impl Fn(f64) -> f64) -> Mat {
         let n = self.w.len();
-        // V * diag(f(w))
+        let fw: Vec<f64> = self.w.iter().map(|&w| f(w)).collect();
         let mut vf = self.v.clone();
-        for r in 0..n {
-            for c in 0..n {
-                vf.set(r, c, vf.at(r, c) * f(self.w[c]));
-            }
+        {
+            let ptr = SendPtr(vf.data.as_mut_ptr());
+            let chunk = par::chunk_for_flops(n, n.max(1));
+            par::par_ranges(n, chunk, |lo, hi| {
+                for r in lo..hi {
+                    // SAFETY: disjoint row ranges from par_ranges.
+                    let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r * n), n) };
+                    for (c, rv) in row.iter_mut().enumerate() {
+                        *rv *= fw[c];
+                    }
+                }
+            });
         }
         vf.matmul_nt(&self.v).symmetrize()
     }
@@ -290,6 +434,364 @@ impl SymEig {
     pub fn reconstruct(&self) -> Mat {
         self.matrix_fn(|w| w)
     }
+}
+
+// ---------------------------------------------------------------------
+// shared tql2 core
+// ---------------------------------------------------------------------
+
+/// Implicit-shift QL on a tridiagonal (`d` diagonal, `e[i]` the
+/// subdiagonal `T[i+1,i]`, `e[n-1]` ignored), rotating `z`'s columns
+/// into eigenvectors. Each QL step's plane rotations are recorded and
+/// then applied to `z`'s rows in one parallel pass (identical
+/// per-element arithmetic to the scalar version, so results are
+/// bit-identical at any thread count). `Err` on iteration exhaustion —
+/// the callers fall back to Jacobi on the original matrix.
+fn tql2(d: &mut [f64], e: &mut [f64], z: &mut Mat, max_iter: usize) -> Result<(), ()> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let mut rots: Vec<(usize, f64, f64)> = Vec::new();
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > max_iter {
+                return Err(());
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            rots.clear();
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                rots.push((i, c, s));
+            }
+            apply_rotations(z, &rots);
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Apply a QL step's recorded plane rotations (in order) to every row
+/// of `z`, rows split across the pool.
+fn apply_rotations(z: &mut Mat, rots: &[(usize, f64, f64)]) {
+    if rots.is_empty() {
+        return;
+    }
+    let rows = z.rows;
+    let cols = z.cols;
+    let ptr = SendPtr(z.data.as_mut_ptr());
+    let chunk = par::chunk_for_flops(rows, 6 * rots.len());
+    par::par_ranges(rows, chunk, |lo, hi| {
+        for k in lo..hi {
+            // SAFETY: disjoint row ranges from par_ranges.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(k * cols), cols) };
+            for &(i, c, s) in rots {
+                let f = row[i + 1];
+                let zi = row[i];
+                row[i + 1] = s * zi + c * f;
+                row[i] = c * zi - s * f;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// blocked-reduction helpers
+// ---------------------------------------------------------------------
+
+/// Generate the Householder reflector annihilating `z[k+2.., k]`:
+/// `H = I − τ v vᵀ` with `v` stored in `vs[k+1.., k]` (`v[0] = 1`),
+/// `H x = β e₁`. Returns `(β, τ)`; `τ = 0` means the column is already
+/// reduced. Norms are computed with max-abs scaling so spectra spanning
+/// 1e±150 neither overflow nor underflow.
+fn make_householder(z: &Mat, vs: &mut Mat, k: usize) -> (f64, f64) {
+    let n = z.rows;
+    let alpha = z.at(k + 1, k);
+    let mut scale = 0.0f64;
+    for r in (k + 2)..n {
+        let v = z.at(r, k).abs();
+        if v > scale {
+            scale = v;
+        }
+    }
+    if scale == 0.0 {
+        // tail already zero: H = I
+        vs.set(k + 1, k, 1.0);
+        return (alpha, 0.0);
+    }
+    let mut ssq = 0.0f64;
+    for r in (k + 2)..n {
+        let v = z.at(r, k) / scale;
+        ssq += v * v;
+    }
+    let xnorm = scale * ssq.sqrt();
+    let norm = alpha.hypot(xnorm);
+    let beta = if alpha >= 0.0 { -norm } else { norm };
+    let tau = (beta - alpha) / beta;
+    let inv = 1.0 / (alpha - beta);
+    vs.set(k + 1, k, 1.0);
+    for r in (k + 2)..n {
+        vs.set(r, k, z.at(r, k) * inv);
+    }
+    (beta, tau)
+}
+
+/// Compute panel column `j` of `W` (dlatrd):
+/// `w = τ(Z₂₂ v − V(Wᵀv) − W(Vᵀv))`, then `w += −½τ(wᵀv)·v`, stored in
+/// `w[k+1.., j]`. The symmetric matvec `Z₂₂ v` is the panel's dominant
+/// cost and runs through the pool-parallel GEMM.
+fn compute_w_column(z: &Mat, vs: &Mat, w: &mut Mat, k0: usize, j: usize, k: usize, tau: f64) {
+    if tau == 0.0 {
+        return; // H = I contributes nothing; the column stays zero
+    }
+    let n = z.rows;
+    let m = n - k - 1;
+    let mut p = vec![0.0f64; m];
+    // p = z[k+1.., k+1..] · vs[k+1.., k]  (full symmetric block: the
+    // trailing block is untouched since panel start, so both triangles
+    // are valid)
+    gemm::gemm_strided(
+        m,
+        1,
+        m,
+        &z.data[(k + 1) * n + (k + 1)..],
+        n,
+        1,
+        &vs.data[(k + 1) * n + k..],
+        n,
+        1,
+        &mut p,
+    );
+    if j > 0 {
+        // corrections for the panel's earlier (not yet applied) updates
+        let mut cw = vec![0.0f64; j];
+        let mut cv = vec![0.0f64; j];
+        for t in 0..j {
+            let (mut aw, mut av) = (0.0f64, 0.0f64);
+            for r in (k + 1)..n {
+                let vr = vs.at(r, k);
+                aw += w.at(r, t) * vr;
+                av += vs.at(r, k0 + t) * vr;
+            }
+            cw[t] = aw;
+            cv[t] = av;
+        }
+        for r in (k + 1)..n {
+            let mut acc = 0.0;
+            for t in 0..j {
+                acc += vs.at(r, k0 + t) * cw[t] + w.at(r, t) * cv[t];
+            }
+            p[r - k - 1] -= acc;
+        }
+    }
+    let mut dot = 0.0;
+    for (r, pv) in p.iter_mut().enumerate() {
+        *pv *= tau;
+        dot += *pv * vs.at(k + 1 + r, k);
+    }
+    let alpha = -0.5 * tau * dot;
+    for (r, pv) in p.iter().enumerate() {
+        w.set(k + 1 + r, j, *pv + alpha * vs.at(k + 1 + r, k));
+    }
+}
+
+/// Rank-2b trailing update after a panel:
+/// `z[kend.., kend..] −= V₂W₂ᵀ + W₂V₂ᵀ`, as two strided-output GEMMs
+/// writing straight into `z` (no staging copy of the trailing block).
+fn trailing_update(z: &mut Mat, vs: &Mat, w: &Mat, k0: usize, bp: usize, kend: usize) {
+    let n = z.rows;
+    let m = n - kend;
+    if m == 0 {
+        return;
+    }
+    // negate W's trailing rows once so both products accumulate with +=
+    let mut wn = Mat::zeros(m, bp);
+    for r in 0..m {
+        for t in 0..bp {
+            wn.set(r, t, -w.at(kend + r, t));
+        }
+    }
+    // z += V₂ · (−W₂)ᵀ
+    gemm::gemm_strided_into(
+        m,
+        m,
+        bp,
+        &vs.data[kend * n + k0..],
+        n,
+        1,
+        &wn.data,
+        1,
+        bp,
+        &mut z.data[kend * n + kend..],
+        n,
+    );
+    // z += (−W₂) · V₂ᵀ
+    gemm::gemm_strided_into(
+        m,
+        m,
+        bp,
+        &wn.data,
+        bp,
+        1,
+        &vs.data[kend * n + k0..],
+        1,
+        n,
+        &mut z.data[kend * n + kend..],
+        n,
+    );
+}
+
+/// Form `Q = H₀ H₁ … H_{n−3}` panel-by-panel in compact-WY form:
+/// `Q ← Q (I − V_p T_p V_pᵀ)` — two big GEMMs per panel. `V_p`'s rows
+/// `0..=k0` are structurally zero, so both GEMMs restrict to Q's
+/// columns `k0+1..n` (the others are provably unchanged), saving about
+/// half the accumulation flops across the panel sweep.
+fn accumulate_q(vs: &Mat, taus: &[f64], n: usize) -> Mat {
+    let mut q = Mat::eye(n);
+    if n <= 2 {
+        return q;
+    }
+    let mut k0 = 0;
+    while k0 < n - 2 {
+        let bp = NB.min(n - 2 - k0);
+        let t = build_t(vs, taus, k0, bp, n);
+        // the active part of the panel: rows k0+1..n of V_p
+        let vp = vs.block(k0 + 1, n, k0, k0 + bp); // (n−k0−1) × bp
+        let ma = n - k0 - 1;
+        // y = Q[:, k0+1..] · vp  (n × bp)
+        let mut y = Mat::zeros(n, bp);
+        gemm::gemm_strided(n, bp, ma, &q.data[k0 + 1..], n, 1, &vp.data, bp, 1, &mut y.data);
+        let y = y.matmul(&t).scale(-1.0);
+        // Q[:, k0+1..] += y · vpᵀ
+        gemm::gemm_strided_into(
+            n,
+            ma,
+            bp,
+            &y.data,
+            bp,
+            1,
+            &vp.data,
+            1,
+            bp,
+            &mut q.data[k0 + 1..],
+            n,
+        );
+        k0 += bp;
+    }
+    q
+}
+
+/// The triangular factor of the compact-WY representation (LAPACK
+/// `larft`, forward/columnwise): `H_{k0} … H_{k0+bp−1} = I − V T Vᵀ`
+/// with upper-triangular `T`, `T[j,j] = τ_j` and
+/// `T[0..j, j] = −τ_j · T[0..j, 0..j] · (Vᵀ v_j)`.
+fn build_t(vs: &Mat, taus: &[f64], k0: usize, bp: usize, n: usize) -> Mat {
+    let mut t = Mat::zeros(bp, bp);
+    for j in 0..bp {
+        let k = k0 + j;
+        let tj = taus[k];
+        if tj == 0.0 {
+            continue; // H_j = I: its T column is zero
+        }
+        if j > 0 {
+            let mut h = vec![0.0f64; j];
+            for (tc, hv) in h.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                // v_j is supported on rows k+1..n, a subset of v_tc's
+                // support, so this range covers the whole product
+                for r in (k + 1)..n {
+                    acc += vs.at(r, k0 + tc) * vs.at(r, k);
+                }
+                *hv = acc;
+            }
+            for row in 0..j {
+                let mut acc = 0.0;
+                for cc in row..j {
+                    acc += t.at(row, cc) * h[cc];
+                }
+                t.set(row, j, -tj * acc);
+            }
+        }
+        t.set(j, j, tj);
+    }
+    t
+}
+
+/// Rotate columns (p, q) of `m` by the (c, s) plane rotation across all
+/// rows, rows split across the pool for very large matrices.
+fn rotate_cols(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    let rows = m.rows;
+    let cols = m.cols;
+    let ptr = SendPtr(m.data.as_mut_ptr());
+    par::par_ranges(rows, ROT_MIN_CHUNK, |lo, hi| {
+        for k in lo..hi {
+            // SAFETY: disjoint row ranges from par_ranges.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(k * cols), cols) };
+            let mkp = row[p];
+            let mkq = row[q];
+            row[p] = c * mkp - s * mkq;
+            row[q] = s * mkp + c * mkq;
+        }
+    });
+}
+
+/// Rotate rows (p, q) of `m`; workers touch disjoint column ranges of
+/// the two shared rows.
+fn rotate_rows(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    let cols = m.cols;
+    let ptr = SendPtr(m.data.as_mut_ptr());
+    par::par_ranges(cols, ROT_MIN_CHUNK, |lo, hi| {
+        for k in lo..hi {
+            // SAFETY: chunks cover disjoint columns k of rows p and q.
+            unsafe {
+                let ip = ptr.0.add(p * cols + k);
+                let iq = ptr.0.add(q * cols + k);
+                let mpk = *ip;
+                let mqk = *iq;
+                *ip = c * mpk - s * mqk;
+                *iq = s * mpk + c * mqk;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -372,6 +874,51 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_jacobi_and_ql() {
+        let mut rng = Rng::new(91);
+        // sizes straddle panel boundaries (NB = 32): below, ragged,
+        // exact multiples, multi-panel
+        for n in [1usize, 2, 3, 5, 17, 25, 31, 32, 33, 40, 64, 65, 73, 96] {
+            let a = random_sym(n, &mut rng);
+            let bl = SymEig::new_blocked(&a);
+            let ql = SymEig::new_ql(&a);
+            let ja = SymEig::new_jacobi(&a);
+            let scale = 1.0 + a.max_abs();
+            for i in 0..n {
+                assert!(
+                    (bl.w[i] - ja.w[i]).abs() < 1e-9 * scale,
+                    "n={n} eigenvalue {i}: blocked={} jacobi={}",
+                    bl.w[i],
+                    ja.w[i]
+                );
+                assert!((bl.w[i] - ql.w[i]).abs() < 1e-9 * scale, "n={n} vs ql {i}");
+            }
+            assert!(bl.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} rec");
+            assert!(bl.v.matmul_tn(&bl.v).sub(&Mat::eye(n)).max_abs() < 1e-9, "n={n} orth");
+        }
+    }
+
+    #[test]
+    fn blocked_eigenpairs_satisfy_definition() {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(500 + seed);
+            let n = 25 + rng.below(60);
+            let a = random_sym(n, &mut rng);
+            let e = SymEig::new_blocked(&a);
+            for i in [0, n / 2, n - 1] {
+                let vi: Vec<f64> = (0..n).map(|r| e.v.at(r, i)).collect();
+                let av = a.matvec(&vi);
+                for r in 0..n {
+                    assert!(
+                        (av[r] - e.w[i] * vi[r]).abs() < 1e-8 * (1.0 + a.max_abs()),
+                        "seed={seed} n={n} pair {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn ql_handles_degenerate_spectra() {
         // repeated eigenvalues and zero rows
         let mut a = Mat::eye(10).scale(3.0);
@@ -385,6 +932,23 @@ mod tests {
         let r1 = v.matmul_nt(&v);
         let e = SymEig::new_ql(&r1);
         assert!(e.reconstruct().sub(&r1).max_abs() < 1e-8 * r1.max_abs());
+    }
+
+    #[test]
+    fn blocked_handles_degenerate_spectra() {
+        // already-diagonal input: every reflector is trivial (τ = 0)
+        let mut a = Mat::eye(40).scale(3.0);
+        a.set(39, 39, 0.0);
+        let e = SymEig::new_blocked(&a);
+        assert!((e.w[0] - 0.0).abs() < 1e-12);
+        assert!((e.w[39] - 3.0).abs() < 1e-12);
+        assert!(e.reconstruct().sub(&a).max_abs() < 1e-10);
+        // rank-1, multi-panel size
+        let v = Mat::from_fn(70, 1, |r, _| (r % 9) as f64 - 4.0);
+        let r1 = v.matmul_nt(&v);
+        let e = SymEig::new_blocked(&r1);
+        assert!(e.reconstruct().sub(&r1).max_abs() < 1e-8 * r1.max_abs());
+        assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(70)).max_abs() < 1e-9);
     }
 
     #[test]
@@ -406,5 +970,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn exhausted_ql_falls_back_to_jacobi() {
+        let mut rng = Rng::new(92);
+        let a = random_sym(30, &mut rng);
+        let scale = 1.0 + a.max_abs();
+        let before = tql2_fallback_count();
+        // cap 0 deterministically exhausts the first QL step
+        let e = SymEig::new_ql_with_iter_cap(&a, 0);
+        assert!(tql2_fallback_count() >= before + 1, "fallback not counted");
+        assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "ql fallback rec");
+        assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(30)).max_abs() < 1e-9);
+        let e = SymEig::new_blocked_with_iter_cap(&a, 0);
+        assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "blocked fallback rec");
+        assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(30)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_input_is_rejected() {
+        let mut a = Mat::eye(30);
+        a.set(1, 2, f64::NAN);
+        a.set(2, 1, f64::NAN);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| SymEig::new(&a)));
+        assert!(r.is_err(), "NaN input must be rejected by SymEig::new");
     }
 }

@@ -57,26 +57,46 @@ pub fn gemm_strided(
     c: &mut [f64],
 ) {
     assert_eq!(c.len(), m * n, "gemm: C buffer is {} not {m}x{n}", c.len());
+    gemm_strided_into(m, n, k, a, ars, acs, b, brs, bcs, c, n);
+}
+
+/// Like [`gemm_strided`], but `C` rows live at stride `ldc ≥ n`: the
+/// output may be a sub-block of a larger row-major matrix. The blocked
+/// eigensolver's rank-2b trailing updates accumulate straight into the
+/// trailing submatrix this way, without staging copies. Row entries
+/// past `n` (up to `ldc`) are left untouched.
+pub fn gemm_strided_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    assert!(ldc >= n, "gemm: ldc {ldc} < n {n}");
+    assert!(c.len() >= (m - 1) * ldc + n, "gemm: C too small for {m}x{n} at stride {ldc}");
     // Operand extents implied by the strides must fit the slices.
     assert!((m - 1) * ars + (k - 1) * acs < a.len(), "gemm: A too small");
     assert!((k - 1) * brs + (n - 1) * bcs < b.len(), "gemm: B too small");
 
     let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
     if flops <= NAIVE_MAX_FLOPS || m < MR || n < NR {
-        gemm_rowpar(m, n, k, a, ars, acs, b, brs, bcs, c);
+        gemm_rowpar(m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
         return;
     }
-    gemm_blocked(m, n, k, a, ars, acs, b, brs, bcs, c);
+    gemm_blocked(m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
 }
 
-/// Shared mutable output pointer; workers write disjoint row ranges.
-#[derive(Clone, Copy)]
-struct OutPtr(*mut f64);
-unsafe impl Send for OutPtr {}
-unsafe impl Sync for OutPtr {}
+/// Shared mutable output pointer (workers write disjoint row ranges).
+type OutPtr = crate::par::SendPtr<f64>;
 
 // ---------------------------------------------------------------------
 // direct kernel (small / narrow shapes)
@@ -96,6 +116,7 @@ fn gemm_rowpar(
     brs: usize,
     bcs: usize,
     c: &mut [f64],
+    ldc: usize,
 ) {
     let out = OutPtr(c.as_mut_ptr());
     let chunk = par::chunk_for_flops(m, 2 * n * k);
@@ -103,7 +124,7 @@ fn gemm_rowpar(
         let o = out;
         for i in lo..hi {
             // SAFETY: par_ranges hands out disjoint row ranges.
-            let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * n), n) };
+            let crow = unsafe { std::slice::from_raw_parts_mut(o.0.add(i * ldc), n) };
             if bcs == 1 {
                 for p in 0..k {
                     let aip = a[i * ars + p * acs];
@@ -144,6 +165,7 @@ fn gemm_blocked(
     brs: usize,
     bcs: usize,
     c: &mut [f64],
+    ldc: usize,
 ) {
     let out = OutPtr(c.as_mut_ptr());
     let kc_max = KC.min(k);
@@ -177,7 +199,7 @@ fn gemm_blocked(
                     let row0 = p0 * MR;
                     let mc = (pend * MR).min(m) - row0;
                     pack_a(&mut apack, a, ars, acs, row0, mc, pc, kc);
-                    macro_kernel(o, n, row0, jc, mc, nc, kc, &apack, bref);
+                    macro_kernel(o, ldc, row0, jc, mc, nc, kc, &apack, bref);
                     p0 = pend;
                 }
             });
@@ -405,6 +427,56 @@ mod tests {
         let mut c = vec![10.0, 20.0, 30.0, 40.0];
         gemm_strided(2, 2, 2, &a, 2, 1, &b, 2, 1, &mut c);
         assert_eq!(c, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn strided_output_writes_subblock_only() {
+        // 5x4 product into the middle of a 9x8 row-major matrix: the
+        // target block accumulates, everything else stays untouched.
+        let mut rng = Rng::new(4);
+        let (m, n, k, big_rows, ldc) = (5usize, 4usize, 6usize, 9usize, 8usize);
+        let (r0, c0) = (2usize, 3usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let want = reference(m, n, k, &a, k, 1, &b, n, 1);
+        let mut big = vec![7.0f64; big_rows * ldc];
+        let off = r0 * ldc + c0;
+        gemm_strided_into(m, n, k, &a, k, 1, &b, n, 1, &mut big[off..], ldc);
+        for r in 0..big_rows {
+            for cc in 0..ldc {
+                let inside = (r0..r0 + m).contains(&r) && (c0..c0 + n).contains(&cc);
+                let got = big[r * ldc + cc];
+                if inside {
+                    let v = want[(r - r0) * n + (cc - c0)] + 7.0;
+                    assert!((got - v).abs() < 1e-11, "({r},{cc})");
+                } else {
+                    assert_eq!(got, 7.0, "({r},{cc}) clobbered outside the block");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_output_blocked_path_matches_reference() {
+        // large enough for the packed path; ldc > n exercises the
+        // macro-kernel's generalized write-back stride.
+        let mut rng = Rng::new(5);
+        let (m, n, k, ldc) = (140usize, 72usize, 64usize, 90usize);
+        assert!(2 * m * n * k > NAIVE_MAX_FLOPS && m >= MR && n >= NR);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let want = reference(m, n, k, &a, k, 1, &b, n, 1);
+        let mut big = vec![0.0f64; m * ldc];
+        gemm_strided_into(m, n, k, &a, k, 1, &b, n, 1, &mut big, ldc);
+        for r in 0..m {
+            for cc in 0..n {
+                let err = (big[r * ldc + cc] - want[r * n + cc]).abs();
+                assert!(err < 1e-10, "({r},{cc}) err={err}");
+            }
+            for cc in n..ldc {
+                assert_eq!(big[r * ldc + cc], 0.0, "({r},{cc}) padding clobbered");
+            }
+        }
     }
 
     #[test]

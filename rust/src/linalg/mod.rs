@@ -249,6 +249,14 @@ impl Mat {
         self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
     }
 
+    /// True when every entry is finite (no NaN / ±Inf). The eigensolver
+    /// and the per-layer inverse builders use this to reject poisoned
+    /// statistics with a descriptive message instead of panicking deep
+    /// inside a sort.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
     pub fn trace(&self) -> f64 {
         assert!(self.is_square());
         (0..self.rows).map(|i| self.data[i * self.cols + i]).sum()

@@ -8,7 +8,9 @@
 //! caller), so the many mid-sized GEMMs in a K-FAC step do not pay a
 //! thread spawn each. While a caller waits for its chunks it *helps* by
 //! draining the shared queue, which makes nested parallel calls (e.g. a
-//! GEMM inside a per-layer `par_map_send`) deadlock-free.
+//! GEMM inside a per-layer `par_map_send`) deadlock-free; when the queue
+//! is empty it parks on the dispatch latch's condvar (bounded wait)
+//! rather than busy-spinning a core until the last worker finishes.
 //!
 //! Set `KFAC_POOL=0` to fall back to the original per-call
 //! `std::thread::scope` path, and `KFAC_THREADS=1` to run everything
@@ -17,6 +19,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Number of worker threads to use (cores − 1, at least 1), overridable
 /// with the `KFAC_THREADS` environment variable.
@@ -85,23 +88,50 @@ impl Pool {
     }
 }
 
-/// Completion latch for one `par_ranges` dispatch.
+/// Completion latch for one `par_ranges` dispatch. The dispatching
+/// caller parks on `opened` when the shared queue is empty (instead of
+/// burning a core on `yield_now` for the tail of the dispatch); the
+/// worker that finishes the last chunk notifies.
 struct Latch {
     remaining: AtomicUsize,
     panicked: AtomicBool,
+    lock: Mutex<()>,
+    opened: Condvar,
 }
 
 impl Latch {
     fn new(n: usize) -> Latch {
-        Latch { remaining: AtomicUsize::new(n), panicked: AtomicBool::new(false) }
+        Latch {
+            remaining: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            opened: Condvar::new(),
+        }
     }
 
     fn count_down(&self) {
-        self.remaining.fetch_sub(1, Ordering::AcqRel);
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last chunk: wake the (possibly parked) caller. Taking the
+            // mutex orders this notify after the caller's done-check,
+            // so the wakeup cannot be missed.
+            let _guard = self.lock.lock().unwrap();
+            self.opened.notify_all();
+        }
     }
 
     fn done(&self) -> bool {
         self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    /// Park until `count_down` opens the latch, with a bounded wait so
+    /// work enqueued *while parked* (a nested dispatch from another
+    /// thread) is still picked up by the caller's help-first drain —
+    /// deadlock freedom does not depend on any notification.
+    fn park(&self) {
+        let guard = self.lock.lock().unwrap();
+        if !self.done() {
+            let _wait = self.opened.wait_timeout(guard, Duration::from_micros(500)).unwrap();
+        }
     }
 }
 
@@ -209,11 +239,14 @@ where
     let caller_result =
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(lo0, hi0)));
     // Help-first wait: execute whatever is queued (ours or an unrelated
-    // dispatch) so nested parallel calls cannot deadlock the pool.
+    // dispatch) so nested parallel calls cannot deadlock the pool. With
+    // the queue empty the caller parks on the latch condvar until the
+    // last chunk counts down, instead of spinning on yield_now for the
+    // whole tail of the dispatch.
     while !latch.done() {
         match pool.try_pop() {
             Some(job) => job(),
-            None => std::thread::yield_now(),
+            None => latch.park(),
         }
     }
     if let Err(payload) = caller_result {
@@ -280,7 +313,11 @@ pub fn par_map_send<T: Send>(
     out.into_iter().map(|o| o.expect("par_map_send: slot not filled")).collect()
 }
 
-struct SendPtr<T>(*mut T);
+/// Shared mutable pointer handed to `par_ranges` workers. SAFETY
+/// contract for every use in this crate: workers write strictly
+/// disjoint index ranges of the pointee, and the owning buffer outlives
+/// the dispatch (par_ranges does not return before all chunks finish).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         SendPtr(self.0)
@@ -343,6 +380,45 @@ mod tests {
             let want: Vec<u64> = (0..97u64).map(|i| i + round).collect();
             assert_eq!(got, want, "round {round}");
         }
+    }
+
+    #[test]
+    fn parked_wait_wakes_on_completion() {
+        // The caller's own chunk finishes instantly while worker chunks
+        // sleep 10ms, forcing the empty-queue park each round. Whether
+        // woken by count_down's notify or by the bounded 500µs wait,
+        // five rounds must finish in ~50ms of sleep plus small
+        // scheduling noise — a generous 2s bound still catches a park
+        // that fails to wake (which would hang, not merely lag).
+        let n = num_threads().max(2);
+        let t0 = std::time::Instant::now();
+        for _ in 0..5 {
+            par_ranges(n, 1, |lo, _hi| {
+                if lo != 0 {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            });
+        }
+        assert!(t0.elapsed() < Duration::from_secs(2), "parked dispatch stalled");
+    }
+
+    #[test]
+    fn nested_dispatch_under_parked_waiters_completes() {
+        // Outer chunks park while inner dispatches run; the help-first
+        // drain plus bounded park must keep everything live.
+        let got = par_map(4, 1, |i| {
+            let inner = par_map(200, 8, move |j| {
+                if j == 0 {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                (i * 200 + j) as u64
+            });
+            inner.iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..4u64)
+            .map(|i| (0..200u64).map(|j| i * 200 + j).sum())
+            .collect();
+        assert_eq!(got, want);
     }
 
     #[test]

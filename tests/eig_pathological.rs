@@ -1,0 +1,237 @@
+//! Pathological-spectrum battery for the three symmetric-eigensolver
+//! paths (blocked Householder+QL, unblocked tred2/tql2, cyclic Jacobi):
+//!
+//! - Wilkinson-type matrices (nearly-degenerate eigenvalue pairs);
+//! - tightly clustered eigenvalues (1e-13-wide clusters);
+//! - spectra spanning 1e±150 (overflow/underflow safety of the scaled
+//!   Householder norms and the QL shifts);
+//! - the n = 23–26 dispatch boundary;
+//! - the tql2 iteration-exhaustion → Jacobi fallback regression, and
+//!   the non-finite-input guard (the two mid-training abort bugs).
+//!
+//! Every case asserts reconstruction `V diag(w) Vᵀ = A`, orthogonality
+//! `VᵀV = I`, an ascending spectrum, and cross-path eigenvalue
+//! agreement at 1e-9 (relative to `max|A|`).
+
+use kfac::linalg::{Mat, SymEig};
+use kfac::rng::Rng;
+
+/// Random orthogonal matrix (eigenvectors of a random symmetric one).
+fn orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    SymEig::new_jacobi(&Mat::randn(n, n, 1.0, rng).symmetrize()).v
+}
+
+/// `Q diag(w) Qᵀ`, exactly symmetrized.
+fn from_spectrum(q: &Mat, w: &[f64]) -> Mat {
+    let n = q.rows;
+    let qd = Mat::from_fn(n, n, |r, c| q.at(r, c) * w[c]);
+    qd.matmul_nt(q).symmetrize()
+}
+
+/// All three paths on `a`: reconstruction, orthogonality, sorted
+/// spectra, cross-path agreement at `tol` (relative to `max|A|`).
+fn check_all_paths(a: &Mat, tol: f64, label: &str) {
+    let n = a.rows;
+    let scale = 1.0 + a.max_abs();
+    let bl = SymEig::new_blocked(a);
+    let ql = SymEig::new_ql(a);
+    let ja = SymEig::new_jacobi(a);
+    for (name, e) in [("blocked", &bl), ("ql", &ql), ("jacobi", &ja)] {
+        let rec = e.reconstruct().sub(a).max_abs();
+        assert!(rec < tol * scale, "{label}/{name}: reconstruction err {rec:e}");
+        let orth = e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs();
+        assert!(orth < tol, "{label}/{name}: orthogonality err {orth:e}");
+        for i in 1..n {
+            assert!(e.w[i] >= e.w[i - 1], "{label}/{name}: spectrum not sorted at {i}");
+        }
+        assert!(e.w.iter().all(|v| v.is_finite()), "{label}/{name}: non-finite eigenvalue");
+    }
+    for i in 0..n {
+        assert!(
+            (bl.w[i] - ja.w[i]).abs() < tol * scale,
+            "{label}: blocked vs jacobi eigenvalue {i}: {} vs {}",
+            bl.w[i],
+            ja.w[i]
+        );
+        assert!(
+            (ql.w[i] - ja.w[i]).abs() < tol * scale,
+            "{label}: ql vs jacobi eigenvalue {i}: {} vs {}",
+            ql.w[i],
+            ja.w[i]
+        );
+    }
+}
+
+#[test]
+fn wilkinson_w21_plus() {
+    // W21+: diag |i − 10|, unit subdiagonals — the classic matrix whose
+    // top eigenvalue pairs agree to ~1e-14 but are distinct.
+    let n = 21;
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a.set(i, i, (i as f64 - 10.0).abs());
+    }
+    for i in 0..n - 1 {
+        a.set(i, i + 1, 1.0);
+        a.set(i + 1, i, 1.0);
+    }
+    check_all_paths(&a, 1e-9, "wilkinson21");
+    // the known largest eigenvalue of W21+
+    let e = SymEig::new(&a);
+    assert!((e.w[n - 1] - 10.746194).abs() < 1e-5, "λmax = {}", e.w[n - 1]);
+}
+
+#[test]
+fn wilkinson_like_65_exercises_blocked_panels() {
+    // A 65-wide Wilkinson-type matrix spans three NB=32 panels with a
+    // ragged tail, with many nearly-degenerate pairs.
+    let n = 65;
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a.set(i, i, (i as f64 - 32.0).abs());
+    }
+    for i in 0..n - 1 {
+        a.set(i, i + 1, 1.0);
+        a.set(i + 1, i, 1.0);
+    }
+    check_all_paths(&a, 1e-9, "wilkinson65");
+}
+
+#[test]
+fn tightly_clustered_eigenvalues() {
+    for n in [24usize, 48] {
+        let mut rng = Rng::new(42 + n as u64);
+        let q = orthogonal(n, &mut rng);
+        // clusters of four eigenvalues 1e-13 apart
+        let mut w = Vec::with_capacity(n);
+        for i in 0..n {
+            w.push((i / 4) as f64 + (i % 4) as f64 * 1e-13);
+        }
+        let a = from_spectrum(&q, &w);
+        check_all_paths(&a, 1e-9, "clustered");
+        // recovered spectrum matches the construction (w is ascending)
+        let e = SymEig::new(&a);
+        let scale = 1.0 + a.max_abs();
+        for i in 0..n {
+            assert!(
+                (e.w[i] - w[i]).abs() < 1e-9 * scale,
+                "n={n} eigenvalue {i}: {} vs {}",
+                e.w[i],
+                w[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn spectrum_spanning_1e_pm150() {
+    for n in [16usize, 40] {
+        let mut rng = Rng::new(7 + n as u64);
+        let q = orthogonal(n, &mut rng);
+        // log-spaced eigenvalues from 1e-150 to 1e+150
+        let w: Vec<f64> = (0..n)
+            .map(|i| 10f64.powf(-150.0 + 300.0 * i as f64 / (n - 1) as f64))
+            .collect();
+        let a = from_spectrum(&q, &w);
+        check_all_paths(&a, 1e-9, "wide-spectrum");
+        // the dominant end of the spectrum is recovered to full
+        // relative precision (the tiny end is below eps·‖A‖ and only
+        // recoverable in absolute terms)
+        let e = SymEig::new(&a);
+        assert!(((e.w[n - 1] - 1e150) / 1e150).abs() < 1e-9, "λmax = {:e}", e.w[n - 1]);
+        // per-eigenvalue cross-path agreement: check_all_paths' blanket
+        // tol·max|A| is vacuous at this scale, so compare the large end
+        // relatively and floor the rest at the attainable absolute
+        // accuracy (~n·eps·‖A‖, with two orders of margin)
+        let bl = SymEig::new_blocked(&a);
+        let ja = SymEig::new_jacobi(&a);
+        let floor = 3e-13 * a.max_abs();
+        for i in 0..n {
+            let tol_i = (1e-9 * ja.w[i].abs()).max(floor);
+            assert!(
+                (bl.w[i] - ja.w[i]).abs() < tol_i,
+                "n={n} eigenvalue {i}: blocked={:e} jacobi={:e}",
+                bl.w[i],
+                ja.w[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatch_boundary_23_to_26_all_paths_agree() {
+    for n in [23usize, 24, 25, 26] {
+        for seed in 0..2u64 {
+            let mut rng = Rng::new(10_000 * n as u64 + seed);
+            let a = Mat::randn(n, n, 1.0, &mut rng).symmetrize();
+            check_all_paths(&a, 1e-9, "boundary");
+            // the dispatching front door reconstructs too
+            let e = SymEig::new(&a);
+            let scale = 1.0 + a.max_abs();
+            assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} dispatch");
+        }
+    }
+}
+
+#[test]
+fn ql_iteration_exhaustion_falls_back_to_valid_jacobi() {
+    // Regression for the `tql2: too many iterations` mid-training
+    // abort: exhaustion (forced deterministically via the capped test
+    // hook) must yield the Jacobi decomposition of the original matrix,
+    // not a panic.
+    let mut rng = Rng::new(99);
+    for n in [12usize, 40] {
+        let a = Mat::randn(n, n, 1.0, &mut rng).symmetrize();
+        let scale = 1.0 + a.max_abs();
+        let before = kfac::linalg::eig::tql2_fallback_count();
+        let ql_fallback = SymEig::new_ql_with_iter_cap(&a, 0);
+        let blocked_fallback = SymEig::new_blocked_with_iter_cap(&a, 0);
+        for e in [ql_fallback, blocked_fallback] {
+            assert!(
+                e.reconstruct().sub(&a).max_abs() < 1e-9 * scale,
+                "n={n}: fallback reconstruction"
+            );
+            assert!(
+                e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs() < 1e-9,
+                "n={n}: fallback orthogonality"
+            );
+            // agrees with a direct Jacobi run
+            let ja = SymEig::new_jacobi(&a);
+            for i in 0..n {
+                assert!((e.w[i] - ja.w[i]).abs() < 1e-12 * scale, "n={n} eigenvalue {i}");
+            }
+        }
+        assert!(kfac::linalg::eig::tql2_fallback_count() >= before + 2, "not counted");
+    }
+}
+
+#[test]
+fn non_finite_input_panics_with_descriptive_message() {
+    // Regression for the NaN-poisoned `partial_cmp(..).unwrap()` sort
+    // panic: the guard must fire first, with a message that says why.
+    let mut a = Mat::eye(30);
+    a.set(3, 4, f64::NAN);
+    a.set(4, 3, f64::NAN);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| SymEig::new(&a)));
+    let payload = r.expect_err("NaN input must panic");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("non-finite"), "panic message not descriptive: {msg}");
+}
+
+#[test]
+fn nan_poisoned_direct_paths_terminate_without_sort_panic() {
+    // Calling the raw paths (bypassing the guard) on poisoned input
+    // must degrade to garbage output, not a partial_cmp unwrap panic or
+    // an infinite loop.
+    let mut a = Mat::eye(10);
+    a.set(2, 7, f64::NAN);
+    a.set(7, 2, f64::NAN);
+    let ja = SymEig::new_jacobi(&a);
+    assert_eq!(ja.w.len(), 10);
+    let ql = SymEig::new_ql(&a); // exhausts and falls back internally
+    assert_eq!(ql.w.len(), 10);
+}

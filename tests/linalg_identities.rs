@@ -2,9 +2,11 @@
 //! beyond GEMM, on seeded SPD inputs of sizes 1..64:
 //!
 //! - `Cholesky`: `L Lᵀ = A`, and `A x = b` solves round-trip;
-//! - `SymEig`: `Q Λ Qᵀ = A` and `Qᵀ Q = I`, plus seeded boundary tests
-//!   at sizes 23–26 straddling the `n > 24` QL/Jacobi dispatch switch
-//!   (including degenerate spectra);
+//! - `SymEig`: `Q Λ Qᵀ = A` and `Qᵀ Q = I` (the blocked production
+//!   path cross-checked against the scalar QL and Jacobi references at
+//!   1e-9 on every size), plus seeded boundary tests at sizes 23–26
+//!   straddling the `n > 24` dispatch switch (including degenerate
+//!   spectra);
 //! - `KronPairInverse`: `(A ⊗ B ± C ⊗ D)` applied to the structured
 //!   inverse's output round-trips the input.
 
@@ -82,13 +84,15 @@ fn symeig_reconstructs_and_is_orthogonal() {
 
 #[test]
 fn symeig_ql_and_jacobi_agree_across_dispatch_boundary() {
-    // `SymEig::new` switches from cyclic Jacobi to tred2/tql2 at
-    // n > 24; both paths must agree on the spectrum and reconstruct
-    // `Q Λ Qᵀ = A` at the sizes straddling the switch.
+    // `SymEig::new` switches from cyclic Jacobi to the blocked
+    // tridiagonalizer at n > 24; all three paths must agree on the
+    // spectrum and reconstruct `Q Λ Qᵀ = A` at the sizes straddling
+    // the switch.
     for n in [23usize, 24, 25, 26] {
         for seed in 0..3u64 {
             let mut mrng = Rng::new(1_000 * n as u64 + seed);
             let a = Mat::randn(n, n, 1.0, &mut mrng).symmetrize();
+            let bl = SymEig::new_blocked(&a);
             let ql = SymEig::new_ql(&a);
             let ja = SymEig::new_jacobi(&a);
             let scale = 1.0 + a.max_abs();
@@ -99,8 +103,14 @@ fn symeig_ql_and_jacobi_agree_across_dispatch_boundary() {
                     ql.w[i],
                     ja.w[i]
                 );
+                assert!(
+                    (bl.w[i] - ja.w[i]).abs() < 1e-9 * scale,
+                    "n={n} seed={seed} eigenvalue {i}: blocked={} jacobi={}",
+                    bl.w[i],
+                    ja.w[i]
+                );
             }
-            for e in [&ql, &ja] {
+            for e in [&bl, &ql, &ja] {
                 assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} seed={seed}");
                 assert!(e.v.matmul_tn(&e.v).sub(&Mat::eye(n)).max_abs() < 1e-9, "n={n}");
             }
@@ -109,6 +119,37 @@ fn symeig_ql_and_jacobi_agree_across_dispatch_boundary() {
             let e = SymEig::new(&a);
             assert!(e.reconstruct().sub(&a).max_abs() < 1e-9 * scale, "n={n} dispatch");
         }
+    }
+}
+
+#[test]
+fn symeig_blocked_matches_references_across_sizes() {
+    // The blocked, pool-parallel path against both scalar references on
+    // the full size sweep (panel boundaries at NB = 32 included).
+    let mut rng = Rng::new(19);
+    for n in sizes(&mut rng) {
+        let a = Mat::randn(n, n, 1.0, &mut rng).symmetrize();
+        let bl = SymEig::new_blocked(&a);
+        let ql = SymEig::new_ql(&a);
+        let ja = SymEig::new_jacobi(&a);
+        let scale = 1.0 + a.max_abs();
+        for i in 0..n {
+            assert!(
+                (bl.w[i] - ql.w[i]).abs() < 1e-9 * scale,
+                "n={n} eigenvalue {i}: blocked={} ql={}",
+                bl.w[i],
+                ql.w[i]
+            );
+            assert!((bl.w[i] - ja.w[i]).abs() < 1e-9 * scale, "n={n} vs jacobi {i}");
+        }
+        assert!(
+            bl.reconstruct().sub(&a).max_abs() < 1e-9 * scale,
+            "n={n}: blocked-path reconstruction error"
+        );
+        assert!(
+            bl.v.matmul_tn(&bl.v).sub(&Mat::eye(n)).max_abs() < 1e-9,
+            "n={n}: blocked orthogonality"
+        );
     }
 }
 
