@@ -10,10 +10,15 @@
 //! `BENCH_linalg.json` (override with `KFAC_BENCH_JSON`) so CI can
 //! archive GFLOP/s baselines per commit — including per-size `SymEig`
 //! timings (n = 64/256/512, blocked vs. scalar-QL reference) so the
-//! eigensolver speedup is tracked alongside GEMM.
+//! eigensolver speedup is tracked alongside GEMM. Square matmul shapes
+//! additionally emit one entry per executable micro-kernel
+//! (`matmul_512_scalar`, `matmul_512_avx2`, …) so the JSON records the
+//! SIMD speedup itself, not just the dispatched winner; CI's
+//! `bench-gate` job compares all of this against the committed
+//! `BENCH_baseline.json` and fails on >20% median GFLOP/s regressions.
 
 use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
-use kfac::linalg::{chol::spd_inverse, KronPairInverse, Mat, SymEig};
+use kfac::linalg::{chol::spd_inverse, gemm, simd, KronPairInverse, Mat, SymEig};
 use kfac::rng::Rng;
 
 fn main() {
@@ -55,6 +60,36 @@ fn main() {
         });
         let g = r.report_throughput("GFLOP/s", flops);
         results.push((r, Some(g)));
+
+        // Per-kernel entries on the square shapes (matmul_512_scalar,
+        // matmul_512_avx2, …): every micro-kernel this host can execute
+        // runs the same NN product through the forced-kernel hook, so
+        // BENCH_linalg.json shows the SIMD speedup explicitly instead
+        // of only the dispatched winner.
+        if m == k && k == n {
+            for kern in simd::available_kernels() {
+                let r = bench(&format!("matmul_{n}_{}", kern.name), budget, || {
+                    let mut out = vec![0.0f64; m * n];
+                    gemm::gemm_strided_into_with(
+                        kern,
+                        m,
+                        n,
+                        k,
+                        &a.data,
+                        k,
+                        1,
+                        &b.data,
+                        n,
+                        1,
+                        &mut out,
+                        n,
+                    );
+                    std::hint::black_box(out);
+                });
+                let g = r.report_throughput("GFLOP/s", flops);
+                results.push((r, Some(g)));
+            }
+        }
     }
 
     // ---- matvec (the n = 1 path) ----

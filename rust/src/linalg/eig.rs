@@ -13,7 +13,10 @@
 //!   compact-WY form (`Q ← Q(I − V T Vᵀ)`, two more GEMMs). The
 //!   implicit-shift QL stage records each step's plane rotations and
 //!   applies them to the eigenvector rows in parallel over
-//!   [`par::par_ranges`].
+//!   [`par::par_ranges`]. The panel's memory-bound correction GEMVs
+//!   (`w ← A·v − W·(Vᵀv) − V·(Wᵀv)` traffic) are fused into single
+//!   row passes through the SIMD dispatch seam ([`simd::fused_tdot2`],
+//!   [`simd::fused_apply2`]).
 //! - **Unblocked QL** ([`SymEig::new_ql`]): the classic scalar
 //!   tred2/tql2 pair (EISPACK/NR layout), kept as the reference the
 //!   blocked path is property-tested against at 1e-9.
@@ -27,7 +30,7 @@
 //! loops only partition disjoint row ranges, so `KFAC_THREADS=1` and
 //! `KFAC_POOL=0` produce bit-identical decompositions.
 
-use super::{gemm, Mat};
+use super::{gemm, simd, Mat};
 use crate::par::{self, SendPtr};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
@@ -168,15 +171,23 @@ impl SymEig {
                 // (1) bring column k up to date with the panel's
                 // earlier rank-2 corrections:
                 //   z[r,k] -= Σ_t V[r,t]·W[k,t] + W[r,t]·V[k,t]
+                // applied as ONE fused pass over the rows (both rank-j
+                // corrections per row, contiguous panel-row reads)
+                // through the SIMD dispatch seam.
                 if j > 0 {
-                    for r in k..n {
-                        let mut acc = 0.0;
-                        for t in 0..j {
-                            acc += vs.at(r, k0 + t) * w.at(k, t) + w.at(r, t) * vs.at(k, k0 + t);
-                        }
-                        let zv = z.at(r, k) - acc;
-                        z.set(r, k, zv);
-                    }
+                    let wc = w.cols;
+                    simd::fused_apply2(
+                        n - k,
+                        j,
+                        &vs.data[k * n + k0..],
+                        n,
+                        &w.data[k * wc..],
+                        wc,
+                        &w.data[k * wc..k * wc + j],
+                        &vs.data[k * n + k0..k * n + k0 + j],
+                        &mut z.data[k * n + k..],
+                        n,
+                    );
                 }
                 d[k] = z.at(k, k);
                 // (2) reflector annihilating z[k+2.., k]
@@ -577,8 +588,11 @@ fn make_householder(z: &Mat, vs: &mut Mat, k: usize) -> (f64, f64) {
 
 /// Compute panel column `j` of `W` (dlatrd):
 /// `w = τ(Z₂₂ v − V(Wᵀv) − W(Vᵀv))`, then `w += −½τ(wᵀv)·v`, stored in
-/// `w[k+1.., j]`. The symmetric matvec `Z₂₂ v` is the panel's dominant
-/// cost and runs through the pool-parallel GEMM.
+/// `w[k+1.., j]`. The symmetric matvec `Z₂₂ v` runs through the
+/// pool-parallel GEMM; the memory-bound correction GEMVs run as two
+/// fused row passes over the panel (see [`simd::fused_tdot2`] /
+/// [`simd::fused_apply2`]) so the BLAS-2 half of the panel reduction
+/// traverses V and W once instead of once per panel column.
 fn compute_w_column(z: &Mat, vs: &Mat, w: &mut Mat, k0: usize, j: usize, k: usize, tau: f64) {
     if tau == 0.0 {
         return; // H = I contributes nothing; the column stays zero
@@ -602,26 +616,40 @@ fn compute_w_column(z: &Mat, vs: &Mat, w: &mut Mat, k0: usize, j: usize, k: usiz
         &mut p,
     );
     if j > 0 {
-        // corrections for the panel's earlier (not yet applied) updates
+        // corrections for the panel's earlier (not yet applied)
+        // updates, as the two fused dlatrd GEMV passes from the SIMD
+        // dispatch seam: one traversal of the panel rows computes BOTH
+        // cw = W₂ᵀv and cv = V₂ᵀv (contiguous row reads instead of one
+        // strided column sweep per panel column), and a second fused
+        // traversal applies p −= V₂·cw + W₂·cv.
         let mut cw = vec![0.0f64; j];
         let mut cv = vec![0.0f64; j];
-        for t in 0..j {
-            let (mut aw, mut av) = (0.0f64, 0.0f64);
-            for r in (k + 1)..n {
-                let vr = vs.at(r, k);
-                aw += w.at(r, t) * vr;
-                av += vs.at(r, k0 + t) * vr;
-            }
-            cw[t] = aw;
-            cv[t] = av;
-        }
-        for r in (k + 1)..n {
-            let mut acc = 0.0;
-            for t in 0..j {
-                acc += vs.at(r, k0 + t) * cw[t] + w.at(r, t) * cv[t];
-            }
-            p[r - k - 1] -= acc;
-        }
+        let rows = n - k - 1;
+        let wc = w.cols;
+        simd::fused_tdot2(
+            rows,
+            j,
+            &vs.data[(k + 1) * n + k..],
+            n,
+            &w.data[(k + 1) * wc..],
+            wc,
+            &vs.data[(k + 1) * n + k0..],
+            n,
+            &mut cw,
+            &mut cv,
+        );
+        simd::fused_apply2(
+            rows,
+            j,
+            &vs.data[(k + 1) * n + k0..],
+            n,
+            &w.data[(k + 1) * wc..],
+            wc,
+            &cw,
+            &cv,
+            &mut p,
+            1,
+        );
     }
     let mut dot = 0.0;
     for (r, pv) in p.iter_mut().enumerate() {

@@ -18,19 +18,24 @@
 //!       macro-kernel: MR×NR micro-tiles over the packed panels
 //! ```
 //!
+//! The `MR × NR` micro-tile itself lives in [`super::simd`]: an
+//! explicitly-SIMD kernel chosen once per process at runtime (AVX2+FMA
+//! 4×8, AVX-512F 8×8, or the portable scalar 4×8 — `KFAC_SIMD`
+//! overrides). MR/NR are **per-kernel** constants, so the packing layer
+//! here takes them from the kernel instead of crate globals; only the
+//! cache-blocking sizes MC/KC/NC stay shared.
+//!
 //! Packing zero-pads ragged edges to full MR/NR panels, so the
-//! micro-kernel has no edge variants and its fixed-bound inner loops
-//! unroll/vectorize; only the write-back masks the padding off. Shapes
+//! micro-kernel has no edge variants and its fixed-shape inner loops
+//! stay branch-free; only the write-back masks the padding off. Shapes
 //! too small (or too narrow) to amortize packing fall back to a
 //! row-parallel saxpy/dot kernel that preserves the old behaviour.
 
+use super::simd::{self, Kernel};
 use crate::par;
 
-/// Micro-tile rows (register-blocked).
-pub const MR: usize = 4;
-/// Micro-tile columns (two 4-wide f64 vectors per row on AVX2).
-pub const NR: usize = 8;
 /// Row-block size: one packed A block (MC×KC f64) stays L2-resident.
+/// Divisible by every kernel's MR (4 or 8).
 pub const MC: usize = 128;
 /// Depth-block size: panels of KC keep micro-kernel streams in L1/L2.
 pub const KC: usize = 256;
@@ -78,6 +83,27 @@ pub fn gemm_strided_into(
     c: &mut [f64],
     ldc: usize,
 ) {
+    gemm_strided_into_with(simd::active(), m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
+}
+
+/// [`gemm_strided_into`] with an explicit micro-kernel instead of the
+/// process-wide dispatched one. Benches use this to emit per-kernel
+/// GFLOP/s entries; tests use it to pin scalar-vs-SIMD agreement.
+#[doc(hidden)]
+pub fn gemm_strided_into_with(
+    kern: &'static Kernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
     if m == 0 || n == 0 || k == 0 {
         return;
     }
@@ -88,11 +114,38 @@ pub fn gemm_strided_into(
     assert!((k - 1) * brs + (n - 1) * bcs < b.len(), "gemm: B too small");
 
     let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
-    if flops <= NAIVE_MAX_FLOPS || m < MR || n < NR {
+    if flops <= NAIVE_MAX_FLOPS || m < kern.mr || n < kern.nr {
         gemm_rowpar(m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
         return;
     }
-    gemm_blocked(m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
+    gemm_blocked(kern, m, n, k, a, ars, acs, b, brs, bcs, c, ldc);
+}
+
+/// The packed blocked path with an explicit kernel and no small-shape
+/// fallback — every shape goes through pack + macro-kernel, so the
+/// property suites can exercise masked tile edges and K-tails on all
+/// kernels regardless of the flop cutoff. Test/bench hook only.
+#[doc(hidden)]
+pub fn gemm_blocked_with(
+    kern: &'static Kernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f64],
+) {
+    assert_eq!(c.len(), m * n, "gemm: C buffer is {} not {m}x{n}", c.len());
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    assert!((m - 1) * ars + (k - 1) * acs < a.len(), "gemm: A too small");
+    assert!((k - 1) * brs + (n - 1) * bcs < b.len(), "gemm: B too small");
+    gemm_blocked(kern, m, n, k, a, ars, acs, b, brs, bcs, c, n);
 }
 
 /// Shared mutable output pointer (workers write disjoint row ranges).
@@ -155,6 +208,7 @@ fn gemm_rowpar(
 // ---------------------------------------------------------------------
 
 fn gemm_blocked(
+    kern: &'static Kernel,
     m: usize,
     n: usize,
     k: usize,
@@ -167,10 +221,11 @@ fn gemm_blocked(
     c: &mut [f64],
     ldc: usize,
 ) {
+    let (mr, nr) = (kern.mr, kern.nr);
     let out = OutPtr(c.as_mut_ptr());
     let kc_max = KC.min(k);
     let nc_max = NC.min(n);
-    let mut bpack = vec![0.0f64; nc_max.div_ceil(NR) * NR * kc_max];
+    let mut bpack = vec![0.0f64; nc_max.div_ceil(nr) * nr * kc_max];
 
     let mut jc = 0;
     while jc < n {
@@ -180,26 +235,29 @@ fn gemm_blocked(
             let kc = KC.min(k - pc);
             // B block packed once per (jc, pc) round, shared read-only
             // by every worker of the ic loop.
-            pack_b(&mut bpack, b, brs, bcs, pc, kc, jc, nc);
+            pack_b(&mut bpack, nr, b, brs, bcs, pc, kc, jc, nc);
 
             // Distribute MR-row panels (not whole MC blocks) across the
-            // pool, so even an m = 256 GEMM exposes m/MR = 64 units of
+            // pool, so even an m = 256 GEMM exposes m/MR ≥ 32 units of
             // parallelism; each worker still packs/multiplies its range
-            // in MC-row sub-blocks for cache locality.
-            let panels = m.div_ceil(MR);
-            let panels_per_block = MC / MR;
-            let chunk = par::chunk_for_flops(panels, 2 * MR * nc * kc);
+            // in MC-row sub-blocks for cache locality. The chunk target
+            // scales with the kernel's flop rate: a SIMD kernel retires
+            // the same flops sooner, so it needs bigger chunks to
+            // amortize a pool dispatch.
+            let panels = m.div_ceil(mr);
+            let panels_per_block = MC / mr;
+            let chunk = par::chunk_for_flops_at_rate(panels, 2 * mr * nc * kc, kern.rate);
             let bref = &bpack;
             par::par_ranges(panels, chunk, |plo, phi| {
                 let o = out;
-                let mut apack = vec![0.0f64; MC.div_ceil(MR) * MR * kc];
+                let mut apack = vec![0.0f64; MC.div_ceil(mr) * mr * kc];
                 let mut p0 = plo;
                 while p0 < phi {
                     let pend = (p0 + panels_per_block).min(phi);
-                    let row0 = p0 * MR;
-                    let mc = (pend * MR).min(m) - row0;
-                    pack_a(&mut apack, a, ars, acs, row0, mc, pc, kc);
-                    macro_kernel(o, ldc, row0, jc, mc, nc, kc, &apack, bref);
+                    let row0 = p0 * mr;
+                    let mc = (pend * mr).min(m) - row0;
+                    pack_a(&mut apack, mr, a, ars, acs, row0, mc, pc, kc);
+                    macro_kernel(kern, o, ldc, row0, jc, mc, nc, kc, &apack, bref);
                     p0 = pend;
                 }
             });
@@ -210,9 +268,10 @@ fn gemm_blocked(
 }
 
 /// Pack an `mc × kc` block of op(A) (rows `row0..`, depth `p0..`) into
-/// MR-row panels: `dst[panel][p*MR + r]`, zero-padding the last panel.
+/// `mr`-row panels: `dst[panel][p*mr + r]`, zero-padding the last panel.
 fn pack_a(
     dst: &mut [f64],
+    mr: usize,
     a: &[f64],
     ars: usize,
     acs: usize,
@@ -221,14 +280,14 @@ fn pack_a(
     p0: usize,
     kc: usize,
 ) {
-    let panels = mc.div_ceil(MR);
+    let panels = mc.div_ceil(mr);
     for ip in 0..panels {
-        let panel = &mut dst[ip * kc * MR..(ip + 1) * kc * MR];
-        let r0 = ip * MR;
-        let rows = MR.min(mc - r0);
+        let panel = &mut dst[ip * kc * mr..(ip + 1) * kc * mr];
+        let r0 = ip * mr;
+        let rows = mr.min(mc - r0);
         for p in 0..kc {
             let col = (p0 + p) * acs;
-            let slot = &mut panel[p * MR..p * MR + MR];
+            let slot = &mut panel[p * mr..p * mr + mr];
             for r in 0..rows {
                 slot[r] = a[(row0 + r0 + r) * ars + col];
             }
@@ -240,9 +299,10 @@ fn pack_a(
 }
 
 /// Pack a `kc × nc` block of op(B) (depth `p0..`, cols `col0..`) into
-/// NR-column panels: `dst[panel][p*NR + c]`, zero-padding the last panel.
+/// `nr`-column panels: `dst[panel][p*nr + c]`, zero-padding the last panel.
 fn pack_b(
     dst: &mut [f64],
+    nr: usize,
     b: &[f64],
     brs: usize,
     bcs: usize,
@@ -251,14 +311,14 @@ fn pack_b(
     col0: usize,
     nc: usize,
 ) {
-    let panels = nc.div_ceil(NR);
+    let panels = nc.div_ceil(nr);
     for jp in 0..panels {
-        let panel = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
-        let c0 = jp * NR;
-        let cols = NR.min(nc - c0);
+        let panel = &mut dst[jp * kc * nr..(jp + 1) * kc * nr];
+        let c0 = jp * nr;
+        let cols = nr.min(nc - c0);
         for p in 0..kc {
             let row = (p0 + p) * brs;
-            let slot = &mut panel[p * NR..p * NR + NR];
+            let slot = &mut panel[p * nr..p * nr + nr];
             for c in 0..cols {
                 slot[c] = b[row + (col0 + c0 + c) * bcs];
             }
@@ -271,8 +331,11 @@ fn pack_b(
 
 /// Multiply the packed `mc × kc` A block into the packed `kc × nc` B
 /// block, accumulating into `C[row0.., col0..]` (`ldc`-stride rows).
+/// The micro-tile is computed into a scratch tile by the dispatched
+/// SIMD kernel; the write-back here masks the zero-padded tile edges.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
+    kern: &'static Kernel,
     out: OutPtr,
     ldc: usize,
     row0: usize,
@@ -283,46 +346,29 @@ fn macro_kernel(
     apack: &[f64],
     bpack: &[f64],
 ) {
-    let m_panels = mc.div_ceil(MR);
-    let n_panels = nc.div_ceil(NR);
+    let (mr, nr) = (kern.mr, kern.nr);
+    let m_panels = mc.div_ceil(mr);
+    let n_panels = nc.div_ceil(nr);
+    let mut acc = [0.0f64; simd::MAX_TILE];
     for jp in 0..n_panels {
-        let bpanel = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
-        let nr = NR.min(nc - jp * NR);
+        let bpanel = &bpack[jp * kc * nr..(jp + 1) * kc * nr];
+        let ncols = nr.min(nc - jp * nr);
         for ip in 0..m_panels {
-            let apanel = &apack[ip * kc * MR..(ip + 1) * kc * MR];
-            let mr = MR.min(mc - ip * MR);
+            let apanel = &apack[ip * kc * mr..(ip + 1) * kc * mr];
+            let nrows = mr.min(mc - ip * mr);
 
-            let mut acc = [[0.0f64; NR]; MR];
-            micro_kernel(kc, apanel, bpanel, &mut acc);
+            kern.run(kc, apanel, bpanel, &mut acc);
 
             // write-back, masking the zero-padded tile edge
-            let base = (row0 + ip * MR) * ldc + col0 + jp * NR;
-            for r in 0..mr {
+            let base = (row0 + ip * mr) * ldc + col0 + jp * nr;
+            for r in 0..nrows {
                 // SAFETY: row ranges are disjoint across workers and the
                 // (jp, ip) tiles are disjoint within one worker.
                 let crow =
-                    unsafe { std::slice::from_raw_parts_mut(out.0.add(base + r * ldc), nr) };
-                for (cv, &av) in crow.iter_mut().zip(acc[r].iter()) {
+                    unsafe { std::slice::from_raw_parts_mut(out.0.add(base + r * ldc), ncols) };
+                for (cv, &av) in crow.iter_mut().zip(acc[r * nr..r * nr + ncols].iter()) {
                     *cv += av;
                 }
-            }
-        }
-    }
-}
-
-/// The register-blocked MR×NR kernel: fixed bounds so the compiler
-/// unrolls the `r`/`c` loops into FMA-friendly vector code.
-#[inline(always)]
-fn micro_kernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
-    debug_assert!(apanel.len() >= kc * MR && bpanel.len() >= kc * NR);
-    for p in 0..kc {
-        let av: &[f64] = &apanel[p * MR..p * MR + MR];
-        let bv: &[f64] = &bpanel[p * NR..p * NR + NR];
-        for r in 0..MR {
-            let ar = av[r];
-            let row = &mut acc[r];
-            for c in 0..NR {
-                row[c] += ar * bv[c];
             }
         }
     }
@@ -371,7 +417,7 @@ mod tests {
         let mut rng = Rng::new(1);
         // big enough to force the packed path, ragged on every axis
         for &(m, n, k) in &[(131usize, 67usize, 261usize), (140, 72, 64), (257, 130, 40)] {
-            assert!(2 * m * n * k > NAIVE_MAX_FLOPS && m >= MR && n >= NR);
+            assert!(2 * m * n * k > NAIVE_MAX_FLOPS && m >= simd::MAX_MR && n >= simd::MAX_NR);
             let a_nn = randv(m * k, &mut rng); // m×k row-major
             let a_tn = randv(k * m, &mut rng); // k×m row-major (op = transpose)
             let b_nn = randv(k * n, &mut rng); // k×n row-major
@@ -392,6 +438,33 @@ mod tests {
     }
 
     #[test]
+    fn every_available_kernel_matches_reference_on_blocked_path() {
+        // The forced-kernel hook: each executable micro-kernel (scalar,
+        // avx2, avx512 where the host has them) must reproduce the
+        // reference through the full pack/macro-kernel path, including
+        // ragged tile edges and multi-KC accumulation.
+        let mut rng = Rng::new(7);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 9),
+            (9, 9, 9),
+            (13, 17, KC + 5),
+            (131, 67, 261),
+            (129, 65, 63),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let want = reference(m, n, k, &a, k, 1, &b, n, 1);
+            for kern in simd::available_kernels() {
+                let mut got = vec![0.0; m * n];
+                gemm_blocked_with(kern, m, n, k, &a, k, 1, &b, n, 1, &mut got);
+                let err = max_abs_diff(&got, &want);
+                assert!(err < 1e-9, "{} ({m},{n},{k}): {err}", kern.name);
+            }
+        }
+    }
+
+    #[test]
     fn small_and_degenerate_shapes() {
         let mut rng = Rng::new(2);
         for &(m, n, k) in &[
@@ -400,9 +473,11 @@ mod tests {
             (9, 1, 5),
             (5, 9, 1),
             (3, 3, 3),
-            (MR, NR, 2),
-            (MR - 1, NR - 1, 7),
-            (MR + 1, NR + 1, KC + 3),
+            (4, 8, 2),
+            (3, 7, 7),
+            (5, 9, KC + 3),
+            (7, 9, 11),
+            (9, 7, 11),
         ] {
             let a = randv(m * k, &mut rng);
             let b = randv(k * n, &mut rng);
@@ -459,22 +534,25 @@ mod tests {
     #[test]
     fn strided_output_blocked_path_matches_reference() {
         // large enough for the packed path; ldc > n exercises the
-        // macro-kernel's generalized write-back stride.
+        // macro-kernel's generalized write-back stride — on every
+        // executable kernel, since tile edges depend on MR/NR.
         let mut rng = Rng::new(5);
         let (m, n, k, ldc) = (140usize, 72usize, 64usize, 90usize);
-        assert!(2 * m * n * k > NAIVE_MAX_FLOPS && m >= MR && n >= NR);
+        assert!(2 * m * n * k > NAIVE_MAX_FLOPS);
         let a = randv(m * k, &mut rng);
         let b = randv(k * n, &mut rng);
         let want = reference(m, n, k, &a, k, 1, &b, n, 1);
-        let mut big = vec![0.0f64; m * ldc];
-        gemm_strided_into(m, n, k, &a, k, 1, &b, n, 1, &mut big, ldc);
-        for r in 0..m {
-            for cc in 0..n {
-                let err = (big[r * ldc + cc] - want[r * n + cc]).abs();
-                assert!(err < 1e-10, "({r},{cc}) err={err}");
-            }
-            for cc in n..ldc {
-                assert_eq!(big[r * ldc + cc], 0.0, "({r},{cc}) padding clobbered");
+        for kern in simd::available_kernels() {
+            let mut big = vec![0.0f64; m * ldc];
+            gemm_strided_into_with(kern, m, n, k, &a, k, 1, &b, n, 1, &mut big, ldc);
+            for r in 0..m {
+                for cc in 0..n {
+                    let err = (big[r * ldc + cc] - want[r * n + cc]).abs();
+                    assert!(err < 1e-10, "{} ({r},{cc}) err={err}", kern.name);
+                }
+                for cc in n..ldc {
+                    assert_eq!(big[r * ldc + cc], 0.0, "{} ({r},{cc}) padding", kern.name);
+                }
             }
         }
     }
@@ -484,7 +562,7 @@ mod tests {
         // k and n crossing the KC/NC boundaries exercises the pc/jc
         // accumulation loops (requires KC < k, and C += across rounds).
         let mut rng = Rng::new(3);
-        let (m, n, k) = (MR * 8 + 1, NR * 2 + 3, KC * 2 + 17);
+        let (m, n, k) = (8 * 8 + 1, 8 * 2 + 3, KC * 2 + 17);
         let a = randv(m * k, &mut rng);
         let b = randv(k * n, &mut rng);
         let want = reference(m, n, k, &a, k, 1, &b, n, 1);

@@ -2,7 +2,9 @@
 //!
 //! Everything K-FAC needs from a LAPACK/BLAS that we do not have:
 //! threaded blocked GEMM (all four transpose variants used by the
-//! NN/Fisher code), Cholesky factorization / SPD inverses, a Jacobi
+//! NN/Fisher code) over runtime-dispatched SIMD micro-kernels (see
+//! [`simd`]: AVX2/AVX-512 with a scalar reference, `KFAC_SIMD`
+//! override), Cholesky factorization / SPD inverses, a Jacobi
 //! symmetric eigensolver, PSD matrix square roots, Kronecker-product
 //! utilities, and the Appendix-B structured inverse of
 //! `A ⊗ B ± C ⊗ D` (see [`stein`]).
@@ -11,6 +13,7 @@ pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod kron;
+pub mod simd;
 pub mod stein;
 
 pub use chol::Cholesky;

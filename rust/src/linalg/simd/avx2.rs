@@ -1,0 +1,153 @@
+//! AVX2+FMA micro-kernel and fused BLAS-2 helpers (x86_64 only).
+//!
+//! The GEMM tile is 4×8: each of the four A rows broadcasts into a
+//! `__m256d`, the eight B columns live in two 4-lane vectors, and the
+//! eight accumulators plus the three live operands fit comfortably in
+//! the sixteen ymm registers. Every function here is compiled with
+//! `#[target_feature]` and must only be called after
+//! `is_x86_feature_detected!("avx2")`/`("fma")` both passed — the
+//! dispatch layer in [`super`] is the sole caller and enforces that.
+
+use std::arch::x86_64::*;
+
+/// `acc[r*8 + c] = Σ_p apanel[p*4 + r] · bpanel[p*8 + c]`, overwriting
+/// the 4×8 tile. Panels are the zero-padded packed layout of
+/// `linalg::gemm` (A in MR-strips, B in NR-strips).
+///
+/// # Safety
+/// Requires avx2+fma at runtime; `apanel`/`bpanel` must be readable for
+/// `kc*4` / `kc*8` f64 and `acc` writable for 32 f64.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn micro_4x8(kc: usize, apanel: *const f64, bpanel: *const f64, acc: *mut f64) {
+    let mut c00 = _mm256_setzero_pd();
+    let mut c01 = _mm256_setzero_pd();
+    let mut c10 = _mm256_setzero_pd();
+    let mut c11 = _mm256_setzero_pd();
+    let mut c20 = _mm256_setzero_pd();
+    let mut c21 = _mm256_setzero_pd();
+    let mut c30 = _mm256_setzero_pd();
+    let mut c31 = _mm256_setzero_pd();
+    let mut ap = apanel;
+    let mut bp = bpanel;
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_pd(bp);
+        let b1 = _mm256_loadu_pd(bp.add(4));
+        let a0 = _mm256_set1_pd(*ap);
+        c00 = _mm256_fmadd_pd(a0, b0, c00);
+        c01 = _mm256_fmadd_pd(a0, b1, c01);
+        let a1 = _mm256_set1_pd(*ap.add(1));
+        c10 = _mm256_fmadd_pd(a1, b0, c10);
+        c11 = _mm256_fmadd_pd(a1, b1, c11);
+        let a2 = _mm256_set1_pd(*ap.add(2));
+        c20 = _mm256_fmadd_pd(a2, b0, c20);
+        c21 = _mm256_fmadd_pd(a2, b1, c21);
+        let a3 = _mm256_set1_pd(*ap.add(3));
+        c30 = _mm256_fmadd_pd(a3, b0, c30);
+        c31 = _mm256_fmadd_pd(a3, b1, c31);
+        ap = ap.add(4);
+        bp = bp.add(8);
+    }
+    _mm256_storeu_pd(acc, c00);
+    _mm256_storeu_pd(acc.add(4), c01);
+    _mm256_storeu_pd(acc.add(8), c10);
+    _mm256_storeu_pd(acc.add(12), c11);
+    _mm256_storeu_pd(acc.add(16), c20);
+    _mm256_storeu_pd(acc.add(20), c21);
+    _mm256_storeu_pd(acc.add(24), c30);
+    _mm256_storeu_pd(acc.add(28), c31);
+}
+
+/// Fused `aw += Wᵀv`, `av += Vᵀv` in one pass over the rows (see the
+/// safe wrapper [`super::fused_tdot2`] for the contract and bounds).
+///
+/// # Safety
+/// Requires avx2+fma; all pointers must cover the extents asserted by
+/// the wrapper (`vcol`: `(rows-1)*vstride+1`, `wa`/`xa`:
+/// `(rows-1)*ld + t`, `aw`/`av`: `t`).
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn fused_tdot2(
+    rows: usize,
+    t: usize,
+    vcol: *const f64,
+    vstride: usize,
+    wa: *const f64,
+    lda: usize,
+    xa: *const f64,
+    ldb: usize,
+    aw: *mut f64,
+    av: *mut f64,
+) {
+    for r in 0..rows {
+        let vr = *vcol.add(r * vstride);
+        if vr == 0.0 {
+            continue;
+        }
+        let vb = _mm256_set1_pd(vr);
+        let wrow = wa.add(r * lda);
+        let xrow = xa.add(r * ldb);
+        let mut i = 0;
+        while i + 4 <= t {
+            let awv = _mm256_loadu_pd(aw.add(i));
+            let avv = _mm256_loadu_pd(av.add(i));
+            let wv = _mm256_loadu_pd(wrow.add(i));
+            let xv = _mm256_loadu_pd(xrow.add(i));
+            _mm256_storeu_pd(aw.add(i), _mm256_fmadd_pd(vb, wv, awv));
+            _mm256_storeu_pd(av.add(i), _mm256_fmadd_pd(vb, xv, avv));
+            i += 4;
+        }
+        while i < t {
+            *aw.add(i) += *wrow.add(i) * vr;
+            *av.add(i) += *xrow.add(i) * vr;
+            i += 1;
+        }
+    }
+}
+
+/// Horizontal sum of a `__m256d`.
+#[inline(always)]
+unsafe fn hsum(v: __m256d) -> f64 {
+    let hi = _mm256_extractf128_pd::<1>(v);
+    let lo = _mm256_castpd256_pd128(v);
+    let s = _mm_add_pd(lo, hi);
+    let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
+    _mm_cvtsd_f64(s)
+}
+
+/// Fused `p[r·ps] −= X_row·ca + W_row·cb` (see [`super::fused_apply2`]).
+///
+/// # Safety
+/// Requires avx2+fma; pointer extents as asserted by the wrapper.
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn fused_apply2(
+    rows: usize,
+    t: usize,
+    xa: *const f64,
+    lda: usize,
+    wa: *const f64,
+    ldb: usize,
+    ca: *const f64,
+    cb: *const f64,
+    p: *mut f64,
+    ps: usize,
+) {
+    for r in 0..rows {
+        let xrow = xa.add(r * lda);
+        let wrow = wa.add(r * ldb);
+        let mut accx = _mm256_setzero_pd();
+        let mut accw = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= t {
+            accx = _mm256_fmadd_pd(_mm256_loadu_pd(xrow.add(i)), _mm256_loadu_pd(ca.add(i)), accx);
+            accw = _mm256_fmadd_pd(_mm256_loadu_pd(wrow.add(i)), _mm256_loadu_pd(cb.add(i)), accw);
+            i += 4;
+        }
+        let mut acc = hsum(_mm256_add_pd(accx, accw));
+        while i < t {
+            acc += *xrow.add(i) * *ca.add(i) + *wrow.add(i) * *cb.add(i);
+            i += 1;
+        }
+        *p.add(r * ps) -= acc;
+    }
+}

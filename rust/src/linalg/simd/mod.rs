@@ -1,0 +1,566 @@
+//! Runtime-dispatched SIMD micro-kernels for the dense hot paths.
+//!
+//! The packed GEMM in [`super::gemm`] funnels every multiply through one
+//! register-blocked `MR×NR` micro-kernel; this module owns that kernel.
+//! Three implementations share a single contract (compute a full
+//! `mr × nr` f64 tile from zero-padded packed panels and overwrite a
+//! row-major `mr × nr` scratch tile):
+//!
+//! - **scalar** — the portable fixed-bound 4×8 loop nest the compiler
+//!   auto-vectorizes. Always compiled, on every architecture; it is the
+//!   cross-check reference the SIMD kernels are property-tested against.
+//! - **avx2** — explicit `std::arch::x86_64` AVX2+FMA intrinsics,
+//!   4×8 tiles as eight `__m256d` accumulators (x86_64 only).
+//! - **avx512** — AVX-512F intrinsics, 8×8 tiles as eight `__m512d`
+//!   accumulators (x86_64 only).
+//!
+//! Which kernel runs is decided **once per process** (cached in a
+//! [`OnceLock`]) from `is_x86_feature_detected!`, overridable with the
+//! `KFAC_SIMD` environment variable:
+//!
+//! ```text
+//! KFAC_SIMD=0|off|scalar   force the scalar reference kernel
+//! KFAC_SIMD=avx2           force AVX2 (falls back to scalar + warning
+//!                          if the host lacks avx2/fma)
+//! KFAC_SIMD=avx512         force AVX-512F (same fallback rule)
+//! KFAC_SIMD=auto / unset   detect: avx512 > avx2 > scalar
+//! ```
+//!
+//! Any *unknown* value falls back to scalar with a one-time stderr
+//! warning instead of panicking (see [`unknown_simd_request_count`]).
+//! The chosen kernel and the detected features are logged to stderr
+//! once per process.
+//!
+//! The same dispatch seam serves the eigensolver's memory-bound BLAS-2
+//! half: [`fused_tdot2`] / [`fused_apply2`] are the `dlatrd`-style
+//! fused correction GEMVs (`w ← A·v − W·(Vᵀv) − V·(Wᵀv)` traffic) —
+//! one pass over the rows instead of one strided pass per panel column.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+/// Largest `mr` any kernel uses (the AVX-512 tile).
+pub const MAX_MR: usize = 8;
+/// Largest `nr` any kernel uses.
+pub const MAX_NR: usize = 8;
+/// Scratch-tile capacity handed to [`Kernel::run`] (`MAX_MR × MAX_NR`).
+pub const MAX_TILE: usize = MAX_MR * MAX_NR;
+
+/// Instruction-set family of a [`Kernel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Avx512,
+}
+
+/// A GEMM micro-kernel: per-kernel register-tile geometry plus the tile
+/// routine itself. `MR`/`NR` are **per-kernel** constants — the packing
+/// layer in [`super::gemm`] reads them from here instead of from crate
+/// globals, so kernels with different tile shapes coexist behind one
+/// packing/macro-kernel code path.
+pub struct Kernel {
+    /// Display / `KFAC_SIMD` name.
+    pub name: &'static str,
+    /// Which implementation [`Kernel::run`] dispatches to.
+    pub isa: Isa,
+    /// Micro-tile rows (packing granularity of A panels).
+    pub mr: usize,
+    /// Micro-tile columns (packing granularity of B panels).
+    pub nr: usize,
+    /// Rough flop throughput relative to the scalar kernel (f64 lanes ×
+    /// FMA). Feeds [`crate::par::chunk_for_flops_at_rate`] so parallel
+    /// chunking amortizes dispatch against *kernel* speed, not wall
+    /// flops.
+    pub rate: usize,
+}
+
+impl Kernel {
+    /// Compute one full `mr × nr` tile: `acc[r*nr + c] = Σ_p
+    /// apanel[p*mr + r] · bpanel[p*nr + c]`, overwriting the first
+    /// `mr·nr` entries of `acc`. Panels are zero-padded by the packing
+    /// layer, so there are no edge variants here; the macro-kernel's
+    /// write-back masks ragged tile edges.
+    #[inline]
+    pub fn run(&self, kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MAX_TILE]) {
+        assert!(
+            apanel.len() >= kc * self.mr && bpanel.len() >= kc * self.nr,
+            "micro-kernel: panels too small for kc={kc}"
+        );
+        match self.isa {
+            Isa::Scalar => scalar::micro_4x8(kc, apanel, bpanel, acc),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // The dispatch layer only hands out detected kernels,
+                // but `run` is safe and the statics are pub, so the
+                // feature check must live here (cached atomics — noise
+                // next to a kc-deep tile) for this to be sound on a
+                // host that lacks the ISA.
+                assert!(avx2_available(), "avx2 micro-kernel on a host without avx2+fma");
+                // SAFETY: feature presence asserted above; panel
+                // extents asserted at function entry.
+                unsafe { avx2::micro_4x8(kc, apanel.as_ptr(), bpanel.as_ptr(), acc.as_mut_ptr()) }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => {
+                assert!(avx512_available(), "avx512 micro-kernel on a host without avx512f");
+                // SAFETY: as above.
+                unsafe { avx512::micro_8x8(kc, apanel.as_ptr(), bpanel.as_ptr(), acc.as_mut_ptr()) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => unreachable!("SIMD kernel selected on a non-x86_64 build"),
+        }
+    }
+}
+
+/// The portable reference kernel (always available).
+pub static SCALAR: Kernel = Kernel {
+    name: "scalar",
+    isa: Isa::Scalar,
+    mr: scalar::MR,
+    nr: scalar::NR,
+    rate: 1,
+};
+
+#[cfg(target_arch = "x86_64")]
+pub static AVX2: Kernel = Kernel { name: "avx2", isa: Isa::Avx2, mr: 4, nr: 8, rate: 4 };
+
+#[cfg(target_arch = "x86_64")]
+pub static AVX512: Kernel = Kernel { name: "avx512", isa: Isa::Avx512, mr: 8, nr: 8, rate: 8 };
+
+// ---------------------------------------------------------------------
+// feature detection
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// AVX-512 selection also requires avx2+fma so the fused GEMV helpers
+/// (which use AVX2 intrinsics) are safe whenever a SIMD kernel is
+/// active. Every avx512f part ships avx2/fma in practice.
+#[cfg(target_arch = "x86_64")]
+fn avx512_available() -> bool {
+    is_x86_feature_detected!("avx512f") && avx2_available()
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx512_available() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// selection
+// ---------------------------------------------------------------------
+
+static UNKNOWN_REQUESTS: AtomicUsize = AtomicUsize::new(0);
+static UNKNOWN_WARNED: AtomicBool = AtomicBool::new(false);
+static UNAVAILABLE_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Process-wide count of `KFAC_SIMD` values that named no known kernel
+/// (each fell back to scalar; the first was warned about on stderr).
+pub fn unknown_simd_request_count() -> usize {
+    UNKNOWN_REQUESTS.load(Ordering::Relaxed)
+}
+
+fn note_unknown(spec: &str) {
+    UNKNOWN_REQUESTS.fetch_add(1, Ordering::Relaxed);
+    if !UNKNOWN_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "kfac: unknown KFAC_SIMD value {spec:?} (expected 0|scalar|avx2|avx512|auto); \
+             falling back to the scalar kernel (warned once per process)"
+        );
+    }
+}
+
+fn note_unavailable(spec: &str) {
+    if !UNAVAILABLE_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "kfac: KFAC_SIMD={spec} requested but the host CPU does not support it; \
+             falling back to the scalar kernel (warned once per process)"
+        );
+    }
+}
+
+fn detect_best() -> &'static Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_available() {
+            return &AVX512;
+        }
+        if avx2_available() {
+            return &AVX2;
+        }
+    }
+    &SCALAR
+}
+
+/// Resolve a `KFAC_SIMD` spec (None = unset) to a kernel. Pure except
+/// for the one-time warnings; exposed for the dispatch-layer tests,
+/// which exercise forced selection and the unknown-value fallback
+/// without racing on process environment.
+#[doc(hidden)]
+pub fn select(spec: Option<&str>) -> &'static Kernel {
+    match spec.map(str::trim) {
+        None | Some("") | Some("auto") => detect_best(),
+        Some("0") | Some("off") | Some("scalar") | Some("none") => &SCALAR,
+        Some(req @ ("avx2" | "avx512")) => {
+            let found = available_kernels().into_iter().find(|k| k.name == req);
+            match found {
+                Some(k) => k,
+                None => {
+                    note_unavailable(req);
+                    &SCALAR
+                }
+            }
+        }
+        Some(other) => {
+            note_unknown(other);
+            &SCALAR
+        }
+    }
+}
+
+/// Every kernel the current host can actually execute (scalar first).
+/// Benches iterate this to emit per-kernel GFLOP/s entries.
+pub fn available_kernels() -> Vec<&'static Kernel> {
+    #[allow(unused_mut)] // non-x86_64 builds never push
+    let mut ks: Vec<&'static Kernel> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            ks.push(&AVX2);
+        }
+        if avx512_available() {
+            ks.push(&AVX512);
+        }
+    }
+    ks
+}
+
+/// The kernel every dispatched GEMM uses, chosen once per process from
+/// `KFAC_SIMD` + CPU feature detection and logged to stderr.
+pub fn active() -> &'static Kernel {
+    static ACTIVE: OnceLock<&'static Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let spec = std::env::var("KFAC_SIMD").ok();
+        let k = select(spec.as_deref());
+        eprintln!(
+            "kfac: gemm micro-kernel = {} {}x{} (detected: avx2+fma={}, avx512f={}; KFAC_SIMD={})",
+            k.name,
+            k.mr,
+            k.nr,
+            avx2_available(),
+            avx512_available(),
+            spec.as_deref().unwrap_or("unset"),
+        );
+        k
+    })
+}
+
+/// True when the active kernel may use AVX2+FMA helper routines (the
+/// fused eigensolver GEMVs). Guaranteed consistent with [`active`]:
+/// `KFAC_SIMD=0` turns these off too, so a forced-scalar run exercises
+/// pure scalar arithmetic end to end.
+#[cfg(target_arch = "x86_64")]
+fn fused_avx_enabled() -> bool {
+    active().isa != Isa::Scalar
+}
+
+// ---------------------------------------------------------------------
+// fused BLAS-2 helpers (the eigensolver's panel-correction traffic)
+// ---------------------------------------------------------------------
+
+/// Fused pair of transposed GEMVs, one pass over the rows:
+///
+/// ```text
+/// aw[i] += Σ_r wa[r·lda + i] · v_r      (Wᵀ v)
+/// av[i] += Σ_r xa[r·ldb + i] · v_r      (Vᵀ v)      v_r = vcol[r·vstride]
+/// ```
+///
+/// Both row reads are contiguous, so one traversal of W and V replaces
+/// the two strided column passes `dlatrd`'s textbook loop makes. Each
+/// accumulator still sums in ascending-`r` order: the scalar path is
+/// bit-identical to the unfused loops, the AVX2 path differs only by
+/// FMA rounding.
+pub fn fused_tdot2(
+    rows: usize,
+    t: usize,
+    vcol: &[f64],
+    vstride: usize,
+    wa: &[f64],
+    lda: usize,
+    xa: &[f64],
+    ldb: usize,
+    aw: &mut [f64],
+    av: &mut [f64],
+) {
+    if rows == 0 || t == 0 {
+        return;
+    }
+    assert!(vcol.len() > (rows - 1) * vstride, "fused_tdot2: v column too small");
+    assert!(wa.len() >= (rows - 1) * lda + t, "fused_tdot2: W too small");
+    assert!(xa.len() >= (rows - 1) * ldb + t, "fused_tdot2: V too small");
+    assert!(aw.len() >= t && av.len() >= t, "fused_tdot2: accumulators too small");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fused_avx_enabled() {
+            // SAFETY: extents asserted above; avx2+fma presence is
+            // implied by any non-scalar kernel selection.
+            unsafe {
+                avx2::fused_tdot2(
+                    rows,
+                    t,
+                    vcol.as_ptr(),
+                    vstride,
+                    wa.as_ptr(),
+                    lda,
+                    xa.as_ptr(),
+                    ldb,
+                    aw.as_mut_ptr(),
+                    av.as_mut_ptr(),
+                );
+            }
+            return;
+        }
+    }
+    for r in 0..rows {
+        let vr = vcol[r * vstride];
+        if vr == 0.0 {
+            continue;
+        }
+        let wrow = &wa[r * lda..r * lda + t];
+        let xrow = &xa[r * ldb..r * ldb + t];
+        for i in 0..t {
+            aw[i] += wrow[i] * vr;
+            av[i] += xrow[i] * vr;
+        }
+    }
+}
+
+/// Fused pair of GEMVs applying two rank-`t` corrections in one pass:
+///
+/// ```text
+/// p[r·ps] −= Σ_i xa[r·lda + i]·ca[i] + wa[r·ldb + i]·cb[i]
+/// ```
+///
+/// (the `w ← w − V(Wᵀv) − W(Vᵀv)` half of the dlatrd panel update; also
+/// reused to bring a panel column up to date before its reflector).
+pub fn fused_apply2(
+    rows: usize,
+    t: usize,
+    xa: &[f64],
+    lda: usize,
+    wa: &[f64],
+    ldb: usize,
+    ca: &[f64],
+    cb: &[f64],
+    p: &mut [f64],
+    ps: usize,
+) {
+    if rows == 0 || t == 0 {
+        return;
+    }
+    assert!(xa.len() >= (rows - 1) * lda + t, "fused_apply2: X too small");
+    assert!(wa.len() >= (rows - 1) * ldb + t, "fused_apply2: W too small");
+    assert!(ca.len() >= t && cb.len() >= t, "fused_apply2: coefficients too small");
+    assert!(p.len() > (rows - 1) * ps, "fused_apply2: output too small");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fused_avx_enabled() {
+            // SAFETY: extents asserted above; avx2+fma presence is
+            // implied by any non-scalar kernel selection.
+            unsafe {
+                avx2::fused_apply2(
+                    rows,
+                    t,
+                    xa.as_ptr(),
+                    lda,
+                    wa.as_ptr(),
+                    ldb,
+                    ca.as_ptr(),
+                    cb.as_ptr(),
+                    p.as_mut_ptr(),
+                    ps,
+                );
+            }
+            return;
+        }
+    }
+    for r in 0..rows {
+        let xrow = &xa[r * lda..r * lda + t];
+        let wrow = &wa[r * ldb..r * ldb + t];
+        let mut acc = 0.0;
+        for i in 0..t {
+            acc += xrow[i] * ca[i] + wrow[i] * cb[i];
+        }
+        p[r * ps] -= acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn forced_selection_by_name() {
+        assert_eq!(select(Some("0")).name, "scalar");
+        assert_eq!(select(Some("off")).name, "scalar");
+        assert_eq!(select(Some("scalar")).name, "scalar");
+        assert_eq!(select(Some(" scalar ")).name, "scalar", "spec is trimmed");
+        // avx2/avx512 resolve to themselves when the host has them and
+        // to scalar (with a one-time warning) when it does not.
+        for req in ["avx2", "avx512"] {
+            let k = select(Some(req));
+            if available_kernels().iter().any(|a| a.name == req) {
+                assert_eq!(k.name, req);
+            } else {
+                assert_eq!(k.name, "scalar");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_selection_matches_detection() {
+        let auto = select(None);
+        assert_eq!(auto.name, detect_best().name);
+        assert_eq!(select(Some("auto")).name, auto.name);
+        assert_eq!(select(Some("")).name, auto.name);
+        // whatever auto picks must be executable here
+        assert!(available_kernels().iter().any(|k| k.name == auto.name));
+    }
+
+    #[test]
+    fn unknown_value_falls_back_to_scalar_without_panicking() {
+        let before = unknown_simd_request_count();
+        assert_eq!(select(Some("sse9000")).name, "scalar");
+        assert_eq!(select(Some("AVX2")).name, "scalar", "names are case-sensitive");
+        assert!(
+            unknown_simd_request_count() >= before + 2,
+            "unknown KFAC_SIMD requests must be counted"
+        );
+    }
+
+    #[test]
+    fn active_is_cached_and_available() {
+        let a = active();
+        assert!(std::ptr::eq(a, active()), "dispatch must be decided once");
+        assert!(available_kernels().iter().any(|k| std::ptr::eq(*k, a)));
+    }
+
+    #[test]
+    fn kernels_agree_on_a_full_tile() {
+        // Micro-level cross-check: every executable kernel's tile equals
+        // the scalar kernel's on identically-packed panels.
+        let mut rng = Rng::new(11);
+        for kc in [1usize, 2, 7, 37, 256, 300] {
+            let apanel = randv(kc * MAX_MR, &mut rng);
+            let bpanel = randv(kc * MAX_NR, &mut rng);
+            for k in available_kernels() {
+                let mut got = [f64::NAN; MAX_TILE];
+                k.run(kc, &apanel, &bpanel, &mut got);
+                // scalar reference at this kernel's geometry
+                let mut want = [0.0f64; MAX_TILE];
+                for p in 0..kc {
+                    for r in 0..k.mr {
+                        for c in 0..k.nr {
+                            want[r * k.nr + c] += apanel[p * k.mr + r] * bpanel[p * k.nr + c];
+                        }
+                    }
+                }
+                for i in 0..k.mr * k.nr {
+                    let err = (got[i] - want[i]).abs();
+                    let tol = 1e-12 * (1.0 + want[i].abs());
+                    assert!(err < tol, "{} kc={kc} slot {i}: {} vs {}", k.name, got[i], want[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_geometries_fit_scratch() {
+        for k in available_kernels() {
+            assert!(k.mr >= 1 && k.mr <= MAX_MR, "{}", k.name);
+            assert!(k.nr >= 1 && k.nr <= MAX_NR, "{}", k.name);
+            assert!(k.rate >= 1, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn fused_tdot2_matches_unfused() {
+        let mut rng = Rng::new(12);
+        let (rows, t, lda, ldb, vstride) = (67usize, 13usize, 20usize, 15usize, 3usize);
+        let wa = randv((rows - 1) * lda + t, &mut rng);
+        let xa = randv((rows - 1) * ldb + t, &mut rng);
+        let vcol = randv((rows - 1) * vstride + 1, &mut rng);
+        let mut aw = vec![0.0; t];
+        let mut av = vec![0.0; t];
+        fused_tdot2(rows, t, &vcol, vstride, &wa, lda, &xa, ldb, &mut aw, &mut av);
+        for i in 0..t {
+            let mut w_want = 0.0;
+            let mut x_want = 0.0;
+            for r in 0..rows {
+                w_want += wa[r * lda + i] * vcol[r * vstride];
+                x_want += xa[r * ldb + i] * vcol[r * vstride];
+            }
+            assert!((aw[i] - w_want).abs() < 1e-12 * (1.0 + w_want.abs()), "aw[{i}]");
+            assert!((av[i] - x_want).abs() < 1e-12 * (1.0 + x_want.abs()), "av[{i}]");
+        }
+    }
+
+    #[test]
+    fn fused_apply2_matches_unfused() {
+        let mut rng = Rng::new(13);
+        let (rows, t, lda, ldb, ps) = (53usize, 9usize, 11usize, 17usize, 2usize);
+        let xa = randv((rows - 1) * lda + t, &mut rng);
+        let wa = randv((rows - 1) * ldb + t, &mut rng);
+        let ca = randv(t, &mut rng);
+        let cb = randv(t, &mut rng);
+        let init = randv((rows - 1) * ps + 1, &mut rng);
+        let mut p = init.clone();
+        fused_apply2(rows, t, &xa, lda, &wa, ldb, &ca, &cb, &mut p, ps);
+        for r in 0..rows {
+            let mut acc = 0.0;
+            for i in 0..t {
+                acc += xa[r * lda + i] * ca[i] + wa[r * ldb + i] * cb[i];
+            }
+            let want = init[r * ps] - acc;
+            assert!((p[r * ps] - want).abs() < 1e-12 * (1.0 + want.abs()), "row {r}");
+        }
+        // untouched lanes between strided outputs
+        for r in 0..rows - 1 {
+            assert_eq!(p[r * ps + 1], init[r * ps + 1], "stride gap clobbered at {r}");
+        }
+    }
+
+    #[test]
+    fn fused_helpers_handle_degenerate_extents() {
+        let mut aw = [0.0f64; 2];
+        let mut av = [0.0f64; 2];
+        fused_tdot2(0, 2, &[], 1, &[], 2, &[], 2, &mut aw, &mut av);
+        fused_tdot2(5, 0, &[0.0; 5], 1, &[], 0, &[], 0, &mut aw, &mut av);
+        assert_eq!(aw, [0.0; 2]);
+        let mut p = [3.0f64];
+        fused_apply2(0, 3, &[], 3, &[], 3, &[0.0; 3], &[0.0; 3], &mut p, 1);
+        fused_apply2(1, 0, &[], 0, &[], 0, &[], &[], &mut p, 1);
+        assert_eq!(p, [3.0]);
+    }
+}

@@ -1,0 +1,34 @@
+//! The portable micro-kernel: a fixed-bound 4×8 loop nest the compiler
+//! unrolls and auto-vectorizes. Always compiled on every architecture —
+//! it is the `KFAC_SIMD=0` escape hatch and the reference the explicit
+//! SIMD kernels are property-tested against.
+
+use super::MAX_TILE;
+
+/// Micro-tile rows of the scalar kernel.
+pub const MR: usize = 4;
+/// Micro-tile columns (two 4-wide f64 vectors per row on AVX2 hosts,
+/// which is what the auto-vectorizer usually produces from this nest).
+pub const NR: usize = 8;
+
+/// `acc[r*NR + c] = Σ_p apanel[p*MR + r] · bpanel[p*NR + c]` for the
+/// full (zero-padded) 4×8 tile. Overwrites; no edge variants.
+#[inline(always)]
+pub(crate) fn micro_4x8(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MAX_TILE]) {
+    debug_assert!(apanel.len() >= kc * MR && bpanel.len() >= kc * NR);
+    let mut local = [[0.0f64; NR]; MR];
+    for p in 0..kc {
+        let av: &[f64] = &apanel[p * MR..p * MR + MR];
+        let bv: &[f64] = &bpanel[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            let row = &mut local[r];
+            for c in 0..NR {
+                row[c] += ar * bv[c];
+            }
+        }
+    }
+    for r in 0..MR {
+        acc[r * NR..r * NR + NR].copy_from_slice(&local[r]);
+    }
+}

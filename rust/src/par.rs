@@ -47,8 +47,18 @@ pub fn num_threads() -> usize {
 /// `TARGET_FLOPS`, so tiny problems run inline on the caller thread and
 /// only work that amortizes a dispatch is split across the pool.
 pub fn chunk_for_flops(items: usize, flops_per_item: usize) -> usize {
+    chunk_for_flops_at_rate(items, flops_per_item, 1)
+}
+
+/// Per-kernel variant of [`chunk_for_flops`]: `rate` is the executing
+/// kernel's rough flop throughput relative to scalar (see
+/// `linalg::simd::Kernel::rate`). A SIMD kernel retires the same flops
+/// `rate`× sooner, so the flop budget that amortizes one pool dispatch
+/// scales with it — otherwise an AVX-512 GEMM would be sliced into
+/// chunks whose wall time is dominated by queue traffic.
+pub fn chunk_for_flops_at_rate(items: usize, flops_per_item: usize, rate: usize) -> usize {
     const TARGET_FLOPS: usize = 1 << 16;
-    (TARGET_FLOPS / flops_per_item.max(1)).clamp(1, items.max(1))
+    (TARGET_FLOPS.saturating_mul(rate.max(1)) / flops_per_item.max(1)).clamp(1, items.max(1))
 }
 
 // ---------------------------------------------------------------------
@@ -430,5 +440,17 @@ mod tests {
         // degenerate inputs stay in range
         assert_eq!(chunk_for_flops(0, 0), 1);
         assert!(chunk_for_flops(5, 0) <= 5);
+    }
+
+    #[test]
+    fn chunk_rate_scales_the_flop_target() {
+        // a rate-r kernel needs r× the flops per chunk
+        assert_eq!(chunk_for_flops_at_rate(1_000_000, 8, 1), (1 << 16) / 8);
+        assert_eq!(chunk_for_flops_at_rate(1_000_000, 8, 4), 4 * (1 << 16) / 8);
+        assert_eq!(chunk_for_flops_at_rate(1_000_000, 8, 8), 8 * (1 << 16) / 8);
+        // rate 0 behaves as scalar; bounds still hold
+        assert_eq!(chunk_for_flops_at_rate(10, 1, 0), 10);
+        assert_eq!(chunk_for_flops_at_rate(64, 1 << 20, 8), 1);
+        assert_eq!(chunk_for_flops(1_000_000, 8), chunk_for_flops_at_rate(1_000_000, 8, 1));
     }
 }

@@ -1,0 +1,372 @@
+#!/usr/bin/env python3
+"""Bench-regression gate over BENCH_linalg.json (stdlib only).
+
+CI's `bench-gate` job runs `cargo bench --bench linalg` three times,
+merges the runs with per-bench medians (`merge`), compares the result
+against the committed `BENCH_baseline.json` (`gate`, fails on >20%
+median GFLOP/s regression), and keeps the ROADMAP baseline tables in
+lockstep with the baseline file (`check-roadmap`). The very first green
+run on main records the baseline (`record` rewrites the `_pending_`
+ROADMAP cells and emits `BENCH_baseline.json`); `is-placeholder` is the
+bootstrap predicate for that step.
+
+Subcommands:
+  merge RUN1 RUN2 ... -o OUT
+  gate BASELINE FRESH [--tolerance 0.20] [--summary FILE]
+  check-roadmap BASELINE ROADMAP
+  record FRESH -o BASELINE [--roadmap ROADMAP]
+  is-placeholder BASELINE          (exit 0 iff the bootstrap marker)
+"""
+
+import argparse
+import json
+import statistics
+import sys
+
+# ROADMAP table rows -> bench names. The GEMM table holds dispatched
+# GFLOP/s for the square shapes; the SymEig table holds blocked and
+# scalar-QL-reference medians.
+GEMM_ROWS = {
+    "256³": "matmul_256x256x256",
+    "401³": "matmul_401x401x401",
+    "512³": "matmul_512x512x512",
+}
+EIG_ROWS = {
+    "64": ("sym_eig_64", "sym_eig_ql_ref_64"),
+    "256": ("sym_eig_256", "sym_eig_ql_ref_256"),
+    "512": ("sym_eig_512", "sym_eig_ql_ref_512"),
+}
+PENDING = "pending"  # substring marking a not-yet-recorded ROADMAP cell
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def is_placeholder(doc):
+    return bool(doc.get("placeholder")) or not doc.get("benches")
+
+
+def by_name(doc):
+    return {b["name"]: b for b in doc.get("benches", [])}
+
+
+def fmt_time(s):
+    if s < 1e-6:
+        return f"{s * 1e9:.0f} ns"
+    if s < 1e-3:
+        return f"{s * 1e6:.1f} µs"
+    if s < 1.0:
+        return f"{s * 1e3:.2f} ms"
+    return f"{s:.2f} s"
+
+
+def fmt_gflops(g):
+    return f"{g:.1f}"
+
+
+def cpu_model():
+    """Runner CPU model, so the gate knows when baseline and fresh run
+    came from different hardware (GitHub's fleet is heterogeneous and
+    absolute GFLOP/s are not comparable across CPU generations)."""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def cmd_merge(args):
+    docs = [load(p) for p in args.runs]
+    names = []  # keep first-run ordering
+    for b in docs[0].get("benches", []):
+        names.append(b["name"])
+    merged = []
+    for name in names:
+        rows = [by_name(d)[name] for d in docs if name in by_name(d)]
+        entry = dict(rows[0])
+        entry["median_s"] = statistics.median(r["median_s"] for r in rows)
+        entry["mean_s"] = statistics.median(r["mean_s"] for r in rows)
+        gs = [r["gflops"] for r in rows if r.get("gflops") is not None]
+        entry["gflops"] = round(statistics.median(gs), 3) if gs else None
+        merged.append(entry)
+    out = {
+        "threads": docs[0].get("threads", 0),
+        "runs": len(docs),
+        "cpu": cpu_model(),
+        "benches": merged,
+    }
+    with open(args.output, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"merged {len(docs)} runs x {len(merged)} benches -> {args.output}")
+    return 0
+
+
+def speedup_lines(fresh):
+    """Markdown rows showing per-kernel GFLOP/s and the SIMD speedup."""
+    lines = [
+        "",
+        "### SIMD speedup (dispatched vs scalar micro-kernel)",
+        "",
+        "| shape | scalar | avx2 | avx512 | best/scalar |",
+        "|-------|--------|------|--------|-------------|",
+    ]
+    for n in (256, 401, 512):
+        cells = []
+        best = None
+        scalar = None
+        for kern in ("scalar", "avx2", "avx512"):
+            b = fresh.get(f"matmul_{n}_{kern}")
+            g = b.get("gflops") if b else None
+            cells.append(fmt_gflops(g) if g is not None else "n/a")
+            if g is not None:
+                if kern == "scalar":
+                    scalar = g
+                else:
+                    best = max(best or 0.0, g)
+        ratio = f"{best / scalar:.2f}x" if scalar and best else "n/a"
+        lines.append(f"| {n}³ | {cells[0]} | {cells[1]} | {cells[2]} | {ratio} |")
+    return lines
+
+
+def cmd_gate(args):
+    base_doc = load(args.baseline)
+    fresh_doc = load(args.fresh)
+    fresh = by_name(fresh_doc)
+    lines = ["## Bench gate", ""]
+    failed = []
+
+    if is_placeholder(base_doc):
+        lines += [
+            "`BENCH_baseline.json` is still the bootstrap placeholder — "
+            "no gate applied. Fresh medians:",
+            "",
+            "| bench | median | GFLOP/s |",
+            "|-------|--------|---------|",
+        ]
+        for b in fresh_doc.get("benches", []):
+            g = fmt_gflops(b["gflops"]) if b.get("gflops") is not None else "—"
+            lines.append(f"| {b['name']} | {fmt_time(b['median_s'])} | {g} |")
+        lines += speedup_lines(fresh)
+    else:
+        base = by_name(base_doc)
+        # Absolute GFLOP/s only mean something on the same hardware:
+        # GitHub's runner fleet mixes CPU generations, so when the fresh
+        # run landed on a different CPU model than the baseline was
+        # recorded on, regressions are demoted to warnings instead of
+        # failing pushes for hardware reasons.
+        base_cpu = base_doc.get("cpu", "unknown")
+        fresh_cpu = fresh_doc.get("cpu", "unknown")
+        strict = base_cpu == fresh_cpu or "unknown" in (base_cpu, fresh_cpu)
+        lines += [
+            f"Baseline CPU: `{base_cpu}` · fresh CPU: `{fresh_cpu}`.",
+            f"Tolerance: >{args.tolerance * 100:.0f}% median GFLOP/s regression "
+            + ("fails." if strict else "WARNS ONLY (different CPU model)."),
+            "",
+            "| bench | baseline | fresh | Δ | status |",
+            "|-------|----------|-------|---|--------|",
+        ]
+        for name, bb in base.items():
+            fb = fresh.get(name)
+            if fb is None:
+                # a gated (GFLOP/s) bench vanishing means the gate
+                # silently stops covering it — that is itself a failure
+                # on comparable hardware (rename the baseline entry or
+                # re-record instead)
+                if bb.get("gflops") is not None and strict:
+                    failed.append(f"{name}: gated bench missing from fresh run")
+                    lines.append(f"| {name} | — | _missing from fresh run_ | | ❌ missing |")
+                else:
+                    lines.append(f"| {name} | — | _missing from fresh run_ | | ⚠️ |")
+                continue
+            if bb.get("gflops") is not None and fb.get("gflops") is not None:
+                bg, fg = bb["gflops"], fb["gflops"]
+                delta = (fg - bg) / bg if bg else 0.0
+                ok = fg >= bg * (1.0 - args.tolerance)
+                status = "✅" if ok else ("❌ regression" if strict else "⚠️ (cpu differs)")
+                if not ok and strict:
+                    failed.append(f"{name}: {bg:.1f} -> {fg:.1f} GFLOP/s ({delta * 100:+.1f}%)")
+                lines.append(
+                    f"| {name} | {fmt_gflops(bg)} GFLOP/s | {fmt_gflops(fg)} GFLOP/s "
+                    f"| {delta * 100:+.1f}% | {status} |"
+                )
+            else:
+                bs, fs = bb["median_s"], fb["median_s"]
+                delta = (fs - bs) / bs if bs else 0.0
+                # time-only entries (eigensolver, inverses) are reported
+                # but not gated: GFLOP/s entries are the contract
+                lines.append(
+                    f"| {name} | {fmt_time(bs)} | {fmt_time(fs)} | {delta * 100:+.1f}% | (info) |"
+                )
+        for name in fresh:
+            if name not in base:
+                lines.append(f"| {name} | _new (no baseline)_ | {fmt_time(fresh[name]['median_s'])} | | ℹ️ |")
+        lines += speedup_lines(fresh)
+
+    text = "\n".join(lines) + "\n"
+    print(text)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(text)
+    if failed:
+        print("BENCH GATE FAILED:", file=sys.stderr)
+        for f_ in failed:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def roadmap_cells(line):
+    stripped = line.strip()
+    if not stripped.startswith("|"):
+        return None
+    return [c.strip() for c in stripped.strip("|").split("|")]
+
+
+def expected_cells(base):
+    """row-label -> expected ROADMAP cell strings, from the baseline."""
+    want = {}
+    for label, bench in GEMM_ROWS.items():
+        b = base.get(bench)
+        if b and b.get("gflops") is not None:
+            want[label] = [fmt_gflops(b["gflops"])]
+    for label, (blocked, ql) in EIG_ROWS.items():
+        bb, qb = base.get(blocked), base.get(ql)
+        if bb and qb:
+            want[label] = [fmt_time(bb["median_s"]), fmt_time(qb["median_s"])]
+    return want
+
+
+def cmd_check_roadmap(args):
+    base_doc = load(args.baseline)
+    with open(args.roadmap) as f:
+        lines = f.read().splitlines()
+    rows = {}
+    for line in lines:
+        cells = roadmap_cells(line)
+        if cells and cells[0] in (GEMM_ROWS.keys() | EIG_ROWS.keys()):
+            rows[cells[0]] = cells[1:]
+    missing = (GEMM_ROWS.keys() | EIG_ROWS.keys()) - rows.keys()
+    if missing:
+        print(f"ROADMAP baseline tables are missing rows: {sorted(missing)}", file=sys.stderr)
+        return 1
+
+    if is_placeholder(base_doc):
+        stale = [lab for lab, cells in rows.items() if PENDING not in " ".join(cells).lower()]
+        if stale:
+            print(
+                "BENCH_baseline.json is the bootstrap placeholder but these ROADMAP "
+                f"rows already hold numbers (drifted?): {sorted(stale)}",
+                file=sys.stderr,
+            )
+            return 1
+        print("baseline placeholder + pending ROADMAP tables: consistent (bootstrap state)")
+        return 0
+
+    want = expected_cells(by_name(base_doc))
+    bad = []
+    for label, cells in want.items():
+        got = rows[label][: len(cells)]
+        if got != cells:
+            bad.append(f"  row {label}: ROADMAP says {got}, baseline says {cells}")
+    if bad:
+        print(
+            "ROADMAP baseline tables drifted from BENCH_baseline.json "
+            "(re-run `scripts/bench_gate.py record`):",
+            file=sys.stderr,
+        )
+        print("\n".join(bad), file=sys.stderr)
+        return 1
+    print(f"ROADMAP tables match BENCH_baseline.json ({len(want)} rows)")
+    return 0
+
+
+def cmd_record(args):
+    fresh_doc = load(args.fresh)
+    if is_placeholder(fresh_doc):
+        print("refusing to record: fresh results are empty/placeholder", file=sys.stderr)
+        return 1
+    out = {
+        "recorded_from": "first green bench-gate run",
+        "threads": fresh_doc.get("threads", 0),
+        "runs": fresh_doc.get("runs", 1),
+        "cpu": fresh_doc.get("cpu", "unknown"),
+        "benches": fresh_doc.get("benches", []),
+    }
+    with open(args.output, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"recorded {len(out['benches'])} baselines -> {args.output}")
+
+    if args.roadmap:
+        want = expected_cells(by_name(fresh_doc))
+        with open(args.roadmap) as f:
+            lines = f.read().splitlines()
+        replaced = 0
+        for i, line in enumerate(lines):
+            cells = roadmap_cells(line)
+            if not cells or cells[0] not in want:
+                continue
+            new = want[cells[0]]
+            # preserve indentation and any cells past the ones we own
+            indent = line[: len(line) - len(line.lstrip())]
+            tail = cells[1 + len(new) :]
+            lines[i] = indent + "| " + " | ".join([cells[0]] + new + tail) + " |"
+            replaced += 1
+        with open(args.roadmap, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"rewrote {replaced} ROADMAP baseline rows in {args.roadmap}")
+    return 0
+
+
+def cmd_is_placeholder(args):
+    try:
+        doc = load(args.baseline)
+    except FileNotFoundError:
+        return 0  # no baseline at all == needs bootstrapping
+    return 0 if is_placeholder(doc) else 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    m = sub.add_parser("merge")
+    m.add_argument("runs", nargs="+")
+    m.add_argument("-o", "--output", required=True)
+
+    g = sub.add_parser("gate")
+    g.add_argument("baseline")
+    g.add_argument("fresh")
+    g.add_argument("--tolerance", type=float, default=0.20)
+    g.add_argument("--summary")
+
+    c = sub.add_parser("check-roadmap")
+    c.add_argument("baseline")
+    c.add_argument("roadmap")
+
+    r = sub.add_parser("record")
+    r.add_argument("fresh")
+    r.add_argument("-o", "--output", required=True)
+    r.add_argument("--roadmap")
+
+    p = sub.add_parser("is-placeholder")
+    p.add_argument("baseline")
+
+    args = ap.parse_args()
+    return {
+        "merge": cmd_merge,
+        "gate": cmd_gate,
+        "check-roadmap": cmd_check_roadmap,
+        "record": cmd_record,
+        "is-placeholder": cmd_is_placeholder,
+    }[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,13 @@
 //! kernel must agree with a trivially-correct triple-loop reference on
 //! ~50 seeded random shapes — including degenerate (m=1, k=1, n=1) and
 //! ragged shapes that are not multiples of the MR/NR/MC/KC/NC tile
-//! sizes — to 1e-12 *relative Frobenius* error.
+//! sizes — to 1e-12 *relative Frobenius* error. The same shape battery
+//! also pins the runtime-dispatched SIMD micro-kernels against the
+//! scalar reference kernel at ≤1e-13 relative Frobenius (the
+//! scalar/SIMD equivalence claim CI exercises under `KFAC_SIMD=0` and
+//! default dispatch).
 
-use kfac::linalg::Mat;
+use kfac::linalg::{gemm, simd, Mat};
 use kfac::rng::Rng;
 
 /// Triple-loop ijp reference GEMM.
@@ -53,6 +57,13 @@ fn shapes() -> Vec<(usize, usize, usize)> {
         (96, 256, 40),
         (96, 257, 40),
         (130, 300, 66),
+        // edge tiles + K-tails for the widest (8×8) micro-kernel:
+        // one-past / one-short of the tile on each axis, odd K
+        (8, 8, 8),
+        (9, 7, 9),
+        (7, 9, 9),
+        (16, 17, 15),
+        (17, 15, 16),
         // K-FAC-shaped: batch × (layer+1) covariance and forward passes
         (257, 200, 257),
         (300, 101, 41),
@@ -130,6 +141,62 @@ fn variants_agree_with_each_other() {
     let nt = a.matmul_nt(&b.transpose());
     assert!(rel_frob(&tn, &nn) < 1e-13);
     assert!(rel_frob(&nt, &nn) < 1e-13);
+}
+
+#[test]
+fn every_kernel_agrees_with_scalar_on_many_shapes() {
+    // Scalar-vs-SIMD equivalence on the full 50-shape battery: each
+    // kernel the host can execute runs the packed blocked path (forced,
+    // so the small-shape cutoff cannot hide tile-edge handling) and
+    // must match the scalar kernel to ≤1e-13 relative Frobenius. This
+    // covers masked remainder lanes (m, n not multiples of MR/NR) and
+    // K-tail shapes where the packing zero-pad is load-bearing.
+    let mut rng = Rng::new(7);
+    let scalar = &simd::SCALAR;
+    for (idx, &(m, k, n)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let mut want = Mat::zeros(m, n);
+        gemm::gemm_blocked_with(scalar, m, n, k, &a.data, k, 1, &b.data, n, 1, &mut want.data);
+        for kern in simd::available_kernels() {
+            let mut got = Mat::zeros(m, n);
+            gemm::gemm_blocked_with(kern, m, n, k, &a.data, k, 1, &b.data, n, 1, &mut got.data);
+            let err = rel_frob(&got, &want);
+            assert!(
+                err < 1e-13,
+                "kernel {} shape #{idx} ({m},{k},{n}): rel frob vs scalar {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_matmul_agrees_with_forced_scalar() {
+    // Whatever kernel the process-wide dispatch picked (KFAC_SIMD or
+    // auto-detection — the CI matrix runs this under both), the public
+    // Mat::matmul path must agree with the forced scalar kernel.
+    let mut rng = Rng::new(8);
+    for &(m, k, n) in &[(257usize, 200usize, 257usize), (130, 300, 66), (96, 257, 40)] {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let got = a.matmul(&b);
+        let mut want = Mat::zeros(m, n);
+        gemm::gemm_blocked_with(
+            &simd::SCALAR,
+            m,
+            n,
+            k,
+            &a.data,
+            k,
+            1,
+            &b.data,
+            n,
+            1,
+            &mut want.data,
+        );
+        let err = rel_frob(&got, &want);
+        assert!(err < 1e-13, "({m},{k},{n}): dispatched vs scalar rel frob {err}");
+    }
 }
 
 #[test]
