@@ -1,15 +1,25 @@
 //! Benchmarks for the Fisher-approximation operations on a
 //! paper-scale architecture (the MNIST autoencoder): statistics
 //! computation, inverse refresh (task 5), preconditioner application
-//! (task 6) for both structures, and the EKFAC amortized scale-refresh
-//! path (per-example gradient projection + diagonal swap).
+//! (task 6) for both structures, the EKFAC amortized scale-refresh
+//! path (per-example gradient projection + diagonal swap), and the
+//! per-step overhead of a full K-FAC step vs SGD with the inverse
+//! rebuild amortized synchronously (t_inv) or hidden entirely behind
+//! the asynchronous background refresh (KFAC_ASYNC).
+//!
+//! Results are written as JSON (`KFAC_BENCH_JSON`, default
+//! `BENCH_fisher_ops.json`) in the same schema as the linalg bench so
+//! CI can merge them into one report.
 
 use kfac::backend::{ModelBackend, RustBackend};
-use kfac::bench::{bench, default_budget};
+use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
 use kfac::coordinator::Problem;
+use kfac::data::mnist_like;
 use kfac::fisher::stats::KfacStats;
 use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, TridiagInverse};
 use kfac::linalg::{KronBasis, SymEig};
+use kfac::nn::{Act, Arch};
+use kfac::optim::{Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 
 fn main() {
@@ -21,10 +31,12 @@ fn main() {
     let mut backend = RustBackend::new(arch.clone());
     let params = arch.sparse_init(&mut Rng::new(1));
     let (x, y) = (ds.x.clone(), ds.y.clone());
+    let mut results: Vec<(BenchResult, Option<f64>)> = Vec::new();
 
-    bench("grad_and_stats_m256", budget, || {
+    let r = bench("grad_and_stats_m256", budget, || {
         std::hint::black_box(backend.grad_and_stats(&params, &x, &y, 32, 7));
     });
+    results.push((r, None));
 
     let (_, grad, raw) = backend.grad_and_stats(&params, &x, &y, 256, 7);
     let mut stats = KfacStats::new(&arch);
@@ -42,48 +54,95 @@ fn main() {
         .min_by_key(|(_, m)| (m.rows as i64 - 256).unsigned_abs())
         .expect("at least one layer");
     let factor = aa[fi].add_diag(1.0);
-    bench(&format!("sym_eig_factor_{}(mnist_ae)", factor.rows), budget, || {
+    let r = bench(&format!("sym_eig_factor_{}(mnist_ae)", factor.rows), budget, || {
         std::hint::black_box(SymEig::new(&factor));
     });
+    results.push((r, None));
 
-    bench("blockdiag_build(mnist_ae)", budget, || {
+    let r = bench("blockdiag_build(mnist_ae)", budget, || {
         std::hint::black_box(BlockDiagInverse::build(&stats.s, gamma));
     });
-    bench("tridiag_build(mnist_ae)", budget, || {
+    results.push((r, None));
+    let r = bench("tridiag_build(mnist_ae)", budget, || {
         std::hint::black_box(TridiagInverse::build(&stats.s, gamma));
     });
-    bench("ekfac_build(mnist_ae)", budget, || {
+    results.push((r, None));
+    let r = bench("ekfac_build(mnist_ae)", budget, || {
         std::hint::black_box(EkfacInverse::build(&stats.s, gamma));
     });
+    results.push((r, None));
 
     let bd = BlockDiagInverse::build(&stats.s, gamma);
     let tri = TridiagInverse::build(&stats.s, gamma);
     let ek = EkfacInverse::build(&stats.s, gamma);
-    bench("blockdiag_apply(mnist_ae)", budget, || {
+    let r = bench("blockdiag_apply(mnist_ae)", budget, || {
         std::hint::black_box(bd.apply(&grad));
     });
-    bench("tridiag_apply(mnist_ae)", budget, || {
+    results.push((r, None));
+    let r = bench("tridiag_apply(mnist_ae)", budget, || {
         std::hint::black_box(tri.apply(&grad));
     });
-    bench("ekfac_apply(mnist_ae)", budget, || {
+    results.push((r, None));
+    let r = bench("ekfac_apply(mnist_ae)", budget, || {
         std::hint::black_box(ek.apply(&grad));
     });
+    results.push((r, None));
 
-    bench("fvp_quad_2dirs_m64", budget, || {
+    let r = bench("fvp_quad_2dirs_m64", budget, || {
         let d2 = grad.scale(0.5);
         std::hint::black_box(backend.fvp_quad(&params, &x, 64, &[&grad, &d2]));
     });
+    results.push((r, None));
 
     // EKFAC amortized scale refresh: project per-example gradients into
     // the cached eigenbasis (one forward + sampled backward + two
     // squared GEMMs per layer), then swap the diagonal in.
     let bases: Vec<KronBasis> = ek.eigenbases().expect("ekfac exposes bases").to_vec();
-    bench("ekfac_grad_sq_in_basis_m32", budget, || {
+    let r = bench("ekfac_grad_sq_in_basis_m32", budget, || {
         std::hint::black_box(backend.grad_sq_in_basis(&params, &x, &y, 32, 7, &bases));
     });
+    results.push((r, None));
     let sq = backend.grad_sq_in_basis(&params, &x, &y, 32, 7, &bases);
     let mut ek_refresh = EkfacInverse::build(&stats.s, gamma);
-    bench("ekfac_set_scales(mnist_ae)", budget, || {
+    let r = bench("ekfac_set_scales(mnist_ae)", budget, || {
         std::hint::black_box(ek_refresh.set_scales(&sq, gamma));
     });
+    results.push((r, None));
+
+    // Per-step overhead vs SGD on the scaled autoencoder: the sync
+    // refresh pays the rebuild inline every t_inv-th step (it shows up
+    // in the mean), the async refresh submits it to the background pool
+    // and only ever pays statistics + apply in the foreground.
+    let step_arch = Arch::autoencoder(&[256, 100, 40, 12, 40, 100, 256], Act::Tanh);
+    let step_ds = mnist_like::autoencoder_dataset(1000, 16, 0);
+    let m = 256;
+
+    let mut sgd_backend = RustBackend::new(step_arch.clone());
+    let mut sgd_params = step_arch.sparse_init(&mut Rng::new(1));
+    let mut sgd = Sgd::new(SgdConfig::default());
+    let mut rng = Rng::new(2);
+    let r = bench(&format!("sgd_step_m{m}"), budget, || {
+        let (x, y) = step_ds.minibatch(m, &mut rng);
+        std::hint::black_box(sgd.step(&mut sgd_backend, &mut sgd_params, &x, &y));
+    });
+    results.push((r, None));
+
+    for (label, refresh_async) in [("sync", false), ("async", true)] {
+        let mut be = RustBackend::new(step_arch.clone());
+        let mut params = step_arch.sparse_init(&mut Rng::new(1));
+        let cfg = KfacConfig { t_inv: 5, refresh_async, ..Default::default() };
+        let mut opt = Kfac::new(&step_arch, cfg);
+        let mut rng = Rng::new(2);
+        let r = bench(&format!("kfac_step_{label}_refresh_m{m}"), budget, || {
+            let (x, y) = step_ds.minibatch(m, &mut rng);
+            std::hint::black_box(opt.step(&mut be, &mut params, &x, &y));
+        });
+        results.push((r, None));
+        println!("  {label} refresh: {} background stalls", opt.refresh_stalls());
+    }
+
+    let path =
+        std::env::var("KFAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_fisher_ops.json".to_string());
+    write_results_json(std::path::Path::new(&path), &results).expect("writing bench json");
+    println!("wrote {path} ({} benches)", results.len());
 }

@@ -25,7 +25,12 @@
 //! unchanged, but a v1 reader would silently rebuild cached inverses
 //! *without* the re-estimated scales and diverge from the saved
 //! trajectory, so the version is bumped and mismatched files are
-//! rejected (both directions) instead of mis-read.
+//! rejected (both directions) instead of mis-read. v3 adds the
+//! asynchronous-refresh state (`inv_epoch` plus the `pending_*` record
+//! of an in-flight inverse build, re-submitted on resume) — again no
+//! wire change, only new tagged entries. Snapshots without async state
+//! are still written as v2, so synchronous runs stay interchangeable
+//! with pre-split readers; this build reads v2 and v3.
 
 use crate::linalg::Mat;
 use crate::nn::Params;
@@ -35,6 +40,21 @@ use std::path::Path;
 
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFACCKPT";
 pub const CHECKPOINT_VERSION: u32 = 2;
+/// Highest version this build writes: v3 when the optimizer state
+/// carries asynchronous-refresh entries, v2 otherwise.
+pub const CHECKPOINT_VERSION_ASYNC: u32 = 3;
+
+/// The version a snapshot of `opt` must be written as: v3 only when
+/// async-refresh state is present, so synchronous runs keep producing
+/// v2 files readable by pre-split builds.
+pub fn version_for(opt: &OptState) -> u32 {
+    let async_keys = ["inv_epoch", "pending_gamma", "pending_aa"];
+    if async_keys.iter().any(|k| opt.entries.contains_key(*k)) {
+        CHECKPOINT_VERSION_ASYNC
+    } else {
+        CHECKPOINT_VERSION
+    }
+}
 
 /// A full training snapshot.
 #[derive(Clone, Debug)]
@@ -252,9 +272,10 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, String> {
         return Err("not a kfac checkpoint (bad magic)".to_string());
     }
     let version = r.u32()?;
-    if version != CHECKPOINT_VERSION {
+    if !(CHECKPOINT_VERSION..=CHECKPOINT_VERSION_ASYNC).contains(&version) {
         return Err(format!(
-            "unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+            "unsupported checkpoint version {version} (this build reads \
+             {CHECKPOINT_VERSION}-{CHECKPOINT_VERSION_ASYNC})"
         ));
     }
     let iter = r.u64()? as usize;
@@ -362,6 +383,32 @@ mod tests {
         let back = from_bytes(&to_bytes(&ck)).unwrap();
         assert!(back.rng_spare.is_none());
         assert!(back.polyak.is_none());
+    }
+
+    #[test]
+    fn version_for_classifies_async_state() {
+        let ck = sample();
+        assert_eq!(version_for(&ck.opt), CHECKPOINT_VERSION, "sync state stays v2");
+        let mut with_epoch = ck.opt.clone();
+        with_epoch.set_scalar("inv_epoch", 4.0);
+        assert_eq!(version_for(&with_epoch), CHECKPOINT_VERSION_ASYNC);
+        let mut with_pending = ck.opt.clone();
+        with_pending.set_scalar("pending_gamma", 0.5);
+        with_pending.set_mats("pending_aa", vec![Mat::eye(2)]);
+        assert_eq!(version_for(&with_pending), CHECKPOINT_VERSION_ASYNC);
+    }
+
+    #[test]
+    fn v3_checkpoints_roundtrip() {
+        let mut ck = sample();
+        ck.opt.set_scalar("inv_epoch", 4.0);
+        ck.opt.set_scalar("pending_gamma", 0.25);
+        ck.opt.set_mats("pending_aa", vec![Mat::eye(3)]);
+        ck.version = version_for(&ck.opt);
+        assert_eq!(ck.version, CHECKPOINT_VERSION_ASYNC);
+        let back = from_bytes(&to_bytes(&ck)).unwrap();
+        assert_eq!(back.version, CHECKPOINT_VERSION_ASYNC);
+        assert_eq!(back.opt, ck.opt);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use crate::backend::{ModelBackend, RustBackend};
 use crate::bench::Timer;
-use crate::coordinator::checkpoint::{self, Checkpoint, CHECKPOINT_VERSION};
+use crate::coordinator::checkpoint::{self, Checkpoint};
 use crate::data::{curves_like, faces_like, mnist_like, Dataset};
 use crate::linalg::Mat;
 use crate::nn::{Act, Arch, Params};
@@ -492,8 +492,12 @@ impl<'a> TrainSession<'a> {
             if let Some((path, every)) = &checkpoint_cfg {
                 if k % every == 0 || k == iters {
                     let (rng_words, rng_spare) = rng.state();
+                    // a mid-flight async build is checkpointed by its
+                    // inputs (see Kfac::state), so the snapshot never
+                    // blocks on the background job
+                    let opt_state = opt.state();
                     let ck = Checkpoint {
-                        version: CHECKPOINT_VERSION,
+                        version: checkpoint::version_for(&opt_state),
                         iter: k,
                         cases,
                         time_s: train_time,
@@ -501,7 +505,7 @@ impl<'a> TrainSession<'a> {
                         rng_spare,
                         params: params.clone(),
                         polyak: avg.as_ref().map(|a| (a.xi, a.get().cloned())),
-                        opt: opt.state(),
+                        opt: opt_state,
                     };
                     checkpoint::save(path, &ck)
                         .map_err(|e| format!("writing checkpoint {}: {e}", path.display()))?;

@@ -86,10 +86,34 @@ impl KfacStats {
         (1.0 - 1.0 / k as f64).min(0.95)
     }
 
-    /// Fold in one mini-batch estimate.
+    /// Decay schedule when statistics are only folded in every `t_cov`
+    /// steps. The per-step schedule retains a fraction `0.95ⁿ` of an old
+    /// batch after n further steps; updating once per `t_cov` steps must
+    /// match that *per step*, so the asymptotic cap becomes
+    /// `0.95^t_cov` — n/t_cov strided updates then retain
+    /// `(0.95^t_cov)^(n/t_cov) = 0.95ⁿ`, the same stationary weighting
+    /// as per-step accumulation. Naively reusing the per-step cap would
+    /// silently stretch the statistics' memory by a factor of `t_cov`.
+    /// The warmup term `1 − 1/k` is already expressed in *updates*, not
+    /// steps (it makes the EMA an exact running mean of its first
+    /// batches), so it stays unscaled.
+    pub fn epsilon_for_period(k: usize, t_cov: usize) -> f64 {
+        let cap = if t_cov <= 1 { 0.95 } else { 0.95f64.powi(t_cov as i32) };
+        (1.0 - 1.0 / k as f64).min(cap)
+    }
+
+    /// Fold in one mini-batch estimate (per-step accumulation).
     pub fn update(&mut self, batch: &RawStats) {
+        self.update_with_period(batch, 1);
+    }
+
+    /// Fold in one mini-batch estimate collected every `t_cov` steps,
+    /// with the decay scaled so the stationary statistics match
+    /// per-step accumulation in expectation. `t_cov = 1` is bit-exactly
+    /// the original per-step update.
+    pub fn update_with_period(&mut self, batch: &RawStats, t_cov: usize) {
         self.k += 1;
-        let eps = Self::epsilon(self.k);
+        let eps = Self::epsilon_for_period(self.k, t_cov);
         let blend = |dst: &mut Vec<Mat>, src: &Vec<Mat>| {
             for (d, s) in dst.iter_mut().zip(src.iter()) {
                 d.ema(eps, 1.0 - eps, s);
@@ -168,6 +192,134 @@ mod tests {
         assert!((KfacStats::epsilon(1) - 0.0).abs() < 1e-15);
         assert!((KfacStats::epsilon(2) - 0.5).abs() < 1e-15);
         assert!((KfacStats::epsilon(100) - 0.95).abs() < 1e-15);
+    }
+
+    #[test]
+    fn period_schedule_scales_the_cap_only() {
+        // t_cov ≤ 1 is bit-exactly the per-step schedule.
+        for k in [1usize, 2, 3, 19, 20, 100] {
+            let per_step = KfacStats::epsilon(k).to_bits();
+            assert_eq!(KfacStats::epsilon_for_period(k, 1).to_bits(), per_step);
+            assert_eq!(KfacStats::epsilon_for_period(k, 0).to_bits(), per_step);
+        }
+        // the asymptotic cap compounds per skipped step…
+        assert!((KfacStats::epsilon_for_period(100, 3) - 0.95f64.powi(3)).abs() < 1e-15);
+        assert!((KfacStats::epsilon_for_period(100, 5) - 0.95f64.powi(5)).abs() < 1e-15);
+        // …while the warmup (counted in updates) is unchanged
+        assert!((KfacStats::epsilon_for_period(1, 5) - 0.0).abs() < 1e-15);
+        assert!((KfacStats::epsilon_for_period(2, 5) - 0.5).abs() < 1e-15);
+    }
+
+    fn const_stats(arch: &Arch, v: f64) -> RawStats {
+        let mut st = RawStats::zeros(arch);
+        for m in st
+            .aa
+            .iter_mut()
+            .chain(st.aa_off.iter_mut())
+            .chain(st.gg.iter_mut())
+            .chain(st.gg_off.iter_mut())
+        {
+            *m = Mat::filled(m.rows, m.cols, v);
+        }
+        st
+    }
+
+    #[test]
+    fn update_with_period_one_is_bitwise_update() {
+        let (net, p, x) = setup();
+        let mut rng = Rng::new(7);
+        let mut a = KfacStats::new(&net.arch);
+        let mut b = KfacStats::new(&net.arch);
+        for _ in 0..5 {
+            let fwd = net.forward(&p, &x);
+            let gs = net.sampled_backward(&p, &fwd, &mut rng);
+            let st = RawStats::from_batch(&fwd, &gs);
+            a.update(&st);
+            b.update_with_period(&st, 1);
+        }
+        assert_eq!(a.k, b.k);
+        for (ma, mb) in a.s.aa.iter().chain(a.s.gg.iter()).zip(b.s.aa.iter().chain(b.s.gg.iter())) {
+            for (va, vb) in ma.data.iter().zip(mb.data.iter()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn strided_updates_match_per_step_stationary_decay() {
+        // The satellite bugfix: statistics folded in every t_cov steps
+        // must decay old data at the same *per-step* rate as per-step
+        // accumulation. Feed a constant c, then switch to d: after n
+        // further steps both schedules must retain (c−d)·0.95ⁿ, while
+        // the naive (unscaled) strided EMA retains (c−d)·0.95^(n/t) —
+        // i.e. remembers t× too long.
+        let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+        let (c, d, t, n) = (3.0, 1.0, 3usize, 30usize);
+        let bc = const_stats(&arch, c);
+        let bd = const_stats(&arch, d);
+        let mut per_step = KfacStats::new(&arch);
+        let mut strided = KfacStats::new(&arch);
+        let mut naive = KfacStats::new(&arch);
+        // warm past every schedule's cap; the EMA of a constant is c exactly
+        for _ in 0..30 {
+            per_step.update(&bc);
+            strided.update_with_period(&bc, t);
+            naive.update(&bc);
+        }
+        for i in 0..n {
+            per_step.update(&bd);
+            if (i + 1) % t == 0 {
+                strided.update_with_period(&bd, t);
+                naive.update(&bd); // unscaled decay at the strided cadence
+            }
+        }
+        let p = per_step.s.gg[0].at(0, 0);
+        let s = strided.s.gg[0].at(0, 0);
+        let nv = naive.s.gg[0].at(0, 0);
+        let want = d + (c - d) * 0.95f64.powi(n as i32);
+        assert!((p - want).abs() < 1e-12, "per-step {p} vs analytic {want}");
+        assert!((s - want).abs() < 1e-12, "strided {s} vs analytic {want}");
+        let naive_want = d + (c - d) * 0.95f64.powi((n / t) as i32);
+        assert!((nv - naive_want).abs() < 1e-12);
+        assert!(
+            (nv - p).abs() > 0.5,
+            "naive strided EMA should visibly over-remember: {nv} vs {p}"
+        );
+    }
+
+    #[test]
+    fn strided_ema_dense_checks_against_exact_fisher_blocks() {
+        // Dense check against fisher/exact.rs: a t_cov = 3 strided EMA
+        // over sampled-target batches must still converge to the exact
+        // Ā/G blocks. Ā is deterministic given x (exact immediately);
+        // G is Monte-Carlo with effective sample size ≈ 13 updates ×
+        // 64 rows, so the bound is generous.
+        let arch = Arch::new(
+            vec![6, 5, 4, 3],
+            vec![Act::Tanh, Act::Tanh, Act::Identity],
+            LossKind::SoftmaxCe,
+        );
+        let mut rng = Rng::new(11);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(64, 6, 1.0, &mut rng);
+        let net = Net::new(arch);
+        let eb = crate::fisher::exact::ExactBlocks::compute(&net, &p, &x, 0, 3);
+        let t_cov = 3usize;
+        let mut ema = KfacStats::new(&net.arch);
+        let fwd = net.forward(&p, &x);
+        for _ in 0..200 {
+            let gs = net.sampled_backward(&p, &fwd, &mut rng);
+            let st = RawStats::from_batch(&fwd, &gs);
+            ema.update_with_period(&st, t_cov);
+        }
+        for i in 0..3 {
+            let aa_err = ema.s.aa[i].sub(&eb.aa[i][i]).max_abs();
+            let aa_scale = eb.aa[i][i].max_abs().max(1e-6);
+            assert!(aa_err / aa_scale < 1e-10, "aa[{i}] rel err {}", aa_err / aa_scale);
+            let gg_err = ema.s.gg[i].sub(&eb.gg[i][i]).max_abs();
+            let gg_scale = eb.gg[i][i].max_abs().max(1e-6);
+            assert!(gg_err / gg_scale < 0.35, "gg[{i}] rel err {}", gg_err / gg_scale);
+        }
     }
 
     #[test]

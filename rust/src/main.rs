@@ -36,6 +36,8 @@ fn main() {
                  \x20              (preconditioners: {})\n\
                  \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
                  \x20              --t-scale N  (EKFAC scale-refresh period; 0 disables)\n\
+                 \x20              --t-cov N --t-inv N  (statistics / inverse-rebuild periods;\n\
+                 \x20              KFAC_ASYNC=1 rebuilds in the background, one epoch stale)\n\
                  \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
                  \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
                  \x20              --checkpoint PATH --checkpoint-every N --resume PATH\n\
@@ -105,6 +107,11 @@ fn build_optimizer(args: &Args, arch: &Arch) -> Box<dyn Optimizer> {
             precond,
             momentum: !args.get_flag("no-momentum"),
             lambda0: args.get_f64("lambda0", 150.0),
+            // split refresh cadences: statistics accumulation vs
+            // inverse rebuild (KFAC_ASYNC=1 moves the rebuild to the
+            // background pool via KfacConfig::default)
+            t_cov: args.get_usize("t-cov", defaults.t_cov),
+            t_inv: args.get_usize("t-inv", defaults.t_inv),
             // amortized EKFAC scale re-estimation cadence (ignored by
             // structures without re-estimable scales)
             t_scale: args.get_usize("t-scale", defaults.t_scale),

@@ -26,6 +26,15 @@ use crate::fisher::{FisherInverse, KfacStats, PrecondRef, RawStats};
 use crate::linalg::Mat;
 use crate::nn::{Arch, Params};
 use crate::optim::optimizer::{check_dims, check_mat_shapes, OptState, Optimizer, StepInfo};
+use crate::par::JobHandle;
+use std::sync::Arc;
+
+/// Default for [`KfacConfig::refresh_async`]: the `KFAC_ASYNC`
+/// environment variable. Anything other than "1"/"true"/"on" (unset,
+/// empty, "0", …) selects the deterministic synchronous path.
+fn refresh_async_from_env() -> bool {
+    matches!(std::env::var("KFAC_ASYNC").as_deref(), Ok("1") | Ok("true") | Ok("on"))
+}
 
 /// Hyper-parameters. The defaults are the paper's (Sections 6 and 8).
 #[derive(Clone)]
@@ -40,10 +49,21 @@ pub struct KfacConfig {
     pub eta: f64,
     /// λ-adaptation period T₁ (paper: 5).
     pub t1: usize,
-    /// γ-adaptation period T₂ (paper: 20; must be a multiple of T₃).
+    /// γ-adaptation period T₂ (paper: 20; must be a multiple of the
+    /// inverse-rebuild period `t_inv`).
     pub t2: usize,
-    /// Inverse-refresh period T₃ (paper: 20).
-    pub t3: usize,
+    /// Statistics-accumulation period: factor statistics are folded in
+    /// every `t_cov` iterations, with the EMA decay scaled so the
+    /// stationary estimate matches per-step accumulation in
+    /// expectation. 1 (or 0) accumulates every step — the paper's
+    /// setting, and bit-identical to the pre-split behaviour.
+    pub t_cov: usize,
+    /// Inverse-rebuild period (the paper's T₃: 20). The old single `t3`
+    /// cadence is split into `t_cov`/`t_inv` so statistics can stay
+    /// fresh while the expensive rebuild stays amortized — or, with
+    /// [`refresh_async`](KfacConfig::refresh_async), gets hidden
+    /// entirely.
+    pub t_inv: usize,
     /// Scale-refresh period T_scale for eigenbasis-diagonal
     /// preconditioners (EKFAC, George et al. 2018): every T_scale
     /// iterations the diagonal scales of the cached inverse are
@@ -52,6 +72,17 @@ pub struct KfacConfig {
     /// T₃-amortized eigendecompositions enable. 0 disables; ignored by
     /// structures without re-estimable scales (block-diag/tridiag).
     pub t_scale: usize,
+    /// Rebuild the inverse **asynchronously**: on each `t_inv` boundary
+    /// past bootstrap, snapshot the statistics + γ and submit the
+    /// per-layer factorization to the background pool, keep stepping on
+    /// the previous epoch's inverse, and swap the finished build in
+    /// atomically at the next boundary (stale-but-consistent). The T₂
+    /// γ line search is disabled in this mode; γ follows the paper's
+    /// §6.6 default √(λ+η) at each rebuild. Defaults from the
+    /// `KFAC_ASYNC` environment variable ("1"/"true"/"on" to enable);
+    /// `false` is the deterministic synchronous path, bit-identical to
+    /// the pre-split `t3` cadence.
+    pub refresh_async: bool,
     /// λ decay ω₁ (paper: (19/20)^T₁).
     pub omega1: f64,
     /// γ step ω₂ (paper: sqrt(19/20)^T₂).
@@ -76,8 +107,10 @@ impl std::fmt::Debug for KfacConfig {
             .field("eta", &self.eta)
             .field("t1", &self.t1)
             .field("t2", &self.t2)
-            .field("t3", &self.t3)
+            .field("t_cov", &self.t_cov)
+            .field("t_inv", &self.t_inv)
             .field("t_scale", &self.t_scale)
+            .field("refresh_async", &self.refresh_async)
             .finish()
     }
 }
@@ -93,8 +126,10 @@ impl Default for KfacConfig {
             eta: 1e-5,
             t1,
             t2,
-            t3: 20,
+            t_cov: 1,
+            t_inv: 20,
             t_scale: 5,
+            refresh_async: refresh_async_from_env(),
             omega1: (19.0_f64 / 20.0).powi(t1 as i32),
             omega2: (19.0_f64 / 20.0).sqrt().powi(t2 as i32),
             tau1: 1.0 / 8.0,
@@ -135,6 +170,32 @@ struct ScaleState {
     k: usize,
 }
 
+/// An inverse rebuild in flight on the background pool: the detached
+/// job plus the exact inputs it was submitted with, kept so a
+/// checkpoint taken mid-flight can record them and resume by
+/// re-submitting the identical (deterministic) build.
+struct PendingBuild {
+    handle: JobHandle<Box<dyn FisherInverse + Send>>,
+    /// Statistics snapshot the job is factorizing (shared with the job
+    /// closure — no second copy).
+    snap: Arc<RawStats>,
+    /// γ the job is building with.
+    gamma: f64,
+    /// Iteration the job was submitted at (diagnostic + checkpoint).
+    submitted_k: usize,
+}
+
+/// Submit a preconditioner build as a detached pool job. Builds are
+/// deterministic in `(snap, gamma)` and touch nothing else, so the job
+/// produces the same bits whether it runs on a worker or inline.
+fn spawn_precond_build(
+    precond: PrecondRef,
+    snap: Arc<RawStats>,
+    gamma: f64,
+) -> JobHandle<Box<dyn FisherInverse + Send>> {
+    crate::par::spawn_job(move || precond.build(&snap, gamma))
+}
+
 /// K-FAC optimizer state.
 pub struct Kfac {
     pub cfg: KfacConfig,
@@ -142,6 +203,16 @@ pub struct Kfac {
     pub lambda: f64,
     pub gamma: f64,
     inv: Option<Box<dyn FisherInverse + Send>>,
+    /// Epoch tag of the cached inverse: incremented on every install
+    /// (bootstrap, synchronous rebuild, or asynchronous swap), so a
+    /// step's [`StepInfo::inv_epoch`] identifies exactly which inverse
+    /// preconditioned it.
+    inv_epoch: usize,
+    /// Asynchronous rebuild in flight, if any (`refresh_async` only).
+    pending: Option<PendingBuild>,
+    /// Boundaries that had to block on an unfinished background build
+    /// (diagnostic only; not checkpointed).
+    stalls: usize,
     /// The (stats, γ) snapshot the cached inverse was built from —
     /// checkpointed so resume can rebuild `inv` bit-exactly.
     refresh: Option<(RawStats, f64)>,
@@ -162,6 +233,9 @@ impl Kfac {
             lambda,
             gamma,
             inv: None,
+            inv_epoch: 0,
+            pending: None,
+            stalls: 0,
             refresh: None,
             scale: None,
             delta_prev: None,
@@ -172,6 +246,29 @@ impl Kfac {
     /// Current iteration count.
     pub fn iteration(&self) -> usize {
         self.k
+    }
+
+    /// Epoch tag of the currently installed inverse (0 = none yet).
+    pub fn inverse_epoch(&self) -> usize {
+        self.inv_epoch
+    }
+
+    /// How many `t_inv` boundaries had to block on a background build
+    /// that had not finished (async mode; 0 means the refresh cost was
+    /// fully hidden).
+    pub fn refresh_stalls(&self) -> usize {
+        self.stalls
+    }
+
+    /// Install a freshly built inverse with the `(snap, gamma)` it was
+    /// built from, advancing the epoch tag. Re-estimated EKFAC scales
+    /// live in the old eigenbasis, so a new basis starts a fresh
+    /// second-moment epoch.
+    fn install_inverse(&mut self, inv: Box<dyn FisherInverse + Send>, snap: RawStats, gamma: f64) {
+        self.inv = Some(inv);
+        self.inv_epoch += 1;
+        self.refresh = Some((snap, gamma));
+        self.scale = None;
     }
 
     /// The previous iteration's update δ₀ (the momentum direction).
@@ -231,18 +328,54 @@ impl Optimizer for Kfac {
         let stats_rows = ((cfg.tau1 * m as f64).ceil() as usize).clamp(1, m);
         let fvp_rows = ((cfg.tau2 * m as f64).ceil() as usize).clamp(1, m);
 
-        // (1) gradient + statistics
-        let (loss_raw, mut grad, raw_stats) =
-            backend.grad_and_stats(params, x, y, stats_rows, k as u64);
+        // (1) gradient + statistics (statistics only on t_cov
+        // boundaries; a plain gradient pass otherwise)
+        let t_cov = cfg.t_cov.max(1);
+        let accumulate = self.stats.k == 0 || k % t_cov == 0;
+        let (loss_raw, mut grad, raw_stats) = if accumulate {
+            let (l, g, raw) = backend.grad_and_stats(params, x, y, stats_rows, k as u64);
+            (l, g, Some(raw))
+        } else {
+            let (l, g) = backend.grad(params, x, y);
+            (l, g, None)
+        };
         let h0 = loss_raw + 0.5 * cfg.eta * params.norm_sq();
         grad.axpy(cfg.eta, params);
 
-        // (2) online factor estimates
-        self.stats.update(&raw_stats);
+        // (2) online factor estimates, decay scaled to the cadence
+        if let Some(raw) = &raw_stats {
+            self.stats.update_with_period(raw, t_cov);
+        }
 
-        // (3) candidate γ set (Section 6.6)
-        let adjust_gamma = cfg.t2 > 0 && k % cfg.t2 == 0;
-        let refresh_inv = self.inv.is_none() || k <= 3 || (cfg.t3 > 0 && k % cfg.t3 == 0);
+        // (3) refresh cadence. Bootstrap (first inverses) always builds
+        // inline. Past bootstrap, a synchronous run rebuilds on the
+        // boundary inside the candidate loop below; an asynchronous run
+        // instead collects/installs the previous boundary's background
+        // build and submits the next one, stepping on the stale-but-
+        // consistent previous epoch in between (the T₂ γ search needs
+        // per-candidate rebuilds, so it is disabled in async mode and γ
+        // follows the §6.6 default √(λ+η)).
+        let bootstrap = self.inv.is_none() || k <= 3;
+        let boundary = cfg.t_inv > 0 && k % cfg.t_inv == 0;
+        let run_async = cfg.refresh_async && !bootstrap;
+        if run_async && boundary {
+            if let Some(p) = self.pending.take() {
+                if !p.handle.is_done() {
+                    self.stalls += 1;
+                }
+                let inv = p.handle.collect();
+                let snap = Arc::try_unwrap(p.snap).unwrap_or_else(|a| (*a).clone());
+                self.install_inverse(inv, snap, p.gamma);
+            }
+            self.gamma = (self.lambda + cfg.eta).sqrt().clamp(cfg.gamma_min, cfg.gamma_max);
+            let snap = Arc::new(self.stats.s.clone());
+            let handle = spawn_precond_build(cfg.precond.clone(), Arc::clone(&snap), self.gamma);
+            self.pending = Some(PendingBuild { handle, snap, gamma: self.gamma, submitted_k: k });
+        }
+
+        // candidate γ set (Section 6.6)
+        let adjust_gamma = !run_async && cfg.t2 > 0 && k % cfg.t2 == 0;
+        let refresh_inv = !run_async && (bootstrap || boundary);
         let gammas: Vec<f64> = if adjust_gamma {
             vec![
                 self.gamma,
@@ -303,15 +436,13 @@ impl Optimizer for Kfac {
         let cand = best.expect("at least one gamma candidate");
         self.gamma = cand.gamma;
         if let Some(inv) = cand.inv {
-            self.inv = Some(inv);
             // snapshot the build inputs so checkpoints can rebuild the
             // cached inverse bit-exactly on resume — a stats memcpy per
             // refresh, negligible next to the O(n³) factorizations the
             // refresh itself just performed
-            self.refresh = Some((self.stats.s.clone(), self.gamma));
-            // re-estimated scales live in the old eigenbasis — a new
-            // basis starts a fresh second-moment epoch
-            self.scale = None;
+            let snap = self.stats.s.clone();
+            let gamma = self.gamma;
+            self.install_inverse(inv, snap, gamma);
         }
 
         // assemble δ = αΔ (+ μ δ₀)
@@ -372,8 +503,14 @@ impl Optimizer for Kfac {
                     }
                     None => self.scale = Some(ScaleState { s: sq, k: 1 }),
                 }
+                // the scales re-damp with the γ of the *installed*
+                // eigenbasis epoch: in async mode self.gamma may
+                // already belong to the in-flight build, so the
+                // re-estimation must apply to the epoch it was
+                // measured against (the refresh record's γ)
+                let g_live = self.refresh.as_ref().map(|(_, g)| *g).unwrap_or(self.gamma);
                 let sc = self.scale.as_ref().expect("scale state just set");
-                self.inv.as_mut().expect("inverse cache").set_scales(&sc.s, self.gamma);
+                self.inv.as_mut().expect("inverse cache").set_scales(&sc.s, g_live);
             }
         }
 
@@ -386,6 +523,7 @@ impl Optimizer for Kfac {
             gamma: Some(self.gamma),
             rho,
             delta_norm: Some(delta_norm),
+            inv_epoch: Some(self.inv_epoch),
         }
     }
 
@@ -413,6 +551,22 @@ impl Optimizer for Kfac {
         if let Some(sc) = &self.scale {
             st.set_scalar("scale_k", sc.k as f64);
             st.set_mats("scale_s", sc.s.clone());
+        }
+        // Async-only keys (a synchronous snapshot stays bit-compatible
+        // with the pre-split format). A checkpoint cannot wait on the
+        // background job, so a mid-flight snapshot records the job's
+        // *inputs*; load_state re-submits the identical deterministic
+        // build, and the resumed run collects it at the same boundary.
+        if self.cfg.refresh_async {
+            st.set_scalar("inv_epoch", self.inv_epoch as f64);
+        }
+        if let Some(p) = &self.pending {
+            st.set_scalar("pending_gamma", p.gamma);
+            st.set_scalar("pending_k", p.submitted_k as f64);
+            st.set_mats("pending_aa", p.snap.aa.clone());
+            st.set_mats("pending_aa_off", p.snap.aa_off.clone());
+            st.set_mats("pending_gg", p.snap.gg.clone());
+            st.set_mats("pending_gg_off", p.snap.gg_off.clone());
         }
         st
     }
@@ -489,11 +643,42 @@ impl Optimizer for Kfac {
             _ => None,
         };
         // re-apply the running scales on top of the rebuilt inverse so
-        // the resumed trajectory is bit-exact (γ has not changed since
-        // the scales were applied: γ changes only on rebuilds, which
-        // reset the scale state)
+        // the resumed trajectory is bit-exact, with the γ of the
+        // installed epoch (the refresh record's — in async mode
+        // self.gamma may already belong to an in-flight build)
+        let g_live = self.refresh.as_ref().map(|(_, g)| *g).unwrap_or(self.gamma);
         if let (Some(sc), Some(inv)) = (self.scale.as_ref(), self.inv.as_mut()) {
-            inv.set_scales(&sc.s, self.gamma);
+            inv.set_scales(&sc.s, g_live);
+        }
+        // Epoch tag: async checkpoints carry it; for pre-split /
+        // synchronous snapshots start the count at whether an inverse
+        // exists (the tag is diagnostic — the trajectory never reads it).
+        self.inv_epoch = match st.scalar("inv_epoch") {
+            Some(v) => v as usize,
+            None => usize::from(self.inv.is_some()),
+        };
+        // Mid-flight background build: re-submit the recorded inputs so
+        // the resumed run collects the identical build at the same
+        // boundary. A synchronous session discards the pending record —
+        // its own cadence rebuilds from live statistics at the boundary.
+        self.pending = None;
+        if self.cfg.refresh_async {
+            if let (Some(pg), Some(pk), Some(paa)) =
+                (st.scalar("pending_gamma"), st.scalar("pending_k"), st.mats("pending_aa"))
+            {
+                check_mat_shapes("pending_aa", paa, &self.stats.s.aa)?;
+                let snap = RawStats {
+                    aa: paa.to_vec(),
+                    aa_off: st.require_mats("pending_aa_off")?.to_vec(),
+                    gg: st.require_mats("pending_gg")?.to_vec(),
+                    gg_off: st.require_mats("pending_gg_off")?.to_vec(),
+                };
+                check_mat_shapes("pending_gg", &snap.gg, &self.stats.s.gg)?;
+                let snap = Arc::new(snap);
+                let handle = spawn_precond_build(self.cfg.precond.clone(), Arc::clone(&snap), pg);
+                self.pending =
+                    Some(PendingBuild { handle, snap, gamma: pg, submitted_k: pk as usize });
+            }
         }
         Ok(())
     }
@@ -545,7 +730,12 @@ mod tests {
             let name = p.name().to_string();
             let (arch, mut params, x, y) = toy_problem(1);
             let mut backend = RustBackend::new(arch.clone());
-            let cfg = KfacConfig { precond: p, lambda0: 10.0, ..Default::default() };
+            let cfg = KfacConfig {
+                precond: p,
+                lambda0: 10.0,
+                refresh_async: false,
+                ..Default::default()
+            };
             let mut opt = Kfac::new(&arch, cfg);
             let first = {
                 use crate::backend::ModelBackend;
@@ -571,7 +761,8 @@ mod tests {
         let mut backend = RustBackend::new(arch.clone());
         // t_scale = 2: the amortized scale re-estimation is active on
         // the training path, not just the default cadence
-        let cfg = KfacConfig { lambda0: 10.0, t_scale: 2, ..KfacConfig::ekfac() };
+        let cfg =
+            KfacConfig { lambda0: 10.0, t_scale: 2, refresh_async: false, ..KfacConfig::ekfac() };
         let mut opt = Kfac::new(&arch, cfg);
         let first = {
             use crate::backend::ModelBackend;
@@ -618,7 +809,13 @@ mod tests {
     fn gamma_adjusted_on_t2_boundary() {
         let (arch, mut params, x, y) = toy_problem(4);
         let mut backend = RustBackend::new(arch.clone());
-        let cfg = KfacConfig { t2: 2, t3: 2, lambda0: 10.0, ..Default::default() };
+        let cfg = KfacConfig {
+            t2: 2,
+            t_inv: 2,
+            lambda0: 10.0,
+            refresh_async: false,
+            ..Default::default()
+        };
         let mut opt = Kfac::new(&arch, cfg);
         let g0 = opt.gamma;
         opt.step(&mut backend, &mut params, &x, &y);
@@ -639,8 +836,10 @@ mod tests {
         // guarantees a non-positive model value even with bad γ.
         let (arch, mut params, x, y) = toy_problem(5);
         let mut backend = RustBackend::new(arch.clone());
-        let mut opt =
-            Kfac::new(&arch, KfacConfig { lambda0: 0.01, ..KfacConfig::block_diag() });
+        let mut opt = Kfac::new(
+            &arch,
+            KfacConfig { lambda0: 0.01, refresh_async: false, ..KfacConfig::block_diag() },
+        );
         for _ in 0..5 {
             let info = opt.step(&mut backend, &mut params, &x, &y);
             assert!(info.model_value.unwrap() <= 1e-12);
@@ -653,7 +852,8 @@ mod tests {
         // that both continue on bit-identical trajectories.
         let (arch, mut params_a, x, y) = toy_problem(6);
         let mut backend = RustBackend::new(arch.clone());
-        let cfg = KfacConfig { lambda0: 10.0, t3: 4, ..Default::default() };
+        let cfg =
+            KfacConfig { lambda0: 10.0, t_inv: 4, refresh_async: false, ..Default::default() };
         let mut opt_a = Kfac::new(&arch, cfg.clone());
         for _ in 0..7 {
             opt_a.step(&mut backend, &mut params_a, &x, &y);
@@ -678,7 +878,13 @@ mod tests {
         // the restored optimizer must continue bit-identically.
         let (arch, mut params_a, x, y) = toy_problem(8);
         let mut backend = RustBackend::new(arch.clone());
-        let cfg = KfacConfig { lambda0: 10.0, t3: 6, t_scale: 2, ..KfacConfig::ekfac() };
+        let cfg = KfacConfig {
+            lambda0: 10.0,
+            t_inv: 6,
+            t_scale: 2,
+            refresh_async: false,
+            ..KfacConfig::ekfac()
+        };
         let mut opt_a = Kfac::new(&arch, cfg.clone());
         // scale refreshes at k = 2, 4, 6, 8; the rebuilds at k ≤ 3 and
         // k = 6 reset the epoch, so after k = 8 the live epoch holds
@@ -736,5 +942,84 @@ mod tests {
         let ek = Kfac::new(&arch, KfacConfig::ekfac()).state();
         let err = opt.load_state(&ek).unwrap_err();
         assert!(err.contains("preconditioner"), "wrong precond must be rejected: {err}");
+    }
+
+    #[test]
+    fn async_steps_use_previous_epoch_until_swap() {
+        // Staleness contract: bootstrap installs epochs 1..3 inline; a
+        // t_inv boundary submits a background build and keeps stepping
+        // on the previous epoch, which swaps in exactly at the *next*
+        // boundary. With t_inv = 4 over 12 steps the per-step epoch
+        // tags must be precisely this sequence — any other value would
+        // mean a step observed a half-swapped or early-swapped inverse.
+        let (arch, mut params, x, y) = toy_problem(10);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg =
+            KfacConfig { lambda0: 10.0, t_inv: 4, refresh_async: true, ..Default::default() };
+        let mut opt = Kfac::new(&arch, cfg);
+        let mut epochs = Vec::new();
+        for _ in 0..12 {
+            let info = opt.step(&mut backend, &mut params, &x, &y);
+            assert!(info.loss.is_finite());
+            epochs.push(info.inv_epoch.expect("kfac tags every step"));
+        }
+        assert_eq!(epochs, vec![1, 2, 3, 3, 3, 3, 3, 4, 4, 4, 4, 5]);
+        assert_eq!(opt.inverse_epoch(), 5);
+    }
+
+    #[test]
+    fn async_trajectory_is_deterministic() {
+        // The background build is deterministic in its snapshot and is
+        // collected at a fixed boundary, so two async runs must agree
+        // bit-for-bit — the invariant the mid-flight checkpoint resume
+        // leans on.
+        let run = || {
+            let (arch, mut params, x, y) = toy_problem(11);
+            let mut backend = RustBackend::new(arch.clone());
+            let cfg =
+                KfacConfig { lambda0: 10.0, t_inv: 3, refresh_async: true, ..Default::default() };
+            let mut opt = Kfac::new(&arch, cfg);
+            let mut losses = Vec::new();
+            for _ in 0..10 {
+                losses.push(opt.step(&mut backend, &mut params, &x, &y).loss.to_bits());
+            }
+            (params, losses)
+        };
+        let (pa, la) = run();
+        let (pb, lb) = run();
+        assert_eq!(la, lb, "loss trace must be bit-identical");
+        assert!(pa == pb, "params must be bit-identical");
+    }
+
+    #[test]
+    fn ekfac_async_scale_epoch_association() {
+        // EKFAC t_scale re-estimation measures second moments in the
+        // *installed* eigenbasis, so it must apply to that epoch: the
+        // running scale state survives boundaries that merely submit a
+        // build (k = 4, refreshes at k = 4 and 6 → scale_k = 2 after 7
+        // steps) and resets when the swap actually lands (k = 8 install
+        // precedes the re-seed → scale_k = 1 after 8 steps).
+        let (arch, mut params, x, y) = toy_problem(12);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig {
+            lambda0: 10.0,
+            t_inv: 4,
+            t_scale: 2,
+            refresh_async: true,
+            ..KfacConfig::ekfac()
+        };
+        let mut opt = Kfac::new(&arch, cfg);
+        for _ in 0..7 {
+            opt.step(&mut backend, &mut params, &x, &y);
+        }
+        assert_eq!(opt.state().scalar("scale_k"), Some(2.0));
+        assert_eq!(opt.inverse_epoch(), 3, "no swap yet: still the bootstrap epoch");
+        opt.step(&mut backend, &mut params, &x, &y);
+        assert_eq!(opt.inverse_epoch(), 4, "k = 8 installs the k = 4 build");
+        assert_eq!(
+            opt.state().scalar("scale_k"),
+            Some(1.0),
+            "swap resets the scale epoch; the k = 8 estimate re-seeds it"
+        );
     }
 }

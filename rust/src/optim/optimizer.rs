@@ -37,6 +37,11 @@ pub struct StepInfo {
     pub rho: Option<f64>,
     /// Update norm ‖δ‖₂.
     pub delta_norm: Option<f64>,
+    /// Epoch tag of the approximate Fisher inverse the step's proposal
+    /// was preconditioned with (K-FAC only; increments on every install,
+    /// so an asynchronous refresh in flight leaves this at the previous
+    /// epoch until its swap completes).
+    pub inv_epoch: Option<usize>,
 }
 
 impl StepInfo {

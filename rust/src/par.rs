@@ -176,6 +176,126 @@ fn pool() -> Option<&'static Pool> {
     })
 }
 
+// ---------------------------------------------------------------------
+// Detached jobs
+// ---------------------------------------------------------------------
+
+/// Where a detached job's result (or panic payload) lands. The
+/// submitting side parks on `done` when it has to block for the result;
+/// the executing side stores under the lock and notifies.
+struct JobSlot<T> {
+    result: Mutex<Option<std::thread::Result<T>>>,
+    done: Condvar,
+}
+
+/// Handle to a detached background job started with [`spawn_job`]: a
+/// single `FnOnce` dispatched to the persistent pool (or a dedicated
+/// thread when the pool is disabled) whose result is collected later —
+/// the fire-and-collect counterpart to the fork-join `par_ranges`.
+pub struct JobHandle<T> {
+    slot: Arc<JobSlot<T>>,
+}
+
+/// Dispatch `f` as a detached job and return a handle to its result.
+///
+/// On the persistent pool the job shares the worker queue with
+/// `par_ranges` chunks; nested parallel dispatches *inside* the job are
+/// fine (the job runs as an ordinary caller, and the pool's help-first
+/// waiting keeps nesting deadlock-free). With the pool disabled
+/// (`KFAC_POOL=0` or one thread) the job runs on its own named thread
+/// instead, so detached work never blocks the caller either way.
+///
+/// A panic inside the job is captured and re-raised on the thread that
+/// collects the handle; an uncollected panicked job is silently dropped.
+pub fn spawn_job<T, F>(f: F) -> JobHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let slot = Arc::new(JobSlot { result: Mutex::new(None), done: Condvar::new() });
+    let out = Arc::clone(&slot);
+    let run = move || {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        *out.result.lock().unwrap() = Some(r);
+        out.done.notify_all();
+    };
+    match pool() {
+        Some(pool) => pool.submit(Box::new(run)),
+        None => {
+            std::thread::Builder::new()
+                .name("kfac-job".to_string())
+                .spawn(run)
+                .expect("spawn kfac job thread");
+        }
+    }
+    JobHandle { slot }
+}
+
+fn unwrap_job<T>(r: std::thread::Result<T>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(payload) => std::panic::resume_unwind(payload),
+    }
+}
+
+impl<T> JobHandle<T> {
+    /// Whether the job has finished (its result is ready to collect
+    /// without blocking).
+    pub fn is_done(&self) -> bool {
+        self.slot.result.lock().unwrap().is_some()
+    }
+
+    /// Collect the result if the job has finished; hand the handle back
+    /// otherwise. Re-raises the job's panic, if it panicked.
+    pub fn try_collect(self) -> Result<T, JobHandle<T>> {
+        let taken = self.slot.result.lock().unwrap().take();
+        match taken {
+            Some(r) => Ok(unwrap_job(r)),
+            None => Err(self),
+        }
+    }
+
+    /// Block until the job finishes and return its result. While the
+    /// job is still queued behind other pool work, the caller helps
+    /// drain the queue (it may execute its own job) instead of idling —
+    /// the same discipline as the fork-join wait, so a `collect` under a
+    /// busy pool cannot deadlock. Re-raises the job's panic.
+    pub fn collect(self) -> T {
+        if let Some(pool) = pool() {
+            loop {
+                let taken = self.slot.result.lock().unwrap().take();
+                if let Some(r) = taken {
+                    return unwrap_job(r);
+                }
+                match pool.try_pop() {
+                    Some(job) => job(),
+                    None => {
+                        // Bounded park: correctness does not depend on
+                        // the notify — queued-while-parked work is
+                        // picked up on the next drain pass.
+                        let guard = self.slot.result.lock().unwrap();
+                        if guard.is_none() {
+                            let _wait = self
+                                .slot
+                                .done
+                                .wait_timeout(guard, Duration::from_micros(500))
+                                .unwrap();
+                        }
+                    }
+                }
+            }
+        }
+        // Dedicated-thread job: a plain condvar wait suffices.
+        let mut guard = self.slot.result.lock().unwrap();
+        loop {
+            match guard.take() {
+                Some(r) => return unwrap_job(r),
+                None => guard = self.slot.done.wait(guard).unwrap(),
+            }
+        }
+    }
+}
+
 /// Run `body(lo, hi)` over a partition of `0..n` into contiguous chunks,
 /// one per worker. `min_chunk` bounds splitting overhead: if
 /// `n <= min_chunk` (or one worker), runs inline on the caller thread.
@@ -428,6 +548,63 @@ mod tests {
         let want: Vec<u64> = (0..4u64)
             .map(|i| (0..200u64).map(|j| i * 200 + j).sum())
             .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn spawn_job_returns_its_result() {
+        let h = spawn_job(|| (0..100u64).sum::<u64>());
+        assert_eq!(h.collect(), 4950);
+    }
+
+    #[test]
+    fn try_collect_eventually_succeeds_and_is_done_agrees() {
+        let h = spawn_job(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42u64
+        });
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !h.is_done() {
+            assert!(std::time::Instant::now() < deadline, "job never completed");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // once is_done reports true, try_collect must succeed
+        match h.try_collect() {
+            Ok(v) => assert_eq!(v, 42),
+            Err(_) => panic!("is_done was true but try_collect found no result"),
+        }
+    }
+
+    #[test]
+    fn job_panic_surfaces_at_collect() {
+        let h = spawn_job(|| -> u64 { panic!("boom in job") });
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.collect()));
+        assert!(err.is_err(), "job panic must re-raise on collect");
+    }
+
+    #[test]
+    fn job_dispatching_nested_par_ranges_completes() {
+        // The detached-job shape the async inverse refresh uses: a
+        // background job that itself fans out on the pool, collected
+        // while the caller keeps dispatching foreground work.
+        let h = spawn_job(|| {
+            let inner = par_map(300, 8, |j| (j * j) as u64);
+            inner.iter().sum::<u64>()
+        });
+        for round in 0..10u64 {
+            let got = par_map(64, 4, move |i| i as u64 + round);
+            assert_eq!(got.iter().sum::<u64>(), (0..64u64).sum::<u64>() + 64 * round);
+        }
+        let want: u64 = (0..300u64).map(|j| j * j).sum();
+        assert_eq!(h.collect(), want);
+    }
+
+    #[test]
+    fn many_concurrent_jobs_all_complete() {
+        let handles: Vec<JobHandle<u64>> =
+            (0..16u64).map(|i| spawn_job(move || i * 3 + 1)).collect();
+        let got: Vec<u64> = handles.into_iter().map(|h| h.collect()).collect();
+        let want: Vec<u64> = (0..16u64).map(|i| i * 3 + 1).collect();
         assert_eq!(got, want);
     }
 

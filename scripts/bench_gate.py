@@ -82,9 +82,14 @@ def cpu_model():
 
 def cmd_merge(args):
     docs = [load(p) for p in args.runs]
-    names = []  # keep first-run ordering
-    for b in docs[0].get("benches", []):
-        names.append(b["name"])
+    # Union of names across runs, first-run ordering first: repeated
+    # runs of one suite median together, while suites with disjoint
+    # bench sets (linalg + fisher_ops) concatenate into one report.
+    names = []
+    for d in docs:
+        for b in d.get("benches", []):
+            if b["name"] not in names:
+                names.append(b["name"])
     merged = []
     for name in names:
         rows = [by_name(d)[name] for d in docs if name in by_name(d)]

@@ -271,7 +271,13 @@ fn kfac_scale_state_survives_the_wire_format_bit_exactly() {
     let mut backend = RustBackend::new(arch.clone());
     // rebuilds at k ≤ 3 and k = 5 (resetting the scale epoch), scale
     // refresh at k = 6: the k = 8 snapshot is mid-refresh-interval
-    let cfg = KfacConfig { lambda0: 8.0, t3: 5, t_scale: 3, ..KfacConfig::ekfac() };
+    let cfg = KfacConfig {
+        lambda0: 8.0,
+        t_inv: 5,
+        t_scale: 3,
+        refresh_async: false,
+        ..KfacConfig::ekfac()
+    };
     let mut opt_a = Kfac::new(&arch, cfg.clone());
     for _ in 0..8 {
         opt_a.step(&mut backend, &mut params_a, &x, &y);

@@ -42,7 +42,9 @@ fn kfac_beats_sgd_per_iteration_on_autoencoder() {
     let iters = 40;
     // λ₀ scaled down and adapted every iteration: a 40-iteration run is
     // far shorter than the paper's, so the LM rule needs to move fast.
-    let kfac_cfg = KfacConfig { lambda0: 2.0, t1: 1, ..Default::default() };
+    // margin-sensitive comparison: pin the deterministic synchronous
+    // refresh so the KFAC_ASYNC=1 CI leg measures the same trajectory
+    let kfac_cfg = KfacConfig { lambda0: 2.0, t1: 1, refresh_async: false, ..Default::default() };
     let k = run(&arch, &ds, Box::new(Kfac::new(&arch, kfac_cfg)), iters, 1);
     // modestly-tuned SGD baseline (lr from a small grid; larger diverges)
     let mut best_sgd = f64::INFINITY;
@@ -70,7 +72,7 @@ fn classifier_reaches_low_training_error() {
     // our synthetic digits are easier, so just require a large drop.
     let arch = Arch::classifier(&[256, 20, 20, 20, 20, 10], Act::Tanh);
     let ds = mnist_like::classification_dataset(256, 16, 5);
-    let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
+    let kcfg = KfacConfig { lambda0: 15.0, refresh_async: false, ..Default::default() };
     let opt = Kfac::new(&arch, kcfg);
     let report = TrainSession::for_dataset(arch.clone(), &ds)
         .iters(30)
@@ -92,23 +94,9 @@ fn classifier_reaches_low_training_error() {
 fn momentum_accelerates_batch_optimization() {
     // Section 7 / Figure 9: momentum helps in low-noise (full-batch) mode.
     let (arch, ds) = small_ae_setup();
-    let with = run(
-        &arch,
-        &ds,
-        Box::new(Kfac::new(&arch, KfacConfig { lambda0: 15.0, ..Default::default() })),
-        25,
-        7,
-    );
-    let without = run(
-        &arch,
-        &ds,
-        Box::new(Kfac::new(
-            &arch,
-            KfacConfig { lambda0: 15.0, ..Default::default() }.no_momentum(),
-        )),
-        25,
-        7,
-    );
+    let sync_cfg = || KfacConfig { lambda0: 15.0, refresh_async: false, ..Default::default() };
+    let with = run(&arch, &ds, Box::new(Kfac::new(&arch, sync_cfg())), 25, 7);
+    let without = run(&arch, &ds, Box::new(Kfac::new(&arch, sync_cfg().no_momentum())), 25, 7);
     let w = with.last().unwrap().train_err;
     let wo = without.last().unwrap().train_err;
     assert!(
@@ -120,7 +108,7 @@ fn momentum_accelerates_batch_optimization() {
 #[test]
 fn exponential_batch_schedule_runs_and_learns() {
     let (arch, ds) = small_ae_setup();
-    let kcfg = KfacConfig { lambda0: 15.0, ..Default::default() };
+    let kcfg = KfacConfig { lambda0: 15.0, refresh_async: false, ..Default::default() };
     let opt = Kfac::new(&arch, kcfg);
     let report = TrainSession::for_dataset(arch.clone(), &ds)
         .iters(15)

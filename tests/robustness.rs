@@ -5,9 +5,10 @@
 use kfac::backend::{ModelBackend, RustBackend};
 use kfac::fisher::stats::RawStats;
 use kfac::fisher::{BlockDiagInverse, FisherInverse, TridiagInverse};
-use kfac::linalg::Mat;
+use kfac::linalg::{eig, Mat, SymEig};
 use kfac::nn::{Act, Arch, LossKind, Params};
 use kfac::optim::{Kfac, KfacConfig, Optimizer};
+use kfac::par;
 use kfac::rng::Rng;
 
 fn tiny() -> (Arch, Params, Mat, Mat) {
@@ -104,7 +105,7 @@ fn momentum_with_identical_directions_falls_back() {
     let _ = q;
     let (arch, mut p, x, y) = tiny();
     let mut be = RustBackend::new(arch.clone());
-    let mut opt = Kfac::new(&arch, KfacConfig { t3: 1000, ..Default::default() });
+    let mut opt = Kfac::new(&arch, KfacConfig { t_inv: 1000, ..Default::default() });
     // two identical steps in a row make Δ and δ0 nearly parallel
     for _ in 0..4 {
         let info = opt.step(&mut be, &mut p, &x, &y);
@@ -127,4 +128,88 @@ fn wildly_scaled_inputs_do_not_break_training() {
         assert!(info.loss.is_finite());
     }
     assert!(be.loss(&p, &x, &y) <= l0 * 1.001);
+}
+
+#[test]
+fn background_eig_jobs_keep_counters_race_free_under_pool_contention() {
+    // Background factorization jobs — each forcing the deterministic
+    // QL→Jacobi fallback and dispatching nested pool work — race the
+    // foreground's own GEMM dispatches on the shared pool. Completion
+    // proves nested submission from job context cannot deadlock; the
+    // process-wide fallback counter must count every forced fallback
+    // exactly once, and the one-time stderr log must stay panic-free
+    // under concurrency.
+    const JOBS: usize = 4;
+    const EIGS_PER_JOB: usize = 8;
+    let n = 10;
+    let mut h = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            h.set(i, j, 1.0 / ((i + j) as f64 + 1.0)); // Hilbert: symmetric
+        }
+    }
+    let before = eig::tql2_fallback_count();
+    let handles: Vec<_> = (0..JOBS)
+        .map(|_| {
+            let a = h.clone();
+            par::spawn_job(move || {
+                let mut acc = 0.0;
+                for _ in 0..EIGS_PER_JOB {
+                    // iteration cap 0 deterministically takes the
+                    // Jacobi fallback and bumps the counter
+                    let e = SymEig::new_blocked_with_iter_cap(&a, 0);
+                    acc += e.w.iter().sum::<f64>();
+                }
+                acc + par::par_map(256, 8, |i| (i as f64).sqrt()).iter().sum::<f64>()
+            })
+        })
+        .collect();
+    // foreground: keep the pool busy with GEMM dispatches (large
+    // enough to split into row-block chunks) while the background
+    // jobs run
+    let mut rng = Rng::new(31);
+    let g = Mat::randn(160, 160, 1.0, &mut rng).scale(1.0 / 32.0);
+    let mut prod = g.clone();
+    for _ in 0..10 {
+        prod = prod.matmul(&g);
+        assert!(prod.data.iter().all(|v| v.is_finite()));
+    }
+    for hdl in handles {
+        assert!(hdl.collect().is_finite(), "background job produced a non-finite result");
+    }
+    let after = eig::tql2_fallback_count();
+    assert_eq!(
+        after - before,
+        JOBS * EIGS_PER_JOB,
+        "fallback counter lost or double-counted concurrent updates"
+    );
+}
+
+#[test]
+fn async_refresh_interleaves_with_foreground_work_without_deadlock() {
+    // KFAC_ASYNC=1 training: background inverse rebuilds dispatch
+    // nested par_ranges from pool-job context while every foreground
+    // step dispatches its own GEMMs into the same pool. Completing the
+    // run (with a swap installed at each t_inv boundary past bootstrap)
+    // proves submit/collect cannot deadlock against help-first waiting.
+    let arch = Arch::new(
+        vec![24, 16, 12, 8],
+        vec![Act::Tanh, Act::Tanh, Act::Identity],
+        LossKind::SquaredError,
+    );
+    let mut rng = Rng::new(29);
+    let mut p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(48, 24, 1.0, &mut rng);
+    let y = Mat::randn(48, 8, 0.5, &mut rng);
+    let mut be = RustBackend::new(arch.clone());
+    let cfg = KfacConfig { t_inv: 2, refresh_async: true, lambda0: 10.0, ..Default::default() };
+    let mut opt = Kfac::new(&arch, cfg);
+    for _ in 0..12 {
+        let info = opt.step(&mut be, &mut p, &x, &y);
+        assert!(info.loss.is_finite());
+        assert!(info.inv_epoch.is_some(), "K-FAC steps must carry the inverse epoch tag");
+    }
+    // swaps really happened: three bootstrap installs plus at least one
+    // collected background rebuild
+    assert!(opt.inverse_epoch() > 3, "no asynchronous swap was ever installed");
 }

@@ -6,6 +6,7 @@
 
 use kfac::coordinator::{checkpoint, Event, LogRow, Problem, TrainSession};
 use kfac::data::mnist_like;
+use kfac::fisher::precond;
 use kfac::nn::{Act, Arch, Params};
 use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
@@ -18,7 +19,9 @@ fn small_setup() -> (Arch, kfac::data::Dataset) {
 }
 
 fn kfac_cfg() -> KfacConfig {
-    KfacConfig { lambda0: 5.0, ..Default::default() }
+    // pinned synchronous so the bit-exactness tests measure the same
+    // trajectory on the KFAC_ASYNC=1 CI leg
+    KfacConfig { lambda0: 5.0, refresh_async: false, ..Default::default() }
 }
 
 fn tmp_ckpt(name: &str) -> PathBuf {
@@ -93,13 +96,19 @@ fn ekfac_scale_state_checkpoint_roundtrip_is_bit_exact() {
     // The EKFAC amortized scale re-estimation adds mutable optimizer
     // state (running second moments in the current eigenbasis); a
     // checkpoint taken mid-refresh-interval must carry it and resume
-    // bit-exactly. t3 = 4 / t_scale = 3: at the k = 7 checkpoint the
+    // bit-exactly. t_inv = 4 / t_scale = 3: at the k = 7 checkpoint the
     // scale epoch seeded at k = 6 is live and the next rebuild (k = 8)
     // has not yet happened.
     let (arch, ds) = small_setup();
     let seed = 11u64;
     let init = arch.sparse_init(&mut Rng::new(seed));
-    let cfg = || KfacConfig { lambda0: 5.0, t3: 4, t_scale: 3, ..KfacConfig::ekfac() };
+    let cfg = || KfacConfig {
+        lambda0: 5.0,
+        t_inv: 4,
+        t_scale: 3,
+        refresh_async: false,
+        ..KfacConfig::ekfac()
+    };
     let session = |opt: Kfac, iters: usize| {
         TrainSession::for_dataset(arch.clone(), &ds)
             .iters(iters)
@@ -390,4 +399,165 @@ fn custom_optimizer_drives_session_through_the_trait() {
     let first = report.log.first().unwrap().train_loss;
     let last = report.log.last().unwrap().train_loss;
     assert!(last.is_finite() && last < first, "plain GD via the trait: {first} -> {last}");
+}
+
+#[test]
+fn sync_split_cadence_replays_presplit_trajectory_bit_exactly() {
+    // Deterministic-replay harness for the t_cov/t_inv cadence split:
+    // with the refresh pinned synchronous (KFAC_ASYNC=0), t_cov = 0 and
+    // t_cov = 1 both mean "accumulate every step" — the pre-split
+    // single-knob behaviour — and must produce bit-identical params,
+    // per-step loss traces and OptState snapshots for every registered
+    // preconditioner. The sync checkpoint must also stay v2 and carry
+    // exactly the pre-split key set: no async keys may leak into
+    // synchronous sessions.
+    let (arch, ds) = small_setup();
+    let init = arch.sparse_init(&mut Rng::new(13));
+    let run = |cfg: KfacConfig, name: &str| {
+        let mut losses: Vec<u64> = Vec::new();
+        let path = tmp_ckpt(name);
+        let report = TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(10)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(5)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(13)
+            .params(init.clone())
+            .optimizer(Kfac::new(&arch, cfg))
+            .checkpoint_every(10, &path)
+            .observer(|e| {
+                if let Event::Step { info, .. } = e {
+                    losses.push(info.loss.to_bits());
+                }
+            })
+            .run();
+        let ck = checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        (report, losses, ck)
+    };
+    for p in [precond::block_diag(), precond::block_tridiag(), precond::ekfac()] {
+        let name = p.name().to_string();
+        let cfg = |t_cov: usize| KfacConfig {
+            precond: p.clone(),
+            lambda0: 5.0,
+            t_cov,
+            t_inv: 4,
+            refresh_async: false,
+            ..Default::default()
+        };
+        let (ra, la, cka) = run(cfg(0), &format!("replay_presplit_{name}"));
+        let (rb, lb, ckb) = run(cfg(1), &format!("replay_split_{name}"));
+        assert_eq!(la, lb, "{name}: per-step loss trace diverged");
+        assert!(!la.is_empty(), "{name}: no Step events observed");
+        assert!(ra.params == rb.params, "{name}: final params diverged");
+        assert!(ra.avg_params == rb.avg_params, "{name}: Polyak average diverged");
+        assert_eq!(cka.opt, ckb.opt, "{name}: OptState snapshots diverged");
+
+        // key-set pin: v2 checkpoints written by a synchronous session
+        // contain the pre-split entries and nothing else
+        assert_eq!(ckb.version, checkpoint::CHECKPOINT_VERSION, "{name}: sync stays v2");
+        let mut want = vec![
+            "delta_prev",
+            "gamma",
+            "k",
+            "lambda",
+            "precond",
+            "refresh_aa",
+            "refresh_aa_off",
+            "refresh_gamma",
+            "refresh_gg",
+            "refresh_gg_off",
+            "stats_aa",
+            "stats_aa_off",
+            "stats_gg",
+            "stats_gg_off",
+            "stats_k",
+        ];
+        if name == "ekfac" {
+            want.extend(["scale_k", "scale_s"]);
+        }
+        want.sort_unstable();
+        let got: Vec<&str> = ckb.opt.entries.keys().map(String::as_str).collect();
+        assert_eq!(got, want, "{name}: sync OptState keys drifted from the pre-split set");
+    }
+}
+
+#[test]
+fn async_mid_flight_checkpoint_resumes_bit_exactly() {
+    // A KFAC_ASYNC=1 session checkpointed while a background rebuild is
+    // in flight (submitted at k = 8, due at k = 12, checkpoint at
+    // k = 10) must record the pending job's *inputs* in a v3 checkpoint
+    // and resume bit-exactly: the job is re-submitted from the restored
+    // snapshot rather than silently dropped, so the swap at k = 12
+    // installs the identical inverse.
+    let (arch, ds) = small_setup();
+    let init = arch.sparse_init(&mut Rng::new(21));
+    let cfg = || KfacConfig { lambda0: 5.0, t_inv: 4, refresh_async: true, ..Default::default() };
+    let session = |iters: usize| {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(iters)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(2)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(21)
+            .params(init.clone())
+            .optimizer(Kfac::new(&arch, cfg()))
+    };
+    let full = session(16).run();
+    let path = tmp_ckpt("async_mid_flight");
+    session(10).checkpoint_every(10, &path).run();
+
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.version, checkpoint::CHECKPOINT_VERSION_ASYNC, "in-flight build ⇒ v3");
+    assert!(ck.opt.scalar("inv_epoch").is_some(), "async sessions tag the inverse epoch");
+    assert!(ck.opt.scalar("pending_gamma").is_some(), "pending build γ missing");
+    assert!(ck.opt.scalar("pending_k").is_some(), "pending build submission step missing");
+    assert!(ck.opt.mats("pending_aa").is_some(), "pending build statistics missing");
+
+    let resumed = session(16).resume_from(&path).run();
+    assert!(full.params == resumed.params, "async mid-flight resume diverged");
+    assert!(full.avg_params == resumed.avg_params, "Polyak average diverged");
+    for row in &resumed.log {
+        let want = full.log.iter().find(|r| r.iter == row.iter).unwrap();
+        assert_rows_bit_equal(want, row, "async post-resume eval");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sync_v2_checkpoint_loads_into_async_session() {
+    // Forward interop: a checkpoint written by a synchronous session
+    // carries no async keys (v2), and a KFAC_ASYNC=1 session must
+    // accept it and continue with background refreshes from the
+    // restored state.
+    fn cfg(refresh_async: bool) -> KfacConfig {
+        KfacConfig { lambda0: 5.0, t_inv: 4, refresh_async, ..Default::default() }
+    }
+    let (arch, ds) = small_setup();
+    let init = arch.sparse_init(&mut Rng::new(23));
+    let session = |c: KfacConfig, iters: usize| {
+        TrainSession::for_dataset(arch.clone(), &ds)
+            .iters(iters)
+            .schedule(BatchSchedule::Fixed(64))
+            .eval_every(4)
+            .eval_rows(64)
+            .polyak(0.99)
+            .seed(23)
+            .params(init.clone())
+            .optimizer(Kfac::new(&arch, c))
+    };
+    let path = tmp_ckpt("v2_into_async");
+    session(cfg(false), 8).checkpoint_every(8, &path).run();
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.version, checkpoint::CHECKPOINT_VERSION, "sync session writes v2");
+    assert!(ck.opt.scalar("inv_epoch").is_none(), "async key leaked into a sync checkpoint");
+
+    let resumed = session(cfg(true), 16).resume_from(&path).run();
+    assert_eq!(resumed.iters_run, 8, "resume continues from iteration 8");
+    for row in &resumed.log {
+        assert!(row.train_loss.is_finite(), "async continuation diverged at {}", row.iter);
+    }
+    let _ = std::fs::remove_file(&path);
 }
