@@ -56,6 +56,46 @@ pub fn version_for(opt: &OptState) -> u32 {
     }
 }
 
+/// Every optimizer-state key this build can write (the `set_scalar` /
+/// `set_mats` / `set_str` literals in library code). Pinned here so the
+/// wire vocabulary is an explicit, reviewed surface: adding a writer key
+/// without extending this list (and deciding its version/compat story —
+/// see the v2→v3 history above) fails `scripts/repo_lint.py`, which
+/// re-extracts the writer literals from source and diffs them against
+/// this constant. Keep the list sorted within each section.
+pub const KNOWN_OPT_STATE_KEYS: &[&str] = &[
+    // Sgd (optim/sgd.rs)
+    "t",
+    "v",
+    // Kfac core (optim/kfac.rs)
+    "delta_prev",
+    "gamma",
+    "k",
+    "lambda",
+    "precond",
+    "stats_aa",
+    "stats_aa_off",
+    "stats_gg",
+    "stats_gg_off",
+    "stats_k",
+    // Kfac cached-inverse rebuild record (v2)
+    "refresh_aa",
+    "refresh_aa_off",
+    "refresh_gamma",
+    "refresh_gg",
+    "refresh_gg_off",
+    "scale_k",
+    "scale_s",
+    // Kfac asynchronous refresh (v3)
+    "inv_epoch",
+    "pending_aa",
+    "pending_aa_off",
+    "pending_gamma",
+    "pending_gg",
+    "pending_gg_off",
+    "pending_k",
+];
+
 /// A full training snapshot.
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
@@ -409,6 +449,23 @@ mod tests {
         let back = from_bytes(&to_bytes(&ck)).unwrap();
         assert_eq!(back.version, CHECKPOINT_VERSION_ASYNC);
         assert_eq!(back.opt, ck.opt);
+    }
+
+    #[test]
+    fn key_pin_is_consistent() {
+        // the v3-trigger keys must themselves be pinned writer keys
+        for k in ["inv_epoch", "pending_gamma", "pending_aa"] {
+            assert!(KNOWN_OPT_STATE_KEYS.contains(&k), "async key '{k}' missing from pin");
+        }
+        // no duplicates (a duplicate would mask a forgotten rename)
+        let mut seen = std::collections::BTreeSet::new();
+        for k in KNOWN_OPT_STATE_KEYS {
+            assert!(seen.insert(*k), "duplicate pinned key '{k}'");
+        }
+        // every key a sample snapshot writes is pinned
+        for k in sample().opt.entries.keys() {
+            assert!(KNOWN_OPT_STATE_KEYS.contains(&k.as_str()), "unpinned key '{k}'");
+        }
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //!
 //! Quick start (pure-Rust backend): see `examples/quickstart.rs`.
 
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block,
+// even inside `unsafe fn` — so each dereference/intrinsic carries its
+// own `// SAFETY:` justification (enforced by `scripts/repo_lint.py`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod linalg;
 pub mod par;

@@ -7,6 +7,10 @@
 //! `#[target_feature]` and must only be called after
 //! `is_x86_feature_detected!("avx2")`/`("fma")` both passed — the
 //! dispatch layer in [`super`] is the sole caller and enforces that.
+//!
+//! The crate denies `unsafe_op_in_unsafe_fn`, so each kernel body sits
+//! in an explicit `unsafe {}` block restating what the caller contract
+//! guarantees for the pointer arithmetic inside.
 
 use std::arch::x86_64::*;
 
@@ -19,42 +23,48 @@ use std::arch::x86_64::*;
 /// `kc*4` / `kc*8` f64 and `acc` writable for 32 f64.
 #[target_feature(enable = "avx2,fma")]
 pub(crate) unsafe fn micro_4x8(kc: usize, apanel: *const f64, bpanel: *const f64, acc: *mut f64) {
-    let mut c00 = _mm256_setzero_pd();
-    let mut c01 = _mm256_setzero_pd();
-    let mut c10 = _mm256_setzero_pd();
-    let mut c11 = _mm256_setzero_pd();
-    let mut c20 = _mm256_setzero_pd();
-    let mut c21 = _mm256_setzero_pd();
-    let mut c30 = _mm256_setzero_pd();
-    let mut c31 = _mm256_setzero_pd();
-    let mut ap = apanel;
-    let mut bp = bpanel;
-    for _ in 0..kc {
-        let b0 = _mm256_loadu_pd(bp);
-        let b1 = _mm256_loadu_pd(bp.add(4));
-        let a0 = _mm256_set1_pd(*ap);
-        c00 = _mm256_fmadd_pd(a0, b0, c00);
-        c01 = _mm256_fmadd_pd(a0, b1, c01);
-        let a1 = _mm256_set1_pd(*ap.add(1));
-        c10 = _mm256_fmadd_pd(a1, b0, c10);
-        c11 = _mm256_fmadd_pd(a1, b1, c11);
-        let a2 = _mm256_set1_pd(*ap.add(2));
-        c20 = _mm256_fmadd_pd(a2, b0, c20);
-        c21 = _mm256_fmadd_pd(a2, b1, c21);
-        let a3 = _mm256_set1_pd(*ap.add(3));
-        c30 = _mm256_fmadd_pd(a3, b0, c30);
-        c31 = _mm256_fmadd_pd(a3, b1, c31);
-        ap = ap.add(4);
-        bp = bp.add(8);
+    // SAFETY: the caller guarantees the panel extents above (packed
+    // layout: A advances 4 and B advances 8 f64 per k-step, so after kc
+    // steps every read stays inside `kc*4`/`kc*8`), and `acc` holds the
+    // full 32-f64 tile the eight stores cover.
+    unsafe {
+        let mut c00 = _mm256_setzero_pd();
+        let mut c01 = _mm256_setzero_pd();
+        let mut c10 = _mm256_setzero_pd();
+        let mut c11 = _mm256_setzero_pd();
+        let mut c20 = _mm256_setzero_pd();
+        let mut c21 = _mm256_setzero_pd();
+        let mut c30 = _mm256_setzero_pd();
+        let mut c31 = _mm256_setzero_pd();
+        let mut ap = apanel;
+        let mut bp = bpanel;
+        for _ in 0..kc {
+            let b0 = _mm256_loadu_pd(bp);
+            let b1 = _mm256_loadu_pd(bp.add(4));
+            let a0 = _mm256_set1_pd(*ap);
+            c00 = _mm256_fmadd_pd(a0, b0, c00);
+            c01 = _mm256_fmadd_pd(a0, b1, c01);
+            let a1 = _mm256_set1_pd(*ap.add(1));
+            c10 = _mm256_fmadd_pd(a1, b0, c10);
+            c11 = _mm256_fmadd_pd(a1, b1, c11);
+            let a2 = _mm256_set1_pd(*ap.add(2));
+            c20 = _mm256_fmadd_pd(a2, b0, c20);
+            c21 = _mm256_fmadd_pd(a2, b1, c21);
+            let a3 = _mm256_set1_pd(*ap.add(3));
+            c30 = _mm256_fmadd_pd(a3, b0, c30);
+            c31 = _mm256_fmadd_pd(a3, b1, c31);
+            ap = ap.add(4);
+            bp = bp.add(8);
+        }
+        _mm256_storeu_pd(acc, c00);
+        _mm256_storeu_pd(acc.add(4), c01);
+        _mm256_storeu_pd(acc.add(8), c10);
+        _mm256_storeu_pd(acc.add(12), c11);
+        _mm256_storeu_pd(acc.add(16), c20);
+        _mm256_storeu_pd(acc.add(20), c21);
+        _mm256_storeu_pd(acc.add(24), c30);
+        _mm256_storeu_pd(acc.add(28), c31);
     }
-    _mm256_storeu_pd(acc, c00);
-    _mm256_storeu_pd(acc.add(4), c01);
-    _mm256_storeu_pd(acc.add(8), c10);
-    _mm256_storeu_pd(acc.add(12), c11);
-    _mm256_storeu_pd(acc.add(16), c20);
-    _mm256_storeu_pd(acc.add(20), c21);
-    _mm256_storeu_pd(acc.add(24), c30);
-    _mm256_storeu_pd(acc.add(28), c31);
 }
 
 /// Fused `aw += Wᵀv`, `av += Vᵀv` in one pass over the rows (see the
@@ -78,40 +88,55 @@ pub(crate) unsafe fn fused_tdot2(
     aw: *mut f64,
     av: *mut f64,
 ) {
-    for r in 0..rows {
-        let vr = *vcol.add(r * vstride);
-        if vr == 0.0 {
-            continue;
-        }
-        let vb = _mm256_set1_pd(vr);
-        let wrow = wa.add(r * lda);
-        let xrow = xa.add(r * ldb);
-        let mut i = 0;
-        while i + 4 <= t {
-            let awv = _mm256_loadu_pd(aw.add(i));
-            let avv = _mm256_loadu_pd(av.add(i));
-            let wv = _mm256_loadu_pd(wrow.add(i));
-            let xv = _mm256_loadu_pd(xrow.add(i));
-            _mm256_storeu_pd(aw.add(i), _mm256_fmadd_pd(vb, wv, awv));
-            _mm256_storeu_pd(av.add(i), _mm256_fmadd_pd(vb, xv, avv));
-            i += 4;
-        }
-        while i < t {
-            *aw.add(i) += *wrow.add(i) * vr;
-            *av.add(i) += *xrow.add(i) * vr;
-            i += 1;
+    // SAFETY: the wrapper asserts the extents above, so every indexed
+    // access stays in bounds: `vcol` is read at stride `vstride` for
+    // `rows` rows, each row of `wa`/`xa` spans `t` f64 from offset
+    // `r*ld`, and `aw`/`av` are read-modify-written over `0..t` only.
+    unsafe {
+        for r in 0..rows {
+            let vr = *vcol.add(r * vstride);
+            if vr == 0.0 {
+                continue;
+            }
+            let vb = _mm256_set1_pd(vr);
+            let wrow = wa.add(r * lda);
+            let xrow = xa.add(r * ldb);
+            let mut i = 0;
+            while i + 4 <= t {
+                let awv = _mm256_loadu_pd(aw.add(i));
+                let avv = _mm256_loadu_pd(av.add(i));
+                let wv = _mm256_loadu_pd(wrow.add(i));
+                let xv = _mm256_loadu_pd(xrow.add(i));
+                _mm256_storeu_pd(aw.add(i), _mm256_fmadd_pd(vb, wv, awv));
+                _mm256_storeu_pd(av.add(i), _mm256_fmadd_pd(vb, xv, avv));
+                i += 4;
+            }
+            while i < t {
+                *aw.add(i) += *wrow.add(i) * vr;
+                *av.add(i) += *xrow.add(i) * vr;
+                i += 1;
+            }
         }
     }
 }
 
 /// Horizontal sum of a `__m256d`.
+///
+/// # Safety
+/// Caller must run on a CPU with avx2 (always true here: the only
+/// callers are `#[target_feature(enable = "avx2,fma")]` kernels, and
+/// `inline(always)` folds this into their feature context).
 #[inline(always)]
 unsafe fn hsum(v: __m256d) -> f64 {
-    let hi = _mm256_extractf128_pd::<1>(v);
-    let lo = _mm256_castpd256_pd128(v);
-    let s = _mm_add_pd(lo, hi);
-    let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
-    _mm_cvtsd_f64(s)
+    // SAFETY: value-only lane shuffles/adds — no memory access; the
+    // avx2 requirement is discharged by the caller contract above.
+    unsafe {
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let lo = _mm256_castpd256_pd128(v);
+        let s = _mm_add_pd(lo, hi);
+        let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
+        _mm_cvtsd_f64(s)
+    }
 }
 
 /// Fused `p[r·ps] −= X_row·ca + W_row·cb` (see [`super::fused_apply2`]).
@@ -132,22 +157,35 @@ pub(crate) unsafe fn fused_apply2(
     p: *mut f64,
     ps: usize,
 ) {
-    for r in 0..rows {
-        let xrow = xa.add(r * lda);
-        let wrow = wa.add(r * ldb);
-        let mut accx = _mm256_setzero_pd();
-        let mut accw = _mm256_setzero_pd();
-        let mut i = 0;
-        while i + 4 <= t {
-            accx = _mm256_fmadd_pd(_mm256_loadu_pd(xrow.add(i)), _mm256_loadu_pd(ca.add(i)), accx);
-            accw = _mm256_fmadd_pd(_mm256_loadu_pd(wrow.add(i)), _mm256_loadu_pd(cb.add(i)), accw);
-            i += 4;
+    // SAFETY: the wrapper asserts the extents, so each row read of
+    // `xa`/`wa` spans `t` f64 from offset `r*ld`, `ca`/`cb` are read
+    // over `0..t`, and `p` is written at stride `ps` for `rows` rows.
+    unsafe {
+        for r in 0..rows {
+            let xrow = xa.add(r * lda);
+            let wrow = wa.add(r * ldb);
+            let mut accx = _mm256_setzero_pd();
+            let mut accw = _mm256_setzero_pd();
+            let mut i = 0;
+            while i + 4 <= t {
+                accx = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(xrow.add(i)),
+                    _mm256_loadu_pd(ca.add(i)),
+                    accx,
+                );
+                accw = _mm256_fmadd_pd(
+                    _mm256_loadu_pd(wrow.add(i)),
+                    _mm256_loadu_pd(cb.add(i)),
+                    accw,
+                );
+                i += 4;
+            }
+            let mut acc = hsum(_mm256_add_pd(accx, accw));
+            while i < t {
+                acc += *xrow.add(i) * *ca.add(i) + *wrow.add(i) * *cb.add(i);
+                i += 1;
+            }
+            *p.add(r * ps) -= acc;
         }
-        let mut acc = hsum(_mm256_add_pd(accx, accw));
-        while i < t {
-            acc += *xrow.add(i) * *ca.add(i) + *wrow.add(i) * *cb.add(i);
-            i += 1;
-        }
-        *p.add(r * ps) -= acc;
     }
 }

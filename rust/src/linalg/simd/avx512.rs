@@ -17,35 +17,41 @@ use std::arch::x86_64::*;
 /// `kc*8` f64 each and `acc` writable for 64 f64.
 #[target_feature(enable = "avx512f")]
 pub(crate) unsafe fn micro_8x8(kc: usize, apanel: *const f64, bpanel: *const f64, acc: *mut f64) {
-    let mut c0 = _mm512_setzero_pd();
-    let mut c1 = _mm512_setzero_pd();
-    let mut c2 = _mm512_setzero_pd();
-    let mut c3 = _mm512_setzero_pd();
-    let mut c4 = _mm512_setzero_pd();
-    let mut c5 = _mm512_setzero_pd();
-    let mut c6 = _mm512_setzero_pd();
-    let mut c7 = _mm512_setzero_pd();
-    let mut ap = apanel;
-    let mut bp = bpanel;
-    for _ in 0..kc {
-        let b = _mm512_loadu_pd(bp);
-        c0 = _mm512_fmadd_pd(_mm512_set1_pd(*ap), b, c0);
-        c1 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(1)), b, c1);
-        c2 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(2)), b, c2);
-        c3 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(3)), b, c3);
-        c4 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(4)), b, c4);
-        c5 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(5)), b, c5);
-        c6 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(6)), b, c6);
-        c7 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(7)), b, c7);
-        ap = ap.add(8);
-        bp = bp.add(8);
+    // SAFETY: the caller guarantees the extents above (both panels
+    // advance 8 f64 per k-step, so after kc steps every read stays
+    // inside `kc*8`), and `acc` holds the full 64-f64 tile the eight
+    // stores cover.
+    unsafe {
+        let mut c0 = _mm512_setzero_pd();
+        let mut c1 = _mm512_setzero_pd();
+        let mut c2 = _mm512_setzero_pd();
+        let mut c3 = _mm512_setzero_pd();
+        let mut c4 = _mm512_setzero_pd();
+        let mut c5 = _mm512_setzero_pd();
+        let mut c6 = _mm512_setzero_pd();
+        let mut c7 = _mm512_setzero_pd();
+        let mut ap = apanel;
+        let mut bp = bpanel;
+        for _ in 0..kc {
+            let b = _mm512_loadu_pd(bp);
+            c0 = _mm512_fmadd_pd(_mm512_set1_pd(*ap), b, c0);
+            c1 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(1)), b, c1);
+            c2 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(2)), b, c2);
+            c3 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(3)), b, c3);
+            c4 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(4)), b, c4);
+            c5 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(5)), b, c5);
+            c6 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(6)), b, c6);
+            c7 = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(7)), b, c7);
+            ap = ap.add(8);
+            bp = bp.add(8);
+        }
+        _mm512_storeu_pd(acc, c0);
+        _mm512_storeu_pd(acc.add(8), c1);
+        _mm512_storeu_pd(acc.add(16), c2);
+        _mm512_storeu_pd(acc.add(24), c3);
+        _mm512_storeu_pd(acc.add(32), c4);
+        _mm512_storeu_pd(acc.add(40), c5);
+        _mm512_storeu_pd(acc.add(48), c6);
+        _mm512_storeu_pd(acc.add(56), c7);
     }
-    _mm512_storeu_pd(acc, c0);
-    _mm512_storeu_pd(acc.add(8), c1);
-    _mm512_storeu_pd(acc.add(16), c2);
-    _mm512_storeu_pd(acc.add(24), c3);
-    _mm512_storeu_pd(acc.add(32), c4);
-    _mm512_storeu_pd(acc.add(40), c5);
-    _mm512_storeu_pd(acc.add(48), c6);
-    _mm512_storeu_pd(acc.add(56), c7);
 }

@@ -262,7 +262,13 @@ impl LossKind {
         match self {
             LossKind::SoftmaxCe => {
                 let argmax = |row: &[f64]| {
-                    row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+                    // total_cmp: a NaN logit (diverged run) must yield a
+                    // deterministic argmax, not a panic mid-report.
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0)
                 };
                 let mut wrong = 0usize;
                 for r in 0..z.rows {

@@ -26,7 +26,7 @@ use crate::fisher::{FisherInverse, KfacStats, PrecondRef, RawStats};
 use crate::linalg::Mat;
 use crate::nn::{Arch, Params};
 use crate::optim::optimizer::{check_dims, check_mat_shapes, OptState, Optimizer, StepInfo};
-use crate::par::JobHandle;
+use crate::par::PendingJob;
 use std::sync::Arc;
 
 /// Default for [`KfacConfig::refresh_async`]: the `KFAC_ASYNC`
@@ -171,29 +171,30 @@ struct ScaleState {
 }
 
 /// An inverse rebuild in flight on the background pool: the detached
-/// job plus the exact inputs it was submitted with, kept so a
-/// checkpoint taken mid-flight can record them and resume by
-/// re-submitting the identical (deterministic) build.
+/// build tied to the exact snapshot it was submitted with (a
+/// [`par::PendingJob`](crate::par::PendingJob) — the submit/finish
+/// protocol itself lives in `par` where the loom suite model-checks
+/// it), kept so a checkpoint taken mid-flight can record the inputs
+/// and resume by re-submitting the identical (deterministic) build.
 struct PendingBuild {
-    handle: JobHandle<Box<dyn FisherInverse + Send>>,
-    /// Statistics snapshot the job is factorizing (shared with the job
-    /// closure — no second copy).
-    snap: Arc<RawStats>,
+    job: PendingJob<RawStats, Box<dyn FisherInverse + Send>>,
     /// γ the job is building with.
     gamma: f64,
-    /// Iteration the job was submitted at (diagnostic + checkpoint).
-    submitted_k: usize,
 }
 
 /// Submit a preconditioner build as a detached pool job. Builds are
 /// deterministic in `(snap, gamma)` and touch nothing else, so the job
 /// produces the same bits whether it runs on a worker or inline.
+/// `submitted_k` is the iteration at submit time (diagnostic +
+/// checkpoint).
 fn spawn_precond_build(
     precond: PrecondRef,
     snap: Arc<RawStats>,
     gamma: f64,
-) -> JobHandle<Box<dyn FisherInverse + Send>> {
-    crate::par::spawn_job(move || precond.build(&snap, gamma))
+    submitted_k: usize,
+) -> PendingBuild {
+    let job = crate::par::submit_build(snap, submitted_k, move |s| precond.build(s, gamma));
+    PendingBuild { job, gamma }
 }
 
 /// K-FAC optimizer state.
@@ -360,17 +361,16 @@ impl Optimizer for Kfac {
         let run_async = cfg.refresh_async && !bootstrap;
         if run_async && boundary {
             if let Some(p) = self.pending.take() {
-                if !p.handle.is_done() {
+                let (inv, snap, stalled) = p.job.finish();
+                if stalled {
                     self.stalls += 1;
                 }
-                let inv = p.handle.collect();
-                let snap = Arc::try_unwrap(p.snap).unwrap_or_else(|a| (*a).clone());
+                let snap = Arc::try_unwrap(snap).unwrap_or_else(|a| (*a).clone());
                 self.install_inverse(inv, snap, p.gamma);
             }
             self.gamma = (self.lambda + cfg.eta).sqrt().clamp(cfg.gamma_min, cfg.gamma_max);
             let snap = Arc::new(self.stats.s.clone());
-            let handle = spawn_precond_build(cfg.precond.clone(), Arc::clone(&snap), self.gamma);
-            self.pending = Some(PendingBuild { handle, snap, gamma: self.gamma, submitted_k: k });
+            self.pending = Some(spawn_precond_build(cfg.precond.clone(), snap, self.gamma, k));
         }
 
         // candidate γ set (Section 6.6)
@@ -561,12 +561,13 @@ impl Optimizer for Kfac {
             st.set_scalar("inv_epoch", self.inv_epoch as f64);
         }
         if let Some(p) = &self.pending {
+            let snap = p.job.input();
             st.set_scalar("pending_gamma", p.gamma);
-            st.set_scalar("pending_k", p.submitted_k as f64);
-            st.set_mats("pending_aa", p.snap.aa.clone());
-            st.set_mats("pending_aa_off", p.snap.aa_off.clone());
-            st.set_mats("pending_gg", p.snap.gg.clone());
-            st.set_mats("pending_gg_off", p.snap.gg_off.clone());
+            st.set_scalar("pending_k", p.job.submitted_k() as f64);
+            st.set_mats("pending_aa", snap.aa.clone());
+            st.set_mats("pending_aa_off", snap.aa_off.clone());
+            st.set_mats("pending_gg", snap.gg.clone());
+            st.set_mats("pending_gg_off", snap.gg_off.clone());
         }
         st
     }
@@ -674,10 +675,12 @@ impl Optimizer for Kfac {
                     gg_off: st.require_mats("pending_gg_off")?.to_vec(),
                 };
                 check_mat_shapes("pending_gg", &snap.gg, &self.stats.s.gg)?;
-                let snap = Arc::new(snap);
-                let handle = spawn_precond_build(self.cfg.precond.clone(), Arc::clone(&snap), pg);
-                self.pending =
-                    Some(PendingBuild { handle, snap, gamma: pg, submitted_k: pk as usize });
+                self.pending = Some(spawn_precond_build(
+                    self.cfg.precond.clone(),
+                    Arc::new(snap),
+                    pg,
+                    pk as usize,
+                ));
             }
         }
         Ok(())

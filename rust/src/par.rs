@@ -15,17 +15,66 @@
 //! Set `KFAC_POOL=0` to fall back to the original per-call
 //! `std::thread::scope` path, and `KFAC_THREADS=1` to run everything
 //! inline on the caller.
+//!
+//! ## Verification
+//!
+//! Every synchronization primitive in this file goes through the [`sync`]
+//! shim: `std::sync` types normally, `loom::sync` types when compiled
+//! with `RUSTFLAGS="--cfg loom"`. The `verify/loom` crate includes this
+//! exact source via `#[path]` and model-checks the pool/latch/job-handle
+//! protocols (and the epoch-swap [`PendingJob`] seam the async inverse
+//! refresh runs) across *all* interleavings loom can reach — see
+//! `verify/loom/tests/loom_pool.rs` and the README "Verification
+//! matrix". The [`model`] module below is the loom-only test surface.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Duration;
+
+/// Synchronization shim: the one place this module names its sync
+/// primitives. Production builds use `std::sync`; under `--cfg loom` the
+/// same code is model-checked on `loom::sync` replacements. Correctness
+/// therefore cannot silently depend on anything loom does not model.
+#[cfg(not(loom))]
+mod sync {
+    pub(super) use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    pub(super) use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+    /// Bounded condvar wait (≤500µs). Callers treat this as "maybe
+    /// sleep, maybe spurious wake": every wait site re-checks its
+    /// predicate and re-drains the queue, so deadlock freedom never
+    /// depends on the matching notify being delivered.
+    pub(super) fn bounded_wait<T>(cv: &Condvar, guard: MutexGuard<'_, T>) {
+        let _unused =
+            cv.wait_timeout(guard, std::time::Duration::from_micros(500)).unwrap();
+    }
+}
+
+/// Loom replacement for the [`sync`] shim (`--cfg loom` builds only).
+#[cfg(loom)]
+mod sync {
+    pub(super) use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    pub(super) use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+    /// Loom models the bounded park as an immediate spurious wakeup:
+    /// drop the lock and yield. This is the *weakest* reading of
+    /// `Condvar::wait_timeout` (the timeout always fires first), so any
+    /// schedule loom passes holds a fortiori when real waits block until
+    /// notified or 500µs elapse.
+    pub(super) fn bounded_wait<T>(_cv: &Condvar, guard: MutexGuard<'_, T>) {
+        drop(guard);
+        loom::thread::yield_now();
+    }
+}
+
+use sync::{bounded_wait, Arc, AtomicBool, AtomicUsize, Condvar, Mutex, Ordering};
 
 /// Number of worker threads to use (cores − 1, at least 1), overridable
 /// with the `KFAC_THREADS` environment variable.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
+    // Deliberately a std atomic even under loom: a process-wide cache of
+    // an env lookup, not part of any modeled protocol (loom atomics
+    // cannot live in statics).
+    static CACHED: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let c = CACHED.load(std::sync::atomic::Ordering::Relaxed);
     if c != 0 {
         return c;
     }
@@ -38,7 +87,7 @@ pub fn num_threads() -> usize {
                 .map(|n| n.get().saturating_sub(1).max(1))
                 .unwrap_or(1)
         });
-    CACHED.store(n, Ordering::Relaxed);
+    CACHED.store(n, std::sync::atomic::Ordering::Relaxed);
     n
 }
 
@@ -70,9 +119,21 @@ type Job = Box<dyn FnOnce() + Send>;
 struct Pool {
     queue: Mutex<VecDeque<Job>>,
     available: Condvar,
+    /// Shutdown flag for bounded-lifetime pools (the loom models and the
+    /// shutdown test). The process-wide pool never closes — its workers
+    /// are detached for the life of the process.
+    closed: AtomicBool,
 }
 
 impl Pool {
+    fn new() -> Pool {
+        Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
     fn submit(&self, job: Job) {
         self.queue.lock().unwrap().push_back(job);
         self.available.notify_one();
@@ -82,6 +143,18 @@ impl Pool {
         self.queue.lock().unwrap().pop_front()
     }
 
+    /// Ask every worker to exit once the queue drains. Queued jobs still
+    /// run: workers check `closed` only after failing to pop.
+    #[cfg(any(test, loom))]
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        // Taking the queue mutex orders this notify after any worker's
+        // pop-then-check, so a worker cannot re-enter the wait having
+        // missed both the flag and the wakeup.
+        let _guard = self.queue.lock().unwrap();
+        self.available.notify_all();
+    }
+
     fn worker_loop(&self) {
         loop {
             let job = {
@@ -89,6 +162,9 @@ impl Pool {
                 loop {
                     if let Some(j) = q.pop_front() {
                         break j;
+                    }
+                    if self.closed.load(Ordering::Acquire) {
+                        return;
                     }
                     q = self.available.wait(q).unwrap();
                 }
@@ -140,11 +216,12 @@ impl Latch {
     fn park(&self) {
         let guard = self.lock.lock().unwrap();
         if !self.done() {
-            let _wait = self.opened.wait_timeout(guard, Duration::from_micros(500)).unwrap();
+            bounded_wait(&self.opened, guard);
         }
     }
 }
 
+#[cfg(not(loom))]
 fn pool_enabled() -> bool {
     !matches!(
         std::env::var("KFAC_POOL").as_deref(),
@@ -155,17 +232,15 @@ fn pool_enabled() -> bool {
 /// The process-wide pool: `num_threads() − 1` detached workers, spawned
 /// lazily on first parallel call. `None` when threads are disabled or
 /// `KFAC_POOL=0` selects the scoped fallback.
+#[cfg(not(loom))]
 fn pool() -> Option<&'static Pool> {
-    static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+    static POOL: std::sync::OnceLock<Option<&'static Pool>> = std::sync::OnceLock::new();
     *POOL.get_or_init(|| {
         let workers = num_threads();
         if workers <= 1 || !pool_enabled() {
             return None;
         }
-        let pool: &'static Pool = Box::leak(Box::new(Pool {
-            queue: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-        }));
+        let pool: &'static Pool = Box::leak(Box::new(Pool::new()));
         for w in 0..workers - 1 {
             std::thread::Builder::new()
                 .name(format!("kfac-pool-{w}"))
@@ -174,6 +249,14 @@ fn pool() -> Option<&'static Pool> {
         }
         Some(pool)
     })
+}
+
+/// Under loom there is no process-wide pool (loom state cannot live in
+/// statics across model iterations); the [`model`] module hands explicit
+/// per-iteration pools to the code under test instead.
+#[cfg(loom)]
+fn pool() -> Option<&'static Pool> {
+    None
 }
 
 // ---------------------------------------------------------------------
@@ -194,6 +277,9 @@ struct JobSlot<T> {
 /// the fire-and-collect counterpart to the fork-join `par_ranges`.
 pub struct JobHandle<T> {
     slot: Arc<JobSlot<T>>,
+    /// The pool the job was queued on, so `collect` helps drain *that*
+    /// queue while blocked (`None` = dedicated-thread job).
+    pool: Option<&'static Pool>,
 }
 
 /// Dispatch `f` as a detached job and return a handle to its result.
@@ -212,6 +298,14 @@ where
     T: Send + 'static,
     F: FnOnce() -> T + Send + 'static,
 {
+    spawn_job_on(pool(), f)
+}
+
+fn spawn_job_on<T, F>(target: Option<&'static Pool>, f: F) -> JobHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
     let slot = Arc::new(JobSlot { result: Mutex::new(None), done: Condvar::new() });
     let out = Arc::clone(&slot);
     let run = move || {
@@ -219,16 +313,24 @@ where
         *out.result.lock().unwrap() = Some(r);
         out.done.notify_all();
     };
-    match pool() {
+    match target {
         Some(pool) => pool.submit(Box::new(run)),
-        None => {
-            std::thread::Builder::new()
-                .name("kfac-job".to_string())
-                .spawn(run)
-                .expect("spawn kfac job thread");
-        }
+        None => spawn_detached_thread(run),
     }
-    JobHandle { slot }
+    JobHandle { slot, pool: target }
+}
+
+#[cfg(not(loom))]
+fn spawn_detached_thread(run: impl FnOnce() + Send + 'static) {
+    std::thread::Builder::new()
+        .name("kfac-job".to_string())
+        .spawn(run)
+        .expect("spawn kfac job thread");
+}
+
+#[cfg(loom)]
+fn spawn_detached_thread(run: impl FnOnce() + Send + 'static) {
+    loom::thread::spawn(run);
 }
 
 fn unwrap_job<T>(r: std::thread::Result<T>) -> T {
@@ -261,7 +363,7 @@ impl<T> JobHandle<T> {
     /// the same discipline as the fork-join wait, so a `collect` under a
     /// busy pool cannot deadlock. Re-raises the job's panic.
     pub fn collect(self) -> T {
-        if let Some(pool) = pool() {
+        if let Some(pool) = self.pool {
             loop {
                 let taken = self.slot.result.lock().unwrap().take();
                 if let Some(r) = taken {
@@ -275,11 +377,7 @@ impl<T> JobHandle<T> {
                         // picked up on the next drain pass.
                         let guard = self.slot.result.lock().unwrap();
                         if guard.is_none() {
-                            let _wait = self
-                                .slot
-                                .done
-                                .wait_timeout(guard, Duration::from_micros(500))
-                                .unwrap();
+                            bounded_wait(&self.slot.done, guard);
                         }
                     }
                 }
@@ -293,6 +391,90 @@ impl<T> JobHandle<T> {
                 None => guard = self.slot.done.wait(guard).unwrap(),
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pending builds (the async inverse-refresh epoch-swap seam)
+// ---------------------------------------------------------------------
+
+/// A detached build job tied to the immutable snapshot it reads: the
+/// submit half of the epoch-swap protocol `optim::kfac` uses for
+/// asynchronous inverse refresh (`KFAC_ASYNC=1`). The snapshot is
+/// shared `Arc`-style between the submitting thread (which keeps
+/// serving steps, and may checkpoint it) and the builder; [`finish`]
+/// hands back the build output, the snapshot, and whether the caller
+/// had to stall waiting for the build.
+///
+/// This seam lives here — not in `optim/kfac.rs` — so the loom suite in
+/// `verify/loom` model-checks the *literal* submit/finish code the
+/// optimizer runs, not a re-implementation of it.
+///
+/// [`finish`]: PendingJob::finish
+pub struct PendingJob<I, T> {
+    handle: JobHandle<T>,
+    input: Arc<I>,
+    submitted_k: usize,
+}
+
+/// Submit `build(&input)` as a detached background job (see
+/// [`spawn_job`]) and tie the handle to its input snapshot.
+/// `submitted_k` is an opaque caller tag (the step count at submit time)
+/// carried through for checkpointing.
+pub fn submit_build<I, T, F>(input: Arc<I>, submitted_k: usize, build: F) -> PendingJob<I, T>
+where
+    I: Send + Sync + 'static,
+    T: Send + 'static,
+    F: FnOnce(&I) -> T + Send + 'static,
+{
+    submit_build_on(pool(), input, submitted_k, build)
+}
+
+fn submit_build_on<I, T, F>(
+    target: Option<&'static Pool>,
+    input: Arc<I>,
+    submitted_k: usize,
+    build: F,
+) -> PendingJob<I, T>
+where
+    I: Send + Sync + 'static,
+    T: Send + 'static,
+    F: FnOnce(&I) -> T + Send + 'static,
+{
+    let snap = Arc::clone(&input);
+    let handle = spawn_job_on(target, move || build(&snap));
+    PendingJob { handle, input, submitted_k }
+}
+
+impl<I, T> PendingJob<I, T> {
+    /// Whether the build has finished (collecting it will not block).
+    pub fn is_done(&self) -> bool {
+        self.handle.is_done()
+    }
+
+    /// The input snapshot the build reads (shared until [`finish`]
+    /// returns it; used to checkpoint an in-flight build).
+    ///
+    /// [`finish`]: PendingJob::finish
+    pub fn input(&self) -> &Arc<I> {
+        &self.input
+    }
+
+    /// The caller tag recorded at submit time.
+    pub fn submitted_k(&self) -> usize {
+        self.submitted_k
+    }
+
+    /// Block for the build and return `(output, input, stalled)`.
+    /// `stalled` records whether the build was still running when the
+    /// caller decided to finish it (the async pipeline's stall
+    /// counter). Once this returns, the builder's clone of `input` has
+    /// been dropped — the caller may `Arc::try_unwrap` it. Re-raises
+    /// the build's panic, if it panicked.
+    pub fn finish(self) -> (T, Arc<I>, bool) {
+        let stalled = !self.handle.is_done();
+        let out = self.handle.collect();
+        (out, self.input, stalled)
     }
 }
 
@@ -389,6 +571,7 @@ where
 }
 
 /// The original per-call scoped-thread fallback (`KFAC_POOL=0`).
+#[cfg(not(loom))]
 fn par_ranges_scoped<F>(ranges: &[(usize, usize)], body: &F)
 where
     F: Fn(usize, usize) + Sync,
@@ -400,6 +583,19 @@ where
         let (lo0, hi0) = ranges[0];
         body(lo0, hi0);
     });
+}
+
+/// Loom builds model the pooled path only; the scoped fallback (plain
+/// `std::thread::scope`, nothing shared but `&F`) degenerates to a
+/// serial sweep so `par_ranges` stays callable under `--cfg loom`.
+#[cfg(loom)]
+fn par_ranges_scoped<F>(ranges: &[(usize, usize)], body: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    for &(lo, hi) in ranges {
+        body(lo, hi);
+    }
 }
 
 /// Parallel map over indices `0..n`, collecting results in order.
@@ -454,13 +650,138 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr is a raw address with no aliasing claims of its own;
+// the disjoint-writes + outlives-the-dispatch contract above is what
+// each use site upholds (and what the loom publish models check).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared access is address copying only; dereferences are the
+// use sites' obligation under the contract above.
 unsafe impl<T> Sync for SendPtr<T> {}
 
-#[cfg(test)]
+// ---------------------------------------------------------------------
+// Loom model surface
+// ---------------------------------------------------------------------
+
+/// Loom-only hooks (`--cfg loom`): opaque handles over the private pool
+/// and latch so `verify/loom/tests/loom_pool.rs` can drive the *real*
+/// submit/help/park/count_down code paths — worker threads run
+/// [`Pool::worker_loop`] itself, dispatches go through
+/// [`par_ranges_pooled`] itself — under loom's exhaustive scheduler.
+/// Never compiled into production builds.
+#[cfg(loom)]
+pub mod model {
+    use super::*;
+
+    /// An explicit, per-model-iteration pool (leaked: loom model
+    /// closures need `'static` state, and each iteration builds a
+    /// fresh one).
+    #[derive(Clone, Copy)]
+    pub struct PoolHandle(&'static Pool);
+
+    /// Build a fresh pool. Spawn workers with [`worker`] and terminate
+    /// them with [`close`] before the model iteration ends — loom
+    /// requires every thread to finish.
+    pub fn pool() -> PoolHandle {
+        PoolHandle(Box::leak(Box::new(Pool::new())))
+    }
+
+    /// Run one worker loop (call from a `loom::thread::spawn`).
+    pub fn worker(pool: PoolHandle) {
+        pool.0.worker_loop();
+    }
+
+    /// Ask the pool's workers to exit once the queue drains.
+    pub fn close(pool: PoolHandle) {
+        pool.0.close();
+    }
+
+    /// [`spawn_job`](super::spawn_job) onto an explicit pool.
+    pub fn spawn_job_on<T, F>(pool: PoolHandle, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        super::spawn_job_on(Some(pool.0), f)
+    }
+
+    /// [`spawn_job`](super::spawn_job) on a dedicated (loom) thread —
+    /// the `KFAC_POOL=0` dedicated-thread path.
+    pub fn spawn_job_detached<T, F>(f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        super::spawn_job_on(None, f)
+    }
+
+    /// [`submit_build`](super::submit_build) onto an explicit pool (the
+    /// epoch-swap protocol under model check).
+    pub fn submit_build_on<I, T, F>(
+        pool: PoolHandle,
+        input: Arc<I>,
+        submitted_k: usize,
+        build: F,
+    ) -> PendingJob<I, T>
+    where
+        I: Send + Sync + 'static,
+        T: Send + 'static,
+        F: FnOnce(&I) -> T + Send + 'static,
+    {
+        super::submit_build_on(Some(pool.0), input, submitted_k, build)
+    }
+
+    /// Drive [`par_ranges_pooled`](super::par_ranges_pooled) on an
+    /// explicit pool with an explicit chunk count (bypasses the
+    /// `num_threads` env heuristics, which loom does not model).
+    pub fn par_ranges_on<F>(pool: PoolHandle, n: usize, chunks: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let chunk = n.div_ceil(chunks.max(1));
+        let ranges: Vec<(usize, usize)> = (0..chunks.max(1))
+            .map(|w| (w * chunk, ((w + 1) * chunk).min(n)))
+            .filter(|&(lo, hi)| lo < hi)
+            .collect();
+        if ranges.len() <= 1 {
+            body(0, n);
+            return;
+        }
+        par_ranges_pooled(pool.0, &ranges, &body);
+    }
+
+    /// Opaque handle over the private [`Latch`] for direct
+    /// count_down/park interleaving models.
+    #[derive(Clone)]
+    pub struct LatchHandle(Arc<Latch>);
+
+    /// A latch expecting `n` count-downs.
+    pub fn latch(n: usize) -> LatchHandle {
+        LatchHandle(Arc::new(Latch::new(n)))
+    }
+
+    impl LatchHandle {
+        pub fn count_down(&self) {
+            self.0.count_down();
+        }
+
+        pub fn done(&self) -> bool {
+            self.0.done()
+        }
+
+        /// The caller-side wait loop: park (bounded) until open.
+        pub fn park_until_done(&self) {
+            while !self.0.done() {
+                self.0.park();
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
 
     #[test]
     fn par_ranges_covers_everything_once() {
@@ -580,6 +901,100 @@ mod tests {
         let h = spawn_job(|| -> u64 { panic!("boom in job") });
         let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.collect()));
         assert!(err.is_err(), "job panic must re-raise on collect");
+    }
+
+    #[test]
+    fn job_panic_payload_propagates_exactly_once() {
+        // The payload re-raised at collect must be the job's own (not a
+        // wrapper), delivered exactly once; the pool stays usable after.
+        let h = spawn_job(|| -> u64 { std::panic::panic_any(1234_usize) });
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.collect()))
+            .expect_err("collect of a panicked job must re-raise");
+        let payload = err.downcast_ref::<usize>().copied();
+        assert_eq!(payload, Some(1234), "payload must round-trip through the slot");
+        // The slot was drained by the failed collect; the pool that ran
+        // the panicking job still serves fresh work.
+        let h2 = spawn_job(|| 7u64);
+        assert_eq!(h2.collect(), 7);
+    }
+
+    #[test]
+    fn job_drop_without_collect_still_runs() {
+        // Dropping the handle abandons the result, not the job: the
+        // side effect must still happen (the async refresh relies on
+        // fire-and-forget never silently cancelling).
+        let ran = Arc::new(AtomicBool::new(false));
+        {
+            let ran = Arc::clone(&ran);
+            let _dropped = spawn_job(move || ran.store(true, Ordering::Release));
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !ran.load(Ordering::Acquire) {
+            assert!(std::time::Instant::now() < deadline, "dropped job never ran");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    #[test]
+    fn dropped_panicked_job_is_silent() {
+        // An uncollected panicked job must not take the process down or
+        // poison the pool for later work.
+        drop(spawn_job(|| -> u64 { panic!("dropped panic") }));
+        for round in 0..8u64 {
+            let h = spawn_job(move || round * 2);
+            assert_eq!(h.collect(), round * 2);
+        }
+    }
+
+    #[test]
+    fn pool_close_joins_workers() {
+        // A standalone pool (not the process-wide one) drains its queue
+        // and its workers exit after close() — the shutdown protocol the
+        // loom models rely on to terminate every iteration.
+        let pool: &'static Pool = Box::leak(Box::new(Pool::new()));
+        let worker = std::thread::spawn(move || pool.worker_loop());
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let hits = Arc::clone(&hits);
+            pool.submit(Box::new(move || {
+                hits.fetch_add(1, Ordering::AcqRel);
+            }));
+        }
+        pool.close();
+        worker.join().expect("worker must exit cleanly after close");
+        // close() lets already-queued jobs drain before workers exit.
+        assert_eq!(hits.load(Ordering::Acquire), 4);
+    }
+
+    #[test]
+    fn pending_job_finish_returns_value_input_and_stall_flag() {
+        let snap = Arc::new(vec![1u64, 2, 3, 4]);
+        let pending = submit_build(Arc::clone(&snap), 17, |v| v.iter().sum::<u64>());
+        assert_eq!(pending.submitted_k(), 17);
+        assert_eq!(pending.input().as_slice(), &[1, 2, 3, 4]);
+        let (sum, returned, stalled) = pending.finish();
+        assert_eq!(sum, 10);
+        assert!(Arc::ptr_eq(&snap, &returned));
+        // `stalled` is a point-in-time observation; either value is
+        // legal here, but the type must be a plain bool either way.
+        let _: bool = stalled;
+    }
+
+    #[test]
+    fn pending_job_finish_after_done_reports_no_stall_and_unique_input() {
+        let pending = submit_build(Arc::new(5u64), 0, |v| *v * 3);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !pending.is_done() {
+            assert!(std::time::Instant::now() < deadline, "build never completed");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let (out, input, stalled) = pending.finish();
+        assert_eq!(out, 15);
+        assert!(!stalled, "finish after is_done must not count as a stall");
+        // The builder's clone is dropped before the result is
+        // published, so the returned Arc is uniquely owned — the
+        // optimizer's try_unwrap at install time depends on this.
+        assert_eq!(Arc::try_unwrap(input).expect("input must be uniquely owned"), 5);
     }
 
     #[test]

@@ -1,0 +1,396 @@
+#!/usr/bin/env python3
+"""Repo-specific lint pass (stdlib only), blocking in CI (`repo-lint` job).
+
+Rules — each encodes an invariant the generic toolchain can't check:
+
+  R1  safety-comments   Every `unsafe` occurrence in code (block, fn,
+                        impl) carries a `// SAFETY:` justification (or a
+                        `# Safety` doc section) within the preceding
+                        lines. Scope: all committed .rs files.
+  R2  banned-calls      No `partial_cmp(..).unwrap()` and no
+                        `.get(..).unwrap()` in library code (rust/src
+                        outside `#[cfg(test)]` regions): the first is a
+                        NaN panic waiting for a pathological loss, use
+                        `total_cmp`; the second hides index provenance,
+                        use `[]` (same panic, better message) or handle
+                        the None.
+  R3  env-registry      Every `env::var("KFAC_*")` literal read in .rs
+                        code is listed in docs/env_registry.md, and the
+                        registry lists no var that no code reads.
+  R4  checkpoint-keys   The literal keys written into optimizer state
+                        (`set_scalar/set_mats/set_str` in non-test
+                        rust/src) exactly match the committed
+                        KNOWN_OPT_STATE_KEYS pin in
+                        rust/src/coordinator/checkpoint.rs — a new writer
+                        key without a pin update silently changes the
+                        checkpoint format.
+  R5  deny-attr         rust/src/lib.rs keeps `#![deny(unsafe_op_in_unsafe_fn)]`.
+
+Usage:
+  scripts/repo_lint.py [--root DIR]   lint the tree (exit 1 on findings)
+  scripts/repo_lint.py --self-test    run the rule engine's own checks
+"""
+
+import argparse
+import os
+import re
+import sys
+
+LOOKBACK = 10  # lines above an unsafe site that may hold its SAFETY comment
+
+# Directories scanned for .rs files (repo-relative).
+RS_DIRS = ["rust/src", "tests", "benches", "examples", "verify"]
+LIB_DIR = "rust/src"  # scope for R2/R4
+
+ENV_REGISTRY = "docs/env_registry.md"
+CHECKPOINT_RS = "rust/src/coordinator/checkpoint.rs"
+LIB_RS = "rust/src/lib.rs"
+
+ENV_VAR_RE = re.compile(r'env::var(?:_os)?\s*\(\s*"(KFAC_[A-Z0-9_]+)"')
+ENV_NAME_RE = re.compile(r"\bKFAC_[A-Z0-9_]+\b")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+SAFETY_RE = re.compile(r"SAFETY|# Safety")
+SETTER_RE = re.compile(r'\.set_(?:scalar|mats|str)\s*\(\s*"([A-Za-z0-9_]+)"')
+PIN_RE = re.compile(r"KNOWN_OPT_STATE_KEYS\s*:\s*&\[&str\]\s*=\s*&\[(.*?)\];", re.S)
+BANNED = [
+    (re.compile(r"partial_cmp\s*\([^()]*\)\s*\.\s*unwrap\s*\("), "partial_cmp(..).unwrap()"),
+    (re.compile(r"\.get\s*\([^()]*\)\s*\.\s*unwrap\s*\("), ".get(..).unwrap()"),
+]
+DENY_ATTR = "#![deny(unsafe_op_in_unsafe_fn)]"
+CFG_TEST_RE = re.compile(r"#\[cfg\((?:test\b|all\(\s*test\b)")
+
+
+def split_views(text):
+    """Two same-shape views of Rust source, one char scanner pass.
+
+    Returns (code, no_comments): `code` blanks comment AND string-literal
+    interiors (for keyword/structure matching); `no_comments` blanks only
+    comments (string literals kept, for extracting key/env literals).
+    Line structure is preserved exactly in both.
+    """
+    code = []
+    nocom = []
+    i, n = 0, len(text)
+    state = "normal"
+    depth = 0  # nested block comments
+    raw_hashes = 0
+
+    def put(ch, in_code, in_nocom):
+        code.append(ch if in_code else (ch if ch == "\n" else " "))
+        nocom.append(ch if in_nocom else (ch if ch == "\n" else " "))
+
+    while i < n:
+        ch = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if state == "normal":
+            if ch == "/" and nxt == "/":
+                state = "line_comment"
+                put(ch, False, False)
+            elif ch == "/" and nxt == "*":
+                state = "block_comment"
+                depth = 1
+                put(ch, False, False)
+                put(nxt, False, False)
+                i += 1
+            elif ch == '"':
+                state = "string"
+                put(ch, True, True)
+            elif ch == "r" and re.match(r'r#*"', text[i:]):
+                m = re.match(r'r(#*)"', text[i:])
+                raw_hashes = len(m.group(1))
+                for c in m.group(0):
+                    put(c, True, True)
+                i += len(m.group(0)) - 1
+                state = "raw_string"
+            elif ch == "'":
+                # char literal vs lifetime: a literal closes within a
+                # couple of chars ('x', '\n', '\u{..}' is rare here)
+                m = re.match(r"'(\\.|[^\\'])'", text[i:])
+                if m:
+                    put(ch, True, True)
+                    for c in m.group(1):
+                        put(c, False, True)
+                    put("'", True, True)
+                    i += len(m.group(0)) - 1
+                else:
+                    put(ch, True, True)  # lifetime tick
+            else:
+                put(ch, True, True)
+        elif state == "line_comment":
+            if ch == "\n":
+                state = "normal"
+            put(ch, False, False)
+        elif state == "block_comment":
+            if ch == "/" and nxt == "*":
+                depth += 1
+                put(ch, False, False)
+                put(nxt, False, False)
+                i += 1
+            elif ch == "*" and nxt == "/":
+                depth -= 1
+                put(ch, False, False)
+                put(nxt, False, False)
+                i += 1
+                if depth == 0:
+                    state = "normal"
+            else:
+                put(ch, False, False)
+        elif state == "string":
+            if ch == "\\":
+                put(ch, False, True)
+                if nxt:
+                    put(nxt, False, True)
+                    i += 1
+            elif ch == '"':
+                put(ch, True, True)
+                state = "normal"
+            else:
+                put(ch, False, True)
+        elif state == "raw_string":
+            closer = '"' + "#" * raw_hashes
+            if text.startswith(closer, i):
+                for c in closer:
+                    put(c, True, True)
+                i += len(closer) - 1
+                state = "normal"
+            else:
+                put(ch, False, True)
+        i += 1
+    return "".join(code), "".join(nocom)
+
+
+def test_region_lines(code):
+    """Set of 1-based line numbers inside `#[cfg(test)]`-gated items."""
+    lines = code.split("\n")
+    in_test = set()
+    for idx, line in enumerate(lines):
+        if not CFG_TEST_RE.search(line):
+            continue
+        # find the opening brace of the gated item, then brace-match
+        depth = 0
+        opened = False
+        j = idx
+        while j < len(lines):
+            for ch in lines[j]:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+            in_test.add(j + 1)
+            if opened and depth <= 0:
+                break
+            j += 1
+    return in_test
+
+
+def rs_files(root):
+    out = []
+    for d in RS_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [x for x in dirnames if x != "target"]
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    out.append(os.path.join(dirpath, f))
+    return out
+
+
+def line_of(text, pos):
+    return text.count("\n", 0, pos) + 1
+
+
+def lint_safety(rel, raw, code):
+    """R1: every code-level `unsafe` has SAFETY within LOOKBACK lines above."""
+    findings = []
+    raw_lines = raw.split("\n")
+    seen = set()
+    for m in UNSAFE_RE.finditer(code):
+        ln = line_of(code, m.start())
+        if ln in seen:
+            continue
+        seen.add(ln)
+        window = raw_lines[max(0, ln - 1 - LOOKBACK) : ln]
+        if not any(SAFETY_RE.search(x) for x in window):
+            findings.append(
+                f"{rel}:{ln}: R1 unsafe without a `// SAFETY:` comment "
+                f"in the {LOOKBACK} lines above"
+            )
+    return findings
+
+
+def lint_banned(rel, code, in_test):
+    findings = []
+    for pat, label in BANNED:
+        for m in pat.finditer(code):
+            ln = line_of(code, m.start())
+            if ln in in_test:
+                continue
+            findings.append(f"{rel}:{ln}: R2 banned call {label} in library code")
+    return findings
+
+
+def lint_env_registry(root, reads):
+    findings = []
+    reg_path = os.path.join(root, ENV_REGISTRY)
+    if not os.path.exists(reg_path):
+        return [f"{ENV_REGISTRY}: R3 missing — every KFAC_* env var must be registered there"]
+    with open(reg_path, encoding="utf-8") as f:
+        registered = set(ENV_NAME_RE.findall(f.read()))
+    for var, sites in sorted(reads.items()):
+        if var not in registered:
+            findings.append(f"{sites[0]}: R3 env var {var} read but not listed in {ENV_REGISTRY}")
+    for var in sorted(registered - set(reads)):
+        findings.append(f"{ENV_REGISTRY}: R3 registered env var {var} is read by no code")
+    return findings
+
+
+def lint_checkpoint_keys(root, written):
+    ck_path = os.path.join(root, CHECKPOINT_RS)
+    if not os.path.exists(ck_path):
+        return [f"{CHECKPOINT_RS}: R4 file missing"]
+    with open(ck_path, encoding="utf-8") as f:
+        _, nocom = split_views(f.read())
+    m = PIN_RE.search(nocom)
+    if not m:
+        return [f"{CHECKPOINT_RS}: R4 KNOWN_OPT_STATE_KEYS pin not found"]
+    pinned = set(re.findall(r'"([^"]+)"', m.group(1)))
+    findings = []
+    for key, sites in sorted(written.items()):
+        if key not in pinned:
+            findings.append(
+                f"{sites[0]}: R4 optimizer state key \"{key}\" written but not in "
+                f"KNOWN_OPT_STATE_KEYS ({CHECKPOINT_RS})"
+            )
+    for key in sorted(pinned - set(written)):
+        findings.append(
+            f"{CHECKPOINT_RS}: R4 pinned key \"{key}\" is written by no library code"
+        )
+    return findings
+
+
+def lint_deny_attr(root):
+    lib = os.path.join(root, LIB_RS)
+    with open(lib, encoding="utf-8") as f:
+        if DENY_ATTR not in f.read():
+            return [f"{LIB_RS}: R5 missing `{DENY_ATTR}`"]
+    return []
+
+
+def run_lint(root):
+    findings = []
+    env_reads = {}  # var -> [site, ...]
+    key_writes = {}  # key -> [site, ...]
+    for path in rs_files(root):
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            raw = f.read()
+        code, nocom = split_views(raw)
+        in_test = test_region_lines(code)
+
+        findings += lint_safety(rel, raw, code)
+        if rel.startswith(LIB_DIR + os.sep) or rel.startswith(LIB_DIR + "/"):
+            findings += lint_banned(rel, code, in_test)
+            for m in SETTER_RE.finditer(nocom):
+                ln = line_of(nocom, m.start())
+                if ln in in_test:
+                    continue
+                key_writes.setdefault(m.group(1), []).append(f"{rel}:{ln}")
+        for m in ENV_VAR_RE.finditer(nocom):
+            env_reads.setdefault(m.group(1), []).append(f"{rel}:{line_of(nocom, m.start())}")
+
+    findings += lint_env_registry(root, env_reads)
+    findings += lint_checkpoint_keys(root, key_writes)
+    findings += lint_deny_attr(root)
+    return findings
+
+
+# ---------------------------------------------------------------------
+# self-test: the engine's own invariants, on synthetic snippets
+# ---------------------------------------------------------------------
+
+
+def self_test():
+    failures = []
+
+    def check(name, cond):
+        if not cond:
+            failures.append(name)
+
+    # comment/string stripping
+    code, nocom = split_views('let s = "unsafe // not code"; // unsafe trailing\n')
+    check("strip: unsafe in string blanked", "unsafe" not in code)
+    check("strip: string kept in nocom view", "unsafe // not code" in nocom)
+    check("strip: trailing comment blanked in both", "trailing" not in nocom)
+
+    code, _ = split_views("/* unsafe /* nested */ still comment */ fn f() {}\n")
+    check("strip: nested block comment", "unsafe" not in code and "fn f()" in code)
+
+    code, _ = split_views("let c = '\"'; let x = 1; // tick\n")
+    check("strip: char literal quote", "let x = 1" in code)
+
+    code, nocom = split_views('let r = r#"unsafe "quoted" text"#; unsafe {}\n')
+    check("strip: raw string blanked in code", code.count("unsafe") == 1)
+    check("strip: raw string kept in nocom", 'unsafe "quoted" text' in nocom)
+
+    # R1
+    good = "// SAFETY: fine\nunsafe { x() }\n"
+    bad = "fn f() {\n    unsafe { x() }\n}\n"
+    attr = "#![deny(unsafe_op_in_unsafe_fn)]\n"
+    c, _ = split_views(good)
+    check("R1: safety comment accepted", not lint_safety("t.rs", good, c))
+    c, _ = split_views(bad)
+    check("R1: bare unsafe flagged", len(lint_safety("t.rs", bad, c)) == 1)
+    c, _ = split_views(attr)
+    check("R1: deny attr not a false positive", not lint_safety("t.rs", attr, c))
+
+    # R2 + test-region exclusion
+    lib = "fn f() { a.partial_cmp(b).unwrap(); v.get(0).unwrap(); }\n"
+    c, _ = split_views(lib)
+    check("R2: both banned calls flagged", len(lint_banned("t.rs", c, set())) == 2)
+    tested = "#[cfg(test)]\nmod tests {\n    fn g() { a.partial_cmp(b).unwrap(); }\n}\n"
+    c, _ = split_views(tested)
+    check("R2: cfg(test) region excluded", not lint_banned("t.rs", c, test_region_lines(c)))
+    gated = "#[cfg(all(test, not(loom)))]\nmod tests { fn g() { v.get(0).unwrap(); } }\n"
+    c, _ = split_views(gated)
+    check("R2: cfg(all(test,..)) excluded", not lint_banned("t.rs", c, test_region_lines(c)))
+
+    # R4 key extraction
+    src = 'fn s(&mut self) { st.set_scalar("k", 1.0); st.set_str(&dyn_key, "x"); }\n'
+    _, nc = split_views(src)
+    keys = [m.group(1) for m in SETTER_RE.finditer(nc)]
+    check("R4: literal key extracted, dynamic skipped", keys == ["k"])
+
+    # R3 env extraction
+    _, nc = split_views('let v = std::env::var("KFAC_DEMO").ok();\n')
+    check("R3: env literal extracted", ENV_VAR_RE.search(nc).group(1) == "KFAC_DEMO")
+
+    if failures:
+        print("repo_lint self-test FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("repo_lint self-test: all checks passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    if args.self_test:
+        sys.exit(self_test())
+
+    findings = run_lint(args.root)
+    if findings:
+        print(f"repo_lint: {len(findings)} finding(s):")
+        for f in findings:
+            print(f"  {f}")
+        sys.exit(1)
+    print("repo_lint: clean")
+
+
+if __name__ == "__main__":
+    main()

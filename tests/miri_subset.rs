@@ -1,0 +1,254 @@
+//! The scoped unit subset the Miri CI lane interprets — small shapes
+//! exercising every raw-pointer pattern in the crate (GEMM packing +
+//! strided stores, `SendPtr` disjoint-row writes, the pool's laundered
+//! dispatch, the blocked eigensolver's panel pointers, the fused BLAS-2
+//! helpers) plus a checkpoint byte roundtrip. Everything here also runs
+//! natively as part of `cargo test`.
+//!
+//! Under Miri (see the `miri` CI job) run with `KFAC_SIMD=0` (Miri
+//! cannot interpret AVX intrinsics), `KFAC_THREADS=2` (bound the pool),
+//! and `KFAC_MIRI_SUBSET=1` — the flag that makes the wall-clock-heavy
+//! training smoke below skip itself (a Miri step takes minutes, and the
+//! pointer patterns it would cover are already exercised above).
+
+use kfac::coordinator::checkpoint;
+use kfac::linalg::simd;
+use kfac::linalg::{gemm, Mat, SymEig};
+use kfac::nn::{Act, Arch, LossKind};
+use kfac::optim::{Kfac, KfacConfig, OptState, Optimizer};
+use kfac::par;
+use kfac::rng::Rng;
+use std::sync::Arc;
+
+fn miri_scope() -> bool {
+    std::env::var("KFAC_MIRI_SUBSET").as_deref() == Ok("1")
+}
+
+/// Reference triple loop: `C += op(A)·op(B)` with stride-described
+/// operands, same contract as `gemm_strided_into_with`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_ref(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * ars + p * acs] * b[p * brs + j * bcs];
+            }
+            c[i * ldc + j] += acc;
+        }
+    }
+}
+
+fn fill(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let m = Mat::randn(1, len, 1.0, &mut rng);
+    m.data
+}
+
+#[test]
+fn gemm_blocked_scalar_matches_reference_small() {
+    // Forces the packed pack+macro-kernel path (no flop cutoff), so the
+    // scratch-tile pointer writes and masked MR/NR edges run under Miri
+    // on shapes that don't divide the 4-row strips evenly.
+    for &(m, n, k) in &[(9usize, 10usize, 11usize), (17, 13, 5), (4, 8, 3)] {
+        let a = fill(m * k, 1);
+        let b = fill(k * n, 2);
+        let mut c = vec![0.0; m * n];
+        gemm::gemm_blocked_with(&simd::SCALAR, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+        let mut want = vec![0.0; m * n];
+        gemm_ref(m, n, k, &a, k, 1, &b, n, 1, &mut want, n);
+        for (i, (g, w)) in c.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= 1e-12, "({m}x{n}x{k}) entry {i}: {g} vs {w}");
+        }
+        // transposed-A variant (column strides) through the same packer
+        let at = fill(k * m, 3); // k×m row-major, read as op(A) = m×k
+        let mut ct = vec![0.0; m * n];
+        gemm::gemm_blocked_with(&simd::SCALAR, m, n, k, &at, 1, m, &b, n, 1, &mut ct);
+        let mut wt = vec![0.0; m * n];
+        gemm_ref(m, n, k, &at, 1, m, &b, n, 1, &mut wt, n);
+        for (i, (g, w)) in ct.iter().zip(&wt).enumerate() {
+            assert!((g - w).abs() <= 1e-12, "op(A) ({m}x{n}x{k}) entry {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn gemm_strided_output_leaves_row_gaps_untouched() {
+    let (m, n, k) = (6usize, 5usize, 7usize);
+    let ldc = n + 3;
+    let a = fill(m * k, 4);
+    let b = fill(k * n, 5);
+    let sentinel = -1234.5;
+    let mut c = vec![sentinel; m * ldc];
+    for r in 0..m {
+        for j in 0..n {
+            c[r * ldc + j] = 0.0;
+        }
+    }
+    gemm::gemm_strided_into_with(&simd::SCALAR, m, n, k, &a, k, 1, &b, n, 1, &mut c, ldc);
+    let mut want = vec![0.0; m * n];
+    gemm_ref(m, n, k, &a, k, 1, &b, n, 1, &mut want, n);
+    for r in 0..m {
+        for j in 0..n {
+            let (g, w) = (c[r * ldc + j], want[r * n + j]);
+            assert!((g - w).abs() <= 1e-12, "({r},{j}): {g} vs {w}");
+        }
+        for j in n..ldc {
+            assert_eq!(c[r * ldc + j], sentinel, "gap ({r},{j}) clobbered");
+        }
+    }
+}
+
+#[test]
+fn par_primitives_under_interpreter() {
+    // SendPtr disjoint writes + the laundered pooled dispatch, at sizes
+    // an interpreter finishes quickly.
+    let got = par::par_map(64, 4, |i| (i * i) as u64);
+    let want: Vec<u64> = (0..64).map(|i| (i * i) as u64).collect();
+    assert_eq!(got, want);
+
+    let strings = par::par_map_send(16, 2, |i| format!("s{i}"));
+    assert_eq!(strings[15], "s15");
+
+    // nested dispatch (help-first drain) under the interpreter
+    let nested = par::par_map(4, 1, |i| {
+        par::par_map(16, 4, move |j| (i * 16 + j) as u64).iter().sum::<u64>()
+    });
+    let nwant: Vec<u64> = (0..4u64).map(|i| (0..16u64).map(|j| i * 16 + j).sum()).collect();
+    assert_eq!(nested, nwant);
+
+    // detached job + the pending-build seam
+    let h = par::spawn_job(|| (0..50u64).sum::<u64>());
+    assert_eq!(h.collect(), 1225);
+    let pending = par::submit_build(Arc::new(vec![2u64, 3, 5]), 9, |v| v.iter().product::<u64>());
+    let (out, input, _stalled) = pending.finish();
+    assert_eq!(out, 30);
+    assert_eq!(Arc::try_unwrap(input).expect("unique after finish"), vec![2, 3, 5]);
+}
+
+#[test]
+fn blocked_eigensolver_small_shape() {
+    // n = 26 > JACOBI_MAX forces the blocked Householder path (panel
+    // pointers, fused helpers, rotation application) — the code the
+    // Miri lane exists to interpret. Reconstruction check keeps it
+    // self-validating.
+    let n = 26;
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = 1.0 / (1.0 + (i as f64 - j as f64).abs());
+            a.set(i, j, v + if i == j { 2.0 } else { 0.0 });
+        }
+    }
+    let e = SymEig::new_blocked(&a);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += e.v.at(i, k) * e.w[k] * e.v.at(j, k);
+            }
+            assert!((acc - a.at(i, j)).abs() <= 1e-8, "recon ({i},{j}): {acc} vs {}", a.at(i, j));
+        }
+    }
+    for k in 1..n {
+        assert!(e.w[k] >= e.w[k - 1], "eigenvalues not ascending at {k}");
+    }
+}
+
+#[test]
+fn fused_helpers_match_reference_small() {
+    let (rows, t) = (5usize, 7usize);
+    let (lda, ldb) = (t + 2, t + 1);
+    let vcol = fill(rows * 2, 6);
+    let wa = fill((rows - 1) * lda + t, 7);
+    let xa = fill((rows - 1) * ldb + t, 8);
+
+    let mut aw = vec![0.1; t];
+    let mut av = vec![0.2; t];
+    simd::fused_tdot2(rows, t, &vcol, 2, &wa, lda, &xa, ldb, &mut aw, &mut av);
+    for i in 0..t {
+        let (mut sw, mut sv) = (0.1, 0.2);
+        for r in 0..rows {
+            sw += wa[r * lda + i] * vcol[r * 2];
+            sv += xa[r * ldb + i] * vcol[r * 2];
+        }
+        assert!((aw[i] - sw).abs() <= 1e-12, "tdot aw[{i}]: {} vs {sw}", aw[i]);
+        assert!((av[i] - sv).abs() <= 1e-12, "tdot av[{i}]: {} vs {sv}", av[i]);
+    }
+
+    let ca = fill(t, 9);
+    let cb = fill(t, 10);
+    let ps = 3usize;
+    let mut p = vec![0.5; (rows - 1) * ps + 1];
+    let p0 = p.clone();
+    simd::fused_apply2(rows, t, &xa, ldb, &wa, lda, &ca, &cb, &mut p, ps);
+    for r in 0..rows {
+        let mut acc = 0.0;
+        for i in 0..t {
+            acc += xa[r * ldb + i] * ca[i] + wa[r * lda + i] * cb[i];
+        }
+        let want = p0[r * ps] - acc;
+        assert!((p[r * ps] - want).abs() <= 1e-12, "apply p[{r}]: {} vs {want}", p[r * ps]);
+    }
+}
+
+#[test]
+fn checkpoint_bytes_roundtrip() {
+    let mut opt = OptState::new("kfac");
+    opt.set_str("precond", "blkdiag");
+    opt.set_scalar("k", 3.0);
+    opt.set_scalar("lambda", 1.5e-2);
+    opt.set_mats("stats_aa", vec![Mat::from_vec(2, 2, vec![1.0, 0.5, 0.5, 2.0])]);
+    let ck = checkpoint::Checkpoint {
+        version: checkpoint::version_for(&opt),
+        iter: 3,
+        cases: 96.0,
+        time_s: 0.5,
+        rng_words: [9, 8, 7, u64::MAX],
+        rng_spare: None,
+        params: kfac::nn::Params(vec![Mat::from_vec(2, 3, vec![0.1; 6])]),
+        polyak: None,
+        opt,
+    };
+    assert_eq!(ck.version, checkpoint::CHECKPOINT_VERSION);
+    let back = checkpoint::from_bytes(&checkpoint::to_bytes(&ck)).unwrap();
+    assert_eq!(back.opt, ck.opt);
+    assert!(back.params == ck.params);
+    assert_eq!(back.rng_words, ck.rng_words);
+}
+
+#[test]
+fn training_step_smoke() {
+    if miri_scope() {
+        // A full K-FAC step (eigendecompositions per layer per refresh)
+        // takes minutes under an interpreter; its pointer patterns are
+        // covered shape-by-shape by the tests above.
+        return;
+    }
+    let arch = Arch::new(vec![4, 3, 2], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+    let mut rng = Rng::new(11);
+    let mut p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(8, 4, 1.0, &mut rng);
+    let mut y = Mat::zeros(8, 2);
+    for r in 0..8 {
+        y.set(r, r % 2, 1.0);
+    }
+    let mut be = kfac::backend::RustBackend::new(arch.clone());
+    let mut opt = Kfac::new(&arch, KfacConfig::default());
+    for _ in 0..3 {
+        let info = opt.step(&mut be, &mut p, &x, &y);
+        assert!(info.loss.is_finite());
+    }
+}

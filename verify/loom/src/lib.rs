@@ -1,0 +1,9 @@
+//! Loom harness crate: re-exports the *production* `par` module source
+//! (included by path, not copied) so `tests/loom_pool.rs` can model-check
+//! the pool, latch, job-handle, and pending-build protocols exactly as
+//! the `kfac` crate compiles them. Build with `RUSTFLAGS="--cfg loom"` —
+//! without the cfg the tests are empty and the shim resolves to
+//! `std::sync`, which loom cannot explore.
+
+#[path = "../../../rust/src/par.rs"]
+pub mod par;

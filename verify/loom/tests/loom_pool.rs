@@ -1,0 +1,297 @@
+//! Exhaustive interleaving checks for the `par` synchronization
+//! protocols, driven by [loom](https://docs.rs/loom). Each `#[test]`
+//! wraps one protocol in `loom::model`, which re-runs the closure under
+//! every schedule its bounded exploration can reach and fails on
+//! deadlock, livelock, missed-wakeup hangs, or (via `loom::cell`)
+//! unsynchronized memory access — the properties "the tests passed"
+//! never established.
+//!
+//! Build with `RUSTFLAGS="--cfg loom"` (the harness crate's README/CI
+//! job); without the cfg this file compiles to an empty test binary.
+//! Run with `--test-threads=1`: the panic-propagation model installs a
+//! process-global panic hook.
+#![cfg(loom)]
+
+use kfac_verify_loom::par::model;
+use loom::cell::UnsafeCell;
+use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use loom::sync::Arc;
+
+/// A loom model with a preemption bound (schedules with more than
+/// `preemptions` forced context switches per thread are pruned — the
+/// standard way to keep condvar-heavy models tractable; bound 2 is
+/// loom's documented sweet spot for catching real bugs).
+fn model_with(preemptions: usize, f: impl Fn() + Send + Sync + 'static) {
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(preemptions);
+    b.max_branches = 50_000;
+    b.check(f);
+}
+
+/// Fixed-size slots probed through loom's access-tracking cells: any
+/// write that is not happens-before-ordered against every other access
+/// fails the model. Shared across threads by the dispatch machinery, so
+/// it must assert `Sync` itself — soundness is exactly what the model
+/// verifies.
+struct Slots(Vec<UnsafeCell<u64>>);
+// SAFETY (test-only): concurrent access discipline is enforced by loom's
+// UnsafeCell tracking; an actually-unsynchronized access fails the test
+// rather than going unnoticed.
+unsafe impl Sync for Slots {}
+// SAFETY (test-only): same as above — ownership transfer is tracked.
+unsafe impl Send for Slots {}
+
+impl Slots {
+    fn new(n: usize) -> Slots {
+        Slots((0..n).map(|_| UnsafeCell::new(0)).collect())
+    }
+
+    fn write(&self, i: usize, v: u64) {
+        // SAFETY: loom verifies exclusive access at model time.
+        self.0[i].with_mut(|p| unsafe { *p = v });
+    }
+
+    fn read(&self, i: usize) -> u64 {
+        // SAFETY: loom verifies no concurrent writer at model time.
+        self.0[i].with(|p| unsafe { *p })
+    }
+}
+
+/// The core fork-join claim: a pooled dispatch's disjoint chunk writes
+/// are all visible to the caller when `par_ranges` returns, under every
+/// schedule — i.e. the latch's AcqRel count_down / Acquire done pair
+/// really publishes the workers' writes.
+#[test]
+fn dispatch_publishes_disjoint_chunk_writes() {
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let slots = Slots::new(2);
+        model::par_ranges_on(pool, 2, 2, |lo, hi| {
+            for i in lo..hi {
+                slots.write(i, (i as u64 + 1) * 10);
+            }
+        });
+        // Dispatch returned ⇒ every chunk's write must be ordered
+        // before these reads (loom fails the access if not).
+        assert_eq!(slots.read(0), 10);
+        assert_eq!(slots.read(1), 20);
+        model::close(pool);
+        worker.join().unwrap();
+    });
+}
+
+/// Deadlock freedom of nested dispatch: a worker chunk that itself
+/// dispatches onto the same (single-worker) pool must complete — the
+/// help-first drain plus the bounded park must cover every schedule,
+/// including the one where everyone parks at once.
+#[test]
+fn nested_dispatch_under_park_completes() {
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let slots = Slots::new(2);
+        let hits = AtomicUsize::new(0);
+        model::par_ranges_on(pool, 2, 2, |lo, hi| {
+            for i in lo..hi {
+                // inner dispatch from inside a chunk (runs on either
+                // the worker or the caller, schedule-dependent)
+                model::par_ranges_on(pool, 2, 2, |ilo, ihi| {
+                    hits.fetch_add(ihi - ilo, Ordering::AcqRel);
+                });
+                slots.write(i, 1);
+            }
+        });
+        assert_eq!(slots.read(0) + slots.read(1), 2);
+        assert_eq!(hits.load(Ordering::Acquire), 4, "2 outer chunks × 2 inner items");
+        model::close(pool);
+        worker.join().unwrap();
+    });
+}
+
+/// A detached job's result round-trips through the slot under every
+/// schedule, and the job's side effects are published to the collector
+/// (the result mutex provides the happens-before edge).
+#[test]
+fn job_collect_returns_value_across_all_interleavings() {
+    model_with(3, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let slots = Arc::new(Slots::new(1));
+        let s2 = Arc::clone(&slots);
+        let h = model::spawn_job_on(pool, move || {
+            s2.write(0, 77);
+            41u64 + 1
+        });
+        assert_eq!(h.collect(), 42);
+        // collect returned ⇒ the job's cell write is ordered before
+        // this read.
+        assert_eq!(slots.read(0), 77);
+        model::close(pool);
+        worker.join().unwrap();
+    });
+}
+
+/// With no worker at all, `collect` must execute the queued job itself
+/// (the help-first drain picks its own job off the queue) — the
+/// zero-progress-from-others schedule.
+#[test]
+fn collect_self_executes_when_no_worker_takes_the_job() {
+    model_with(3, || {
+        let pool = model::pool();
+        let h = model::spawn_job_on(pool, || 7u64 * 3);
+        assert_eq!(h.collect(), 21);
+        model::close(pool);
+    });
+}
+
+/// The dedicated-thread path (`KFAC_POOL=0`): plain condvar wait, no
+/// queue to help drain — must still never hang.
+#[test]
+fn dedicated_thread_job_collects() {
+    model_with(3, || {
+        let h = model::spawn_job_detached(|| 5u64 + 5);
+        assert_eq!(h.collect(), 10);
+    });
+}
+
+/// `is_done() == true` must imply `try_collect` succeeds — there is no
+/// schedule where the done flag is visible before the result is.
+#[test]
+fn is_done_implies_try_collect_succeeds() {
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let mut h = model::spawn_job_on(pool, || 13u64);
+        loop {
+            if h.is_done() {
+                match h.try_collect() {
+                    Ok(v) => assert_eq!(v, 13),
+                    Err(_) => panic!("is_done true but try_collect failed"),
+                }
+                break;
+            }
+            match h.try_collect() {
+                Ok(v) => {
+                    assert_eq!(v, 13);
+                    break;
+                }
+                Err(back) => h = back,
+            }
+            loom::thread::yield_now();
+        }
+        model::close(pool);
+        worker.join().unwrap();
+    });
+}
+
+/// Dropping a handle without collecting neither cancels the job nor
+/// wedges the worker: the side effect still happens and the pool shuts
+/// down cleanly afterwards.
+#[test]
+fn job_drop_without_collect_is_clean() {
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let ran = Arc::new(AtomicBool::new(false));
+        let r2 = Arc::clone(&ran);
+        drop(model::spawn_job_on(pool, move || r2.store(true, Ordering::Release)));
+        // close() lets the queued job drain before the worker exits, so
+        // after join the effect must have happened on every schedule.
+        model::close(pool);
+        worker.join().unwrap();
+        assert!(ran.load(Ordering::Acquire), "dropped job must still run");
+    });
+}
+
+/// A panicking job delivers its payload exactly once, at collect, on
+/// the collecting thread — and the worker that ran it survives to shut
+/// down normally (the panic is caught at the job boundary, never
+/// unwinding the worker loop).
+#[test]
+fn panicked_job_propagates_payload_exactly_once() {
+    // Suppress the default "thread panicked" stderr spam: this model
+    // panics on purpose in every iteration. Global, hence
+    // --test-threads=1 for this suite; restored below.
+    std::panic::set_hook(Box::new(|_| {}));
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+        let h = model::spawn_job_on(pool, || -> u64 { std::panic::panic_any(1234_usize) });
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.collect()))
+            .expect_err("collect must re-raise the job panic");
+        assert_eq!(err.downcast_ref::<usize>(), Some(&1234));
+        // the worker must not have unwound — it still serves jobs
+        let h2 = model::spawn_job_on(pool, || 8u64);
+        assert_eq!(h2.collect(), 8);
+        model::close(pool);
+        worker.join().unwrap();
+    });
+    let _ = std::panic::take_hook();
+}
+
+/// The async inverse-refresh epoch-swap protocol (`PendingJob`), as
+/// `optim::kfac` runs it: submit a build against a shared snapshot,
+/// keep "stepping" (reading the snapshot, as a mid-flight checkpoint
+/// does) while the build races, then finish and install. Checks, on
+/// every schedule: the build's output is correct and published; the
+/// stall flag is consistent with `is_done`; and — via loom's cell
+/// tracking — mutating the snapshot after `finish` cannot race the
+/// builder's reads (the builder's borrow is provably dead).
+#[test]
+fn epoch_swap_install_vs_step() {
+    model_with(2, || {
+        let pool = model::pool();
+        let worker = loom::thread::spawn(move || model::worker(pool));
+
+        let snap = Arc::new(Slots::new(2));
+        snap.write(0, 3);
+        snap.write(1, 4);
+        let epoch = AtomicUsize::new(7);
+
+        let pending =
+            model::submit_build_on(pool, Arc::clone(&snap), 5, |s| s.read(0) + s.read(1));
+        assert_eq!(pending.submitted_k(), 5);
+
+        // a "training step" on the stale inverse: checkpoint-style read
+        // of the in-flight snapshot, concurrent with the builder
+        let ck = pending.input().read(0);
+        assert_eq!(ck, 3);
+
+        let done_before = pending.is_done();
+        let (inv, returned, stalled) = pending.finish();
+        assert_eq!(inv, 7, "build output must round-trip");
+        if done_before {
+            assert!(!stalled, "a finished build must not count as a stall");
+        }
+
+        // install: epoch swap, then the optimizer owns the snapshot
+        // again — this write races the builder iff the protocol is
+        // wrong, and loom's cell tracking would fail the model.
+        epoch.store(epoch.load(Ordering::Acquire) + 1, Ordering::Release);
+        returned.write(0, 99);
+        assert_eq!(returned.read(0), 99);
+        assert_eq!(epoch.load(Ordering::Acquire), 8);
+
+        model::close(pool);
+        worker.join().unwrap();
+    });
+}
+
+/// The latch in isolation: N count_downs vs a parking waiter. The park
+/// is bounded and re-checks, so no schedule (including notify-before-
+/// park) may hang or let the waiter through early.
+#[test]
+fn latch_count_down_vs_park() {
+    model_with(3, || {
+        let latch = model::latch(2);
+        let l1 = latch.clone();
+        let t1 = loom::thread::spawn(move || l1.count_down());
+        let l2 = latch.clone();
+        let t2 = loom::thread::spawn(move || l2.count_down());
+        latch.park_until_done();
+        assert!(latch.done());
+        t1.join().unwrap();
+        t2.join().unwrap();
+    });
+}
