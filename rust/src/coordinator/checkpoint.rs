@@ -86,7 +86,7 @@ pub const KNOWN_OPT_STATE_KEYS: &[&str] = &[
     "refresh_gg_off",
     "scale_k",
     "scale_s",
-    // Kfac asynchronous refresh (v3)
+    // Kfac asynchronous / distributed refresh (v3)
     "inv_epoch",
     "pending_aa",
     "pending_aa_off",
@@ -94,6 +94,7 @@ pub const KNOWN_OPT_STATE_KEYS: &[&str] = &[
     "pending_gg",
     "pending_gg_off",
     "pending_k",
+    "refresh_stalls",
 ];
 
 /// A full training snapshot.
@@ -284,9 +285,16 @@ impl<'a> Reader<'a> {
     fn mat(&mut self) -> Result<Mat, String> {
         let rows = self.len("mat rows")?;
         let cols = self.len("mat cols")?;
+        // Fully checked arithmetic: `rows * cols * 8 + i` on attacker-
+        // controlled lengths must surface as a descriptive Err, never wrap
+        // around and pass the bounds test (or panic in a debug build).
         let n = rows
             .checked_mul(cols)
-            .filter(|&n| n.checked_mul(8).is_some_and(|b| self.i + b <= self.b.len()))
+            .filter(|&n| {
+                n.checked_mul(8)
+                    .and_then(|b| self.i.checked_add(b))
+                    .is_some_and(|end| end <= self.b.len())
+            })
             .ok_or_else(|| format!("checkpoint corrupt: mat {rows}x{cols} too large"))?;
         let mut data = Vec::with_capacity(n);
         for _ in 0..n {
@@ -466,6 +474,54 @@ mod tests {
         for k in sample().opt.entries.keys() {
             assert!(KNOWN_OPT_STATE_KEYS.contains(&k.as_str()), "unpinned key '{k}'");
         }
+    }
+
+    #[test]
+    fn truncation_at_every_64_byte_boundary_errs_without_panic() {
+        // Fuzz-ish sweep over both wire versions: a file cut off in the
+        // middle of *any* section (header, RNG block, params, polyak,
+        // opt entries) must surface a descriptive Err — never a panic,
+        // and never a silent success. Strict prefixes can never parse:
+        // the entry count is fixed up front and a short read trips
+        // either a bounds check or the trailing-bytes check.
+        let v2 = to_bytes(&sample());
+        let mut ck3 = sample();
+        ck3.opt.set_scalar("inv_epoch", 4.0);
+        ck3.opt.set_scalar("refresh_stalls", 2.0);
+        ck3.opt.set_scalar("pending_gamma", 0.25);
+        ck3.opt.set_mats("pending_aa", vec![Mat::eye(3)]);
+        ck3.version = version_for(&ck3.opt);
+        let v3 = to_bytes(&ck3);
+        for bytes in [&v2, &v3] {
+            for cut in (0..bytes.len()).step_by(64) {
+                let res = from_bytes(&bytes[..cut]);
+                assert!(res.is_err(), "prefix of {cut}/{} bytes parsed", bytes.len());
+                assert!(!res.unwrap_err().is_empty(), "empty error at cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_mat_dims_err_instead_of_overflowing() {
+        // A length prefix near usize::MAX must fail the checked bounds
+        // math in Reader::mat (rows*cols*8 + offset), not wrap around.
+        let ck = sample();
+        let bytes = to_bytes(&ck);
+        // params mat list starts right after magic(8)+version(4)+
+        // iter(8)+cases(8)+time(8)+rng(32)+spare flag(1)+spare(8) and
+        // its count(8): the first mat's rows field.
+        let rows_off = 8 + 4 + 8 + 8 + 8 + 32 + 1 + 8 + 8;
+        let mut evil = bytes.clone();
+        evil[rows_off..rows_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = from_bytes(&evil).unwrap_err();
+        assert!(err.contains("corrupt") || err.contains("truncated"), "got: {err}");
+        // and a huge-but-file-bounded rows×cols product overflows the
+        // element math, not the parser
+        let n = bytes.len() as u64;
+        let mut evil2 = bytes;
+        evil2[rows_off..rows_off + 8].copy_from_slice(&n.to_le_bytes());
+        evil2[rows_off + 8..rows_off + 16].copy_from_slice(&n.to_le_bytes());
+        assert!(from_bytes(&evil2).is_err());
     }
 
     #[test]

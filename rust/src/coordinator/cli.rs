@@ -1,5 +1,17 @@
 //! Dependency-free CLI argument parsing: positional subcommand plus
 //! `--key value` / `--key=value` / bare `--flag` options.
+//!
+//! Two entry points:
+//!
+//! * [`Args::parse`] — lenient: unknown options are collected, a `--key`
+//!   followed by a non-option becomes a key/value pair, a trailing
+//!   `--key` becomes a flag. Used by the fig/experiment binaries whose
+//!   option sets are fluid.
+//! * [`Args::parse_checked`] — strict, for the main `kfac` binary: every
+//!   option must be declared (value-taking or flag), a value option with
+//!   no value is a usage error, and unknown `--options` are errors
+//!   instead of being silently ignored (a typo like `--itres 500` must
+//!   not become a default-valued run).
 
 use std::collections::BTreeMap;
 
@@ -17,8 +29,8 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                    out.options.insert(stripped.to_string(), it.next().unwrap());
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    out.options.insert(stripped.to_string(), v);
                 } else {
                     out.options.insert(stripped.to_string(), "true".to_string());
                 }
@@ -27,6 +39,47 @@ impl Args {
             }
         }
         out
+    }
+
+    /// Strict parse against a declared option vocabulary. `value_opts`
+    /// take a value (`--key value` or `--key=value`); `flag_opts` are
+    /// bare booleans (`--flag`, or `--flag=true`). Errors (for the
+    /// binary to print with its usage text) on: an unknown `--option`, a
+    /// value option with no value (end of argv or another `--option`
+    /// next), and a flag option given a separate value.
+    pub fn parse_checked(
+        argv: impl IntoIterator<Item = String>,
+        value_opts: &[&str],
+        flag_opts: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                if value_opts.contains(&key) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next_if(|n| !n.starts_with("--"))
+                            .ok_or_else(|| format!("option --{key} requires a value"))?,
+                    };
+                    out.options.insert(key.to_string(), v);
+                } else if flag_opts.contains(&key) {
+                    out.options.insert(key.to_string(), inline.unwrap_or_else(|| "true".into()));
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
     }
 
     pub fn from_env() -> Args {
@@ -62,6 +115,14 @@ mod tests {
         Args::parse(s.split_whitespace().map(str::to_string))
     }
 
+    fn checked(s: &str) -> Result<Args, String> {
+        Args::parse_checked(
+            s.split_whitespace().map(str::to_string),
+            &["problem", "iters", "seed"],
+            &["momentum", "quick"],
+        )
+    }
+
     #[test]
     fn subcommand_and_options() {
         let a = parse("train --problem mnist_ae --iters=200 --momentum --seed 7");
@@ -77,5 +138,45 @@ mod tests {
     fn trailing_flag() {
         let a = parse("bench --quick");
         assert!(a.get_flag("quick"));
+    }
+
+    #[test]
+    fn checked_accepts_declared_options() {
+        let a = checked("train --problem mnist_ae --iters=200 --momentum --seed 7").unwrap();
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("problem"), Some("mnist_ae"));
+        assert_eq!(a.get_usize("iters", 0), 200);
+        assert!(a.get_flag("momentum"));
+    }
+
+    #[test]
+    fn checked_rejects_unknown_option() {
+        // The lenient parser would silently collect the typo; the strict
+        // one must error so the binary can print usage.
+        let err = checked("train --itres 500").unwrap_err();
+        assert!(err.contains("--itres"), "got: {err}");
+        assert!(checked("train --problem mnist_ae").is_ok());
+    }
+
+    #[test]
+    fn checked_rejects_trailing_value_option() {
+        // Regression: the lenient parser used to reach for `it.next()`
+        // here; with nothing after `--seed` this must be a usage error,
+        // never a panic or a silent flag.
+        let err = checked("train --seed").unwrap_err();
+        assert!(err.contains("--seed") && err.contains("value"), "got: {err}");
+    }
+
+    #[test]
+    fn checked_rejects_value_option_followed_by_option() {
+        let err = checked("train --seed --momentum").unwrap_err();
+        assert!(err.contains("--seed"), "got: {err}");
+    }
+
+    #[test]
+    fn lenient_trailing_value_option_degrades_to_flag() {
+        // The lenient path must also never panic on a trailing option.
+        let a = parse("train --seed");
+        assert_eq!(a.get("seed"), Some("true"));
     }
 }

@@ -157,6 +157,7 @@ pub struct TrainSession<'a> {
     observer: Option<Box<dyn FnMut(&Event) + 'a>>,
     checkpoint: Option<(PathBuf, usize)>,
     resume: Option<PathBuf>,
+    shard: Option<(usize, usize)>,
 }
 
 impl<'a> TrainSession<'a> {
@@ -178,6 +179,7 @@ impl<'a> TrainSession<'a> {
             observer: None,
             checkpoint: None,
             resume: None,
+            shard: None,
         }
     }
 
@@ -318,6 +320,20 @@ impl<'a> TrainSession<'a> {
         self
     }
 
+    /// Data-parallel worker shard: rank `rank` of `ranks` trains on its
+    /// contiguous slice of each (identically sampled) global minibatch.
+    /// Every rank runs the same schedule/seed, so the global batch is
+    /// identical across the group and the union of the slices covers it
+    /// exactly; the optimizer's `DistBackend`/`Collective` plumbing then
+    /// averages the per-slice quantities back into global ones. `ranks
+    /// <= 1` is a no-op — the bit-identity contract with single-process
+    /// training.
+    pub fn shard(mut self, rank: usize, ranks: usize) -> Self {
+        assert!(rank < ranks.max(1), "shard rank {rank} out of range for {ranks} ranks");
+        self.shard = Some((rank, ranks));
+        self
+    }
+
     /// Run training. Panics on checkpoint/configuration errors — use
     /// [`TrainSession::try_run`] to handle them.
     pub fn run(self) -> TrainReport {
@@ -343,6 +359,7 @@ impl<'a> TrainSession<'a> {
             mut observer,
             checkpoint: checkpoint_cfg,
             resume,
+            shard,
         } = self;
 
         let owned_ds;
@@ -459,6 +476,18 @@ impl<'a> TrainSession<'a> {
         for k in (k0 + 1)..=iters {
             let m = schedule.size(k);
             let (x, y) = ds.minibatch(m, &mut rng);
+            // Data-parallel shard: every rank samples the identical global
+            // batch (same seed/schedule) and trains on its contiguous
+            // slice; `cases` stays global. Tiny batches (m < ranks) are
+            // left whole rather than handing some rank zero rows.
+            let (x, y) = match shard {
+                Some((r, n)) if n > 1 && m >= n => {
+                    let lo = r * m / n;
+                    let hi = (r + 1) * m / n;
+                    (x.block(lo, hi, 0, x.cols), y.block(lo, hi, 0, y.cols))
+                }
+                _ => (x, y),
+            };
             let t = Timer::start();
             let info = opt.step(backend, &mut params, &x, &y);
             train_time += t.elapsed_s();

@@ -1,0 +1,177 @@
+//! Data-parallel [`ModelBackend`] wrapper.
+//!
+//! `DistBackend` wraps any backend and all-reduces its per-batch outputs
+//! (loss, gradients, Fisher-factor statistics, quadratic forms, EKFAC
+//! second moments) across the group, averaging by the contributor count.
+//! Every rank therefore feeds bitwise-identical curvature and gradient
+//! information to its optimizer, which keeps the whole group's trajectories
+//! in lockstep without any parameter synchronization.
+//!
+//! `eval` is deliberately **not** reduced: the evaluation set is identical
+//! on every rank (only training minibatches are sharded), so reducing would
+//! only add rounding noise.
+//!
+//! ## Failure policy
+//!
+//! A collective failure (peer timeout from a spoke's perspective, hub gone)
+//! permanently detaches this backend: it keeps returning **local** values,
+//! so a kicked or orphaned worker degrades to single-process training
+//! instead of panicking or deadlocking. The hub-side view of the same event
+//! is peer exclusion — the survivors' all-reduce keeps working with a
+//! smaller contributor count.
+
+use std::sync::Arc;
+
+use super::Collective;
+use crate::backend::{BatchStats, ModelBackend};
+use crate::linalg::{KronBasis, Mat};
+use crate::nn::{Arch, Params};
+
+/// A [`ModelBackend`] whose outputs are averaged across a [`Collective`].
+pub struct DistBackend<'a> {
+    inner: &'a mut dyn ModelBackend,
+    coll: Arc<dyn Collective>,
+    detached: bool,
+    failures: usize,
+}
+
+impl<'a> DistBackend<'a> {
+    pub fn new(inner: &'a mut dyn ModelBackend, coll: Arc<dyn Collective>) -> DistBackend<'a> {
+        DistBackend { inner, coll, detached: false, failures: 0 }
+    }
+
+    /// True once a collective failure has switched this rank to local-only
+    /// values (it will never rejoin the group).
+    pub fn is_detached(&self) -> bool {
+        self.detached
+    }
+
+    /// Number of collective ops that have failed on this rank.
+    pub fn failures(&self) -> usize {
+        self.failures
+    }
+
+    /// All-reduce `buf` and average by contributor count. At `size <= 1`
+    /// (and after detachment) the buffer is left bitwise untouched — this
+    /// is what makes a `ranks=1` distributed run bit-identical to the
+    /// single-process trainer.
+    fn reduce(&mut self, buf: &mut [f64]) {
+        if self.detached || self.coll.size() <= 1 {
+            return;
+        }
+        match self.coll.all_reduce_sum(buf) {
+            Ok(count) => {
+                if count > 1 {
+                    let inv = 1.0 / count as f64;
+                    for v in buf.iter_mut() {
+                        *v *= inv;
+                    }
+                }
+            }
+            Err(_) => {
+                // Keep the local values; stop trying (degraded mode).
+                self.detached = true;
+                self.failures += 1;
+            }
+        }
+    }
+}
+
+fn params_len(p: &Params) -> usize {
+    p.0.iter().map(|m| m.data.len()).sum()
+}
+
+fn write_params(p: &Params, out: &mut Vec<f64>) {
+    for m in &p.0 {
+        out.extend_from_slice(&m.data);
+    }
+}
+
+fn read_params(p: &mut Params, src: &[f64]) -> usize {
+    let mut i = 0;
+    for m in p.0.iter_mut() {
+        m.data.copy_from_slice(&src[i..i + m.data.len()]);
+        i += m.data.len();
+    }
+    i
+}
+
+impl ModelBackend for DistBackend<'_> {
+    fn arch(&self) -> &Arch {
+        self.inner.arch()
+    }
+
+    fn loss(&mut self, p: &Params, x: &Mat, y: &Mat) -> f64 {
+        let mut buf = [self.inner.loss(p, x, y)];
+        self.reduce(&mut buf);
+        buf[0]
+    }
+
+    fn eval(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, f64) {
+        // Full eval set on every rank — nothing to reduce.
+        self.inner.eval(p, x, y)
+    }
+
+    fn grad(&mut self, p: &Params, x: &Mat, y: &Mat) -> (f64, Params) {
+        let (loss, mut grads) = self.inner.grad(p, x, y);
+        let mut flat = Vec::with_capacity(1 + params_len(&grads));
+        flat.push(loss);
+        write_params(&grads, &mut flat);
+        self.reduce(&mut flat);
+        read_params(&mut grads, &flat[1..]);
+        (flat[0], grads)
+    }
+
+    fn grad_and_stats(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        y: &Mat,
+        stats_rows: usize,
+        seed: u64,
+    ) -> (f64, Params, BatchStats) {
+        let (loss, mut grads, mut stats) = self.inner.grad_and_stats(p, x, y, stats_rows, seed);
+        let np = params_len(&grads);
+        let ns = stats.flat_len();
+        let mut flat = Vec::with_capacity(1 + np + ns);
+        flat.push(loss);
+        write_params(&grads, &mut flat);
+        let start = flat.len();
+        flat.resize(start + ns, 0.0);
+        stats.write_flat(&mut flat[start..]);
+        self.reduce(&mut flat);
+        read_params(&mut grads, &flat[1..1 + np]);
+        stats.read_flat(&flat[1 + np..]);
+        (flat[0], grads, stats)
+    }
+
+    fn fvp_quad(&mut self, p: &Params, x: &Mat, fvp_rows: usize, dirs: &[&Params]) -> Mat {
+        let mut q = self.inner.fvp_quad(p, x, fvp_rows, dirs);
+        self.reduce(&mut q.data);
+        q
+    }
+
+    fn grad_sq_in_basis(
+        &mut self,
+        p: &Params,
+        x: &Mat,
+        y: &Mat,
+        rows: usize,
+        seed: u64,
+        bases: &[KronBasis],
+    ) -> Vec<Mat> {
+        let mut mats = self.inner.grad_sq_in_basis(p, x, y, rows, seed, bases);
+        let total: usize = mats.iter().map(|m| m.data.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for m in &mats {
+            flat.extend_from_slice(&m.data);
+        }
+        self.reduce(&mut flat);
+        let mut i = 0;
+        for m in mats.iter_mut() {
+            m.data.copy_from_slice(&flat[i..i + m.data.len()]);
+            i += m.data.len();
+        }
+        mats
+    }
+}

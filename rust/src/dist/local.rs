@@ -1,0 +1,95 @@
+//! In-process channel transport: a rank group connected by mpsc channels.
+//!
+//! Used by `--dist local` (one OS thread per rank, see [`super::trainer`])
+//! and by the fault-injection tests — dropping a `LocalCollective` maps to
+//! the same `Lost` link errors a closed TCP socket produces, so degraded
+//! mode is exercised deterministically without sockets.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{Collective, DistError, Frame, Link, LinkError, Star};
+
+/// One end of a hub↔spoke channel pair.
+pub(crate) struct ChanLink {
+    tx: Sender<Frame>,
+    rx: Receiver<Frame>,
+}
+
+impl Link for ChanLink {
+    fn send(&mut self, frame: &Frame) -> Result<(), LinkError> {
+        self.tx.send(frame.clone()).map_err(|_| LinkError::Lost)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, LinkError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Timeout) => Err(LinkError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(LinkError::Lost),
+        }
+    }
+}
+
+/// A size-`n` in-process group. Obtain one [`LocalCollective`] per rank
+/// from [`LocalGroup::create`] and hand each to its worker thread.
+pub struct LocalGroup;
+
+impl LocalGroup {
+    /// Create an `n`-rank group with the default per-op deadline
+    /// (`KFAC_DIST_TIMEOUT_MS`). `colls[r]` is rank `r`'s handle.
+    pub fn create(n: usize) -> Vec<LocalCollective> {
+        Self::create_with_timeout(n, super::default_timeout())
+    }
+
+    /// Like [`create`](Self::create) with an explicit deadline — the
+    /// fault-injection tests use short deadlines to exercise exclusion.
+    pub fn create_with_timeout(n: usize, timeout: Duration) -> Vec<LocalCollective> {
+        assert!(n >= 1, "LocalGroup needs at least one rank");
+        // Per spoke r: an "up" channel (r -> hub) and a "down" channel
+        // (hub -> r). The hub's link to r sends on down / receives on up.
+        let mut hub_links: Vec<Option<ChanLink>> = Vec::with_capacity(n.saturating_sub(1));
+        let mut spokes: Vec<LocalCollective> = Vec::with_capacity(n);
+        let mut spoke_links: Vec<ChanLink> = Vec::with_capacity(n.saturating_sub(1));
+        for _ in 1..n {
+            let (up_tx, up_rx) = mpsc::channel();
+            let (down_tx, down_rx) = mpsc::channel();
+            hub_links.push(Some(ChanLink { tx: down_tx, rx: up_rx }));
+            spoke_links.push(ChanLink { tx: up_tx, rx: down_rx });
+        }
+        spokes.push(LocalCollective { inner: Mutex::new(Star::new(0, n, timeout, hub_links)) });
+        for (r, link) in spoke_links.into_iter().enumerate() {
+            spokes.push(LocalCollective {
+                inner: Mutex::new(Star::new(r + 1, n, timeout, vec![Some(link)])),
+            });
+        }
+        spokes
+    }
+}
+
+/// One rank's handle to an in-process group.
+pub struct LocalCollective {
+    inner: Mutex<Star<ChanLink>>,
+}
+
+impl Collective for LocalCollective {
+    fn rank(&self) -> usize {
+        self.inner.lock().unwrap().rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.lock().unwrap().size()
+    }
+
+    fn all_reduce_sum(&self, buf: &mut [f64]) -> Result<usize, DistError> {
+        self.inner.lock().unwrap().all_reduce_sum(buf)
+    }
+
+    fn broadcast(&self, root: usize, buf: &mut [f64]) -> Result<(), DistError> {
+        self.inner.lock().unwrap().broadcast(root, buf)
+    }
+
+    fn barrier(&self) -> Result<(), DistError> {
+        self.inner.lock().unwrap().barrier()
+    }
+}

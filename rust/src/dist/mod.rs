@@ -1,0 +1,395 @@
+//! Distributed K-FAC: data-parallel collectives and the sharded
+//! inverse-refresh pipeline.
+//!
+//! The paper's central cost argument (§8) is that storing and inverting the
+//! Kronecker-factored curvature is independent of the amount of data used to
+//! estimate it. That makes the refresh pipeline shardable: workers all-reduce
+//! per-step gradients and Kronecker-factor statistics, the per-layer
+//! factorization at each `t_inv` boundary is sharded round-robin by layer
+//! index across ranks, and the resulting inverse parts are broadcast — the
+//! layout used by distributed ACKTR-style K-FAC implementations.
+//!
+//! The subsystem is built behind one seam, the [`Collective`] trait, with two
+//! transports:
+//!
+//! * [`local::LocalGroup`] — in-process mpsc channels, for tests and
+//!   deterministic multi-rank runs in one process (`--dist local`).
+//! * [`tcp::TcpCollective`] — length-prefixed TCP over localhost or a real
+//!   network (`--dist tcp`), std-only, with connect retry/backoff and
+//!   read/write timeouts.
+//!
+//! Both share the same star topology implemented by [`Star`]: rank 0 is the
+//! hub; every collective op is a deterministic exchange with the hub so that
+//! reduction order (and therefore floating-point rounding) is identical on
+//! every rank and every run.
+//!
+//! ## Degraded mode / staleness contract
+//!
+//! A peer that is slow past the deadline or drops mid-operation is excluded
+//! permanently by the hub; the all-reduce keeps serving the survivors (the
+//! contributor count shrinks). A refresh that cannot complete (e.g. the owner
+//! of a layer shard died) surfaces as an `Err` from [`sharded_build`]; the
+//! optimizer then records a stall and keeps stepping on the previous
+//! `inv_epoch` — the same staleness contract the async refresh path uses.
+//! This module contains no `unsafe` code (enforced by repo lint rule R6).
+
+pub mod backend;
+pub mod local;
+pub mod tcp;
+pub mod trainer;
+
+use std::time::Duration;
+
+use crate::fisher::precond::Preconditioner;
+use crate::fisher::stats::RawStats;
+use crate::fisher::FisherInverse;
+
+/// Errors surfaced by collective operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DistError {
+    /// A peer did not respond within the configured deadline.
+    Timeout,
+    /// A peer dropped (connection closed / channel disconnected).
+    PeerLost(usize),
+    /// Transport-level I/O failure.
+    Io(String),
+    /// Protocol violation (length mismatch, unexpected frame, bad payload).
+    Protocol(String),
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::Timeout => write!(f, "collective timed out"),
+            DistError::PeerLost(r) => write!(f, "peer rank {r} lost"),
+            DistError::Io(e) => write!(f, "collective i/o error: {e}"),
+            DistError::Protocol(e) => write!(f, "collective protocol error: {e}"),
+        }
+    }
+}
+
+/// A group of cooperating ranks.
+///
+/// Implementations must be deterministic: the reduction order of
+/// `all_reduce_sum` is fixed (rank order), so every rank observes bitwise
+/// identical results regardless of arrival timing.
+pub trait Collective: Send + Sync {
+    /// This worker's rank in `0..size()`.
+    fn rank(&self) -> usize;
+    /// Number of ranks in the group at startup.
+    fn size(&self) -> usize;
+    /// Element-wise sum of `buf` across live ranks, written back into `buf`
+    /// on every live rank. Returns the number of contributors (shrinks when
+    /// peers have been excluded). On `Err`, `buf` is left untouched (the
+    /// caller keeps its local values).
+    fn all_reduce_sum(&self, buf: &mut [f64]) -> Result<usize, DistError>;
+    /// Copies `buf` on `root` into `buf` on every other live rank.
+    fn broadcast(&self, root: usize, buf: &mut [f64]) -> Result<(), DistError>;
+    /// Blocks until all live ranks have entered the barrier.
+    fn barrier(&self) -> Result<(), DistError>;
+}
+
+/// Single-process stand-in: rank 0 of a size-1 group; every op is a no-op.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopCollective;
+
+impl Collective for NoopCollective {
+    fn rank(&self) -> usize {
+        0
+    }
+    fn size(&self) -> usize {
+        1
+    }
+    fn all_reduce_sum(&self, _buf: &mut [f64]) -> Result<usize, DistError> {
+        Ok(1)
+    }
+    fn broadcast(&self, _root: usize, _buf: &mut [f64]) -> Result<(), DistError> {
+        Ok(())
+    }
+    fn barrier(&self) -> Result<(), DistError> {
+        Ok(())
+    }
+}
+
+/// Per-op deadline for collective exchanges. `KFAC_DIST_TIMEOUT_MS`
+/// overrides the 5000 ms default (see docs/env_registry.md).
+pub fn default_timeout() -> Duration {
+    let ms = std::env::var("KFAC_DIST_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(5000);
+    Duration::from_millis(ms)
+}
+
+/// One message on a link. Both transports speak this vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Frame {
+    /// A payload of f64s (reduce contribution, reduce result, broadcast).
+    Data(Vec<f64>),
+    /// Hub → spoke: the op cannot complete (e.g. the broadcast source died).
+    Abort,
+    /// Spoke → hub greeting at connect time; payload\[0\] = rank.
+    Hello(Vec<f64>),
+}
+
+/// Transport-level link failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum LinkError {
+    Timeout,
+    Lost,
+    Io(String),
+}
+
+/// A reliable, ordered, framed channel to one peer.
+pub(crate) trait Link: Send {
+    fn send(&mut self, frame: &Frame) -> Result<(), LinkError>;
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, LinkError>;
+}
+
+/// Star-topology collective engine shared by both transports.
+///
+/// Rank 0 (the hub) holds one link per spoke (`links[r - 1]` = link to rank
+/// `r`, `None` once that peer has been excluded). Spokes hold exactly one
+/// link, to the hub (`links[0]`). All ops are hub-mediated so reduction
+/// order is fixed: contributions are added in rank order, making the result
+/// bitwise identical on every rank.
+pub(crate) struct Star<L: Link> {
+    rank: usize,
+    size: usize,
+    timeout: Duration,
+    links: Vec<Option<L>>,
+}
+
+impl<L: Link> Star<L> {
+    pub(crate) fn new(rank: usize, size: usize, timeout: Duration, links: Vec<Option<L>>) -> Self {
+        Star { rank, size, timeout, links }
+    }
+
+    pub(crate) fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub(crate) fn size(&self) -> usize {
+        self.size
+    }
+
+    fn map_link_err(&self, peer: usize, e: LinkError) -> DistError {
+        match e {
+            LinkError::Timeout => DistError::Timeout,
+            LinkError::Lost => DistError::PeerLost(peer),
+            LinkError::Io(m) => DistError::Io(m),
+        }
+    }
+
+    /// Hub-side helper: permanently exclude the peer behind `links[idx]`.
+    fn kill_link(&mut self, idx: usize) {
+        self.links[idx] = None;
+    }
+
+    pub(crate) fn all_reduce_sum(&mut self, buf: &mut [f64]) -> Result<usize, DistError> {
+        if self.size <= 1 {
+            return Ok(1);
+        }
+        if self.rank == 0 {
+            // Accumulate in rank order for deterministic rounding. A link
+            // that fails mid-op is excluded permanently; its contribution is
+            // simply absent (the count tells the callers how many summed).
+            let mut acc = buf.to_vec();
+            let mut count = 1usize;
+            for idx in 0..self.links.len() {
+                let Some(link) = self.links[idx].as_mut() else { continue };
+                match link.recv(self.timeout) {
+                    Ok(Frame::Data(v)) if v.len() == buf.len() => {
+                        for (a, x) in acc.iter_mut().zip(v.iter()) {
+                            *a += *x;
+                        }
+                        count += 1;
+                    }
+                    _ => self.kill_link(idx),
+                }
+            }
+            let mut reply = acc.clone();
+            reply.push(count as f64);
+            let reply = Frame::Data(reply);
+            for idx in 0..self.links.len() {
+                let Some(link) = self.links[idx].as_mut() else { continue };
+                if link.send(&reply).is_err() {
+                    self.kill_link(idx);
+                }
+            }
+            buf.copy_from_slice(&acc);
+            Ok(count)
+        } else {
+            let link = self.links[0].as_mut().ok_or(DistError::PeerLost(0))?;
+            link.send(&Frame::Data(buf.to_vec())).map_err(|e| match e {
+                LinkError::Timeout => DistError::Timeout,
+                LinkError::Lost => DistError::PeerLost(0),
+                LinkError::Io(m) => DistError::Io(m),
+            })?;
+            match link.recv(self.timeout) {
+                Ok(Frame::Data(v)) if v.len() == buf.len() + 1 => {
+                    buf.copy_from_slice(&v[..buf.len()]);
+                    Ok(v[buf.len()] as usize)
+                }
+                Ok(Frame::Abort) => Err(DistError::PeerLost(0)),
+                Ok(_) => Err(DistError::Protocol("bad all-reduce reply".into())),
+                Err(e) => Err(self.map_link_err(0, e)),
+            }
+        }
+    }
+
+    pub(crate) fn broadcast(&mut self, root: usize, buf: &mut [f64]) -> Result<(), DistError> {
+        if self.size <= 1 {
+            return Ok(());
+        }
+        if root >= self.size {
+            return Err(DistError::Protocol(format!("broadcast root {root} out of range")));
+        }
+        if root == 0 {
+            if self.rank == 0 {
+                let frame = Frame::Data(buf.to_vec());
+                for idx in 0..self.links.len() {
+                    let Some(link) = self.links[idx].as_mut() else { continue };
+                    if link.send(&frame).is_err() {
+                        self.kill_link(idx);
+                    }
+                }
+                Ok(())
+            } else {
+                self.recv_broadcast(buf)
+            }
+        } else if self.rank == root {
+            // Source: hand the payload to the hub, which relays it.
+            let link = self.links[0].as_mut().ok_or(DistError::PeerLost(0))?;
+            link.send(&Frame::Data(buf.to_vec()))
+                .map_err(|e| self.map_link_err(0, e))
+        } else if self.rank == 0 {
+            // Hub: receive from the source, copy locally, relay to the rest.
+            let src_idx = root - 1;
+            let payload = match self.links[src_idx].as_mut() {
+                Some(link) => match link.recv(self.timeout) {
+                    Ok(Frame::Data(v)) if v.len() == buf.len() => Some(v),
+                    _ => None,
+                },
+                None => None,
+            };
+            match payload {
+                Some(v) => {
+                    buf.copy_from_slice(&v);
+                    let frame = Frame::Data(v);
+                    for idx in 0..self.links.len() {
+                        if idx == src_idx {
+                            continue;
+                        }
+                        let Some(link) = self.links[idx].as_mut() else { continue };
+                        if link.send(&frame).is_err() {
+                            self.kill_link(idx);
+                        }
+                    }
+                    Ok(())
+                }
+                None => {
+                    // Source is gone: exclude it and tell the other spokes
+                    // the op is dead so nobody blocks on a relay that will
+                    // never come.
+                    self.kill_link(src_idx);
+                    for idx in 0..self.links.len() {
+                        if idx == src_idx {
+                            continue;
+                        }
+                        let Some(link) = self.links[idx].as_mut() else { continue };
+                        if link.send(&Frame::Abort).is_err() {
+                            self.kill_link(idx);
+                        }
+                    }
+                    Err(DistError::PeerLost(root))
+                }
+            }
+        } else {
+            self.recv_broadcast(buf)
+        }
+    }
+
+    /// Spoke side of a broadcast: wait for the relayed payload (or Abort).
+    fn recv_broadcast(&mut self, buf: &mut [f64]) -> Result<(), DistError> {
+        let link = self.links[0].as_mut().ok_or(DistError::PeerLost(0))?;
+        match link.recv(self.timeout) {
+            Ok(Frame::Data(v)) if v.len() == buf.len() => {
+                buf.copy_from_slice(&v);
+                Ok(())
+            }
+            Ok(Frame::Abort) => Err(DistError::PeerLost(usize::MAX)),
+            Ok(_) => Err(DistError::Protocol("bad broadcast payload".into())),
+            Err(e) => Err(self.map_link_err(0, e)),
+        }
+    }
+
+    pub(crate) fn barrier(&mut self) -> Result<(), DistError> {
+        let mut one = [0.0f64];
+        self.all_reduce_sum(&mut one).map(|_| ())
+    }
+}
+
+/// Builds the Fisher inverse at a `t_inv` boundary with the per-layer
+/// factorization sharded round-robin by layer index across ranks, then
+/// broadcasts each layer's part from its owner (`layer % size`).
+///
+/// Preconditioners that do not support sharding (`layer_part_len` returns
+/// `None`) fall back to a replicated local build — deterministic because the
+/// statistics were already all-reduced identically on every rank.
+///
+/// On `Err` the caller keeps the previous inverse epoch and records a stall
+/// (degraded mode). Note the ownership map is static: a dead owner means its
+/// layers can no longer refresh until that rank returns (see ROADMAP for the
+/// dynamic-resharding follow-on).
+pub fn sharded_build(
+    precond: &dyn Preconditioner,
+    stats: &RawStats,
+    gamma: f64,
+    coll: &dyn Collective,
+) -> Result<Box<dyn FisherInverse + Send>, DistError> {
+    let n = coll.size();
+    let l = stats.num_layers();
+    if n <= 1 {
+        return Ok(precond.build(stats, gamma));
+    }
+    let lens: Vec<Option<usize>> = (0..l).map(|i| precond.layer_part_len(stats, i)).collect();
+    if lens.iter().any(|x| x.is_none()) {
+        // Unsharded structure: every rank rebuilds from the (identical)
+        // reduced statistics.
+        return Ok(precond.build(stats, gamma));
+    }
+    let rank = coll.rank();
+    // Build owned parts first so the broadcast loop below never interleaves
+    // local factorization work between collective ops on different ranks.
+    let mut parts: Vec<Option<Vec<f64>>> = (0..l)
+        .map(|i| {
+            if i % n == rank {
+                Some(precond.build_layer_part(stats, gamma, i))
+            } else {
+                None
+            }
+        })
+        .collect();
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(l);
+    for (i, len) in lens.iter().enumerate() {
+        let len = len.expect("checked above");
+        let mut buf = match parts[i].take() {
+            Some(p) => {
+                if p.len() != len {
+                    return Err(DistError::Protocol(format!(
+                        "layer {i} part length {} != declared {len}",
+                        p.len()
+                    )));
+                }
+                p
+            }
+            None => vec![0.0; len],
+        };
+        coll.broadcast(i % n, &mut buf)?;
+        out.push(buf);
+    }
+    precond
+        .assemble_parts(stats, gamma, &out)
+        .ok_or_else(|| DistError::Protocol("preconditioner failed to assemble parts".into()))
+}

@@ -1,0 +1,274 @@
+//! Length-prefixed TCP transport (std-only, no external deps).
+//!
+//! Wire format per frame: `[tag: u8][len: u64 LE][len × f64 LE]` with tags
+//! `0 = Data`, `1 = Abort`, `2 = Hello` (len 1, payload\[0\] = sender rank).
+//!
+//! Topology matches [`super::Star`]: rank 0 binds the listen address and
+//! accepts one connection per spoke; spokes connect with retry/backoff
+//! (listener races at startup are expected — rank 0 may come up last).
+//! Startup requires full membership; after that, a peer that times out or
+//! drops is excluded permanently and training degrades per the staleness
+//! contract in `super`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{Collective, DistError, Frame, Link, LinkError, Star};
+
+/// Largest accepted frame payload (in f64s): a sanity cap so a corrupt
+/// length prefix fails fast instead of attempting a huge allocation.
+const MAX_FRAME_LEN: u64 = 1 << 28;
+
+const TAG_DATA: u8 = 0;
+const TAG_ABORT: u8 = 1;
+const TAG_HELLO: u8 = 2;
+
+/// Connection parameters for a TCP group.
+#[derive(Debug, Clone)]
+pub struct TcpOpts {
+    /// Rank 0's listen address; spokes connect to it.
+    pub addr: String,
+    /// Per-op read/write deadline.
+    pub timeout: Duration,
+    /// Spoke connect attempts before giving up.
+    pub retries: u32,
+    /// Initial delay between connect attempts (doubles, capped at 1 s).
+    pub backoff: Duration,
+}
+
+impl TcpOpts {
+    /// Read options from the environment: `KFAC_DIST_ADDR`
+    /// (default `127.0.0.1:17199`), `KFAC_DIST_RETRIES` (default 40),
+    /// `KFAC_DIST_BACKOFF_MS` (default 50) and `KFAC_DIST_TIMEOUT_MS`
+    /// via [`super::default_timeout`]. See docs/env_registry.md.
+    pub fn from_env() -> TcpOpts {
+        let addr = std::env::var("KFAC_DIST_ADDR")
+            .ok()
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "127.0.0.1:17199".to_string());
+        let retries = std::env::var("KFAC_DIST_RETRIES")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+            .unwrap_or(40);
+        let backoff_ms = std::env::var("KFAC_DIST_BACKOFF_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(50);
+        TcpOpts {
+            addr,
+            timeout: super::default_timeout(),
+            retries,
+            backoff: Duration::from_millis(backoff_ms),
+        }
+    }
+}
+
+/// One framed TCP connection to a peer.
+pub(crate) struct TcpLink {
+    stream: TcpStream,
+}
+
+impl TcpLink {
+    fn new(stream: TcpStream, timeout: Duration) -> std::io::Result<TcpLink> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(TcpLink { stream })
+    }
+
+    fn write_frame(&mut self, tag: u8, payload: &[f64]) -> Result<(), LinkError> {
+        let mut bytes = Vec::with_capacity(9 + payload.len() * 8);
+        bytes.push(tag);
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        for v in payload {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&bytes).map_err(map_io)
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<(), LinkError> {
+        self.stream.read_exact(buf).map_err(map_io)
+    }
+
+    fn read_frame(&mut self) -> Result<Frame, LinkError> {
+        let mut head = [0u8; 9];
+        self.read_exact(&mut head)?;
+        let tag = head[0];
+        let len = u64::from_le_bytes(head[1..9].try_into().expect("9-byte header"));
+        if len > MAX_FRAME_LEN {
+            return Err(LinkError::Io(format!("frame length {len} exceeds sanity cap")));
+        }
+        let mut payload = vec![0.0f64; len as usize];
+        let mut word = [0u8; 8];
+        for v in payload.iter_mut() {
+            self.read_exact(&mut word)?;
+            *v = f64::from_le_bytes(word);
+        }
+        match tag {
+            TAG_DATA => Ok(Frame::Data(payload)),
+            TAG_ABORT => Ok(Frame::Abort),
+            TAG_HELLO => Ok(Frame::Hello(payload)),
+            t => Err(LinkError::Io(format!("unknown frame tag {t}"))),
+        }
+    }
+}
+
+fn map_io(e: std::io::Error) -> LinkError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => LinkError::Timeout,
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::BrokenPipe
+        | ErrorKind::ConnectionAborted => LinkError::Lost,
+        _ => LinkError::Io(e.to_string()),
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&mut self, frame: &Frame) -> Result<(), LinkError> {
+        match frame {
+            Frame::Data(v) => self.write_frame(TAG_DATA, v),
+            Frame::Abort => self.write_frame(TAG_ABORT, &[]),
+            Frame::Hello(v) => self.write_frame(TAG_HELLO, v),
+        }
+    }
+
+    fn recv(&mut self, _timeout: Duration) -> Result<Frame, LinkError> {
+        // The per-op deadline is enforced by the socket read timeout set
+        // at connect time (`TcpLink::new`).
+        self.read_frame()
+    }
+}
+
+/// One rank's handle to a TCP group.
+pub struct TcpCollective {
+    inner: Mutex<Star<TcpLink>>,
+}
+
+impl TcpCollective {
+    /// Join a `size`-rank group as `rank`. Rank 0 binds `opts.addr` and
+    /// waits (up to the deadline window) for every spoke's `Hello`;
+    /// spokes connect with retry/backoff. Startup requires full
+    /// membership — a missing rank is a setup error, not degraded mode.
+    pub fn connect(rank: usize, size: usize, opts: &TcpOpts) -> Result<TcpCollective, DistError> {
+        if rank >= size {
+            return Err(DistError::Protocol(format!("rank {rank} out of range for size {size}")));
+        }
+        if rank == 0 {
+            let listener = TcpListener::bind(&opts.addr)
+                .map_err(|e| DistError::Io(format!("bind {}: {e}", opts.addr)))?;
+            Self::accept_spokes(listener, size, opts)
+        } else {
+            let addr: SocketAddr = opts
+                .addr
+                .parse()
+                .map_err(|e| DistError::Io(format!("bad address {}: {e}", opts.addr)))?;
+            let mut delay = opts.backoff;
+            let mut last_err = String::new();
+            for attempt in 0..=opts.retries {
+                match TcpStream::connect_timeout(&addr, opts.timeout) {
+                    Ok(stream) => {
+                        let mut link = TcpLink::new(stream, opts.timeout)
+                            .map_err(|e| DistError::Io(e.to_string()))?;
+                        link.send(&Frame::Hello(vec![rank as f64]))
+                            .map_err(|e| DistError::Io(format!("hello: {e:?}")))?;
+                        let star = Star::new(rank, size, opts.timeout, vec![Some(link)]);
+                        return Ok(TcpCollective { inner: Mutex::new(star) });
+                    }
+                    Err(e) => {
+                        last_err = e.to_string();
+                        if attempt < opts.retries {
+                            std::thread::sleep(delay);
+                            delay = (delay * 2).min(Duration::from_secs(1));
+                        }
+                    }
+                }
+            }
+            Err(DistError::Io(format!(
+                "connect {} failed after {} attempts: {last_err}",
+                opts.addr,
+                opts.retries + 1
+            )))
+        }
+    }
+
+    /// Hub setup from an already-bound listener (tests bind port 0 to get
+    /// an ephemeral address, then hand the listener in here).
+    pub fn accept_spokes(
+        listener: TcpListener,
+        size: usize,
+        opts: &TcpOpts,
+    ) -> Result<TcpCollective, DistError> {
+        let mut links: Vec<Option<TcpLink>> = (1..size).map(|_| None).collect();
+        if size > 1 {
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| DistError::Io(format!("set_nonblocking: {e}")))?;
+            // Generous membership window: every spoke retries across
+            // opts.retries * backoff, so mirror that here.
+            let window = opts.timeout + opts.backoff * opts.retries.max(1);
+            let deadline = Instant::now() + window;
+            let mut joined = 0usize;
+            while joined + 1 < size {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // A client that sends garbage (port scanner, stray
+                        // connection) is dropped; keep accepting.
+                        if let Ok(mut link) = TcpLink::new(stream, opts.timeout) {
+                            if let Ok(Frame::Hello(p)) = link.read_frame() {
+                                if p.len() == 1 && p[0].fract() == 0.0 && p[0] >= 1.0 {
+                                    let r = p[0] as usize;
+                                    if r < size && links[r - 1].is_none() {
+                                        links[r - 1] = Some(link);
+                                        joined += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        if Instant::now() >= deadline {
+                            let missing: Vec<usize> = links
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, l)| l.is_none())
+                                .map(|(i, _)| i + 1)
+                                .collect();
+                            return Err(DistError::Io(format!(
+                                "startup: ranks {missing:?} never joined"
+                            )));
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(DistError::Io(format!("accept: {e}"))),
+                }
+            }
+        }
+        let star = Star::new(0, size, opts.timeout, links);
+        Ok(TcpCollective { inner: Mutex::new(star) })
+    }
+}
+
+impl Collective for TcpCollective {
+    fn rank(&self) -> usize {
+        self.inner.lock().unwrap().rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.lock().unwrap().size()
+    }
+
+    fn all_reduce_sum(&self, buf: &mut [f64]) -> Result<usize, DistError> {
+        self.inner.lock().unwrap().all_reduce_sum(buf)
+    }
+
+    fn broadcast(&self, root: usize, buf: &mut [f64]) -> Result<(), DistError> {
+        self.inner.lock().unwrap().broadcast(root, buf)
+    }
+
+    fn barrier(&self) -> Result<(), DistError> {
+        self.inner.lock().unwrap().barrier()
+    }
+}

@@ -1,0 +1,45 @@
+//! In-process multi-rank harness (`--dist local`).
+//!
+//! Spawns one OS thread per rank, wires them into a [`LocalGroup`], and
+//! hands each rank its [`Collective`] handle. Used by `main.rs` for
+//! single-machine multi-worker runs and by the integration tests for the
+//! `ranks=1` bit-identity and multi-rank lockstep contracts.
+
+use std::sync::{Arc, Mutex};
+
+use super::local::LocalGroup;
+use super::Collective;
+
+/// Run `f(rank, collective)` on `n` concurrent ranks (rank 0 on the calling
+/// thread) and return the per-rank results in rank order.
+pub fn run_local_ranks<T: Send>(
+    n: usize,
+    f: impl Fn(usize, Arc<dyn Collective>) -> T + Sync,
+) -> Vec<T> {
+    run_ranks_with(LocalGroup::create(n), &f)
+}
+
+/// Like [`run_local_ranks`] but over an explicit pre-built group — the
+/// fault-injection tests pass `LocalGroup::create_with_timeout` groups so
+/// slow peers get excluded quickly.
+pub fn run_ranks_with<C: Collective + 'static, T: Send>(
+    colls: Vec<C>,
+    f: &(impl Fn(usize, Arc<dyn Collective>) -> T + Sync),
+) -> Vec<T> {
+    let n = colls.len();
+    // Hand each rank its own handle through a take-once slot: the closure
+    // below is `Fn` (shared across threads), so it cannot move out of a
+    // plain Vec.
+    let slots: Vec<Mutex<Option<Arc<dyn Collective>>>> = colls
+        .into_iter()
+        .map(|c| Mutex::new(Some(Arc::new(c) as Arc<dyn Collective>)))
+        .collect();
+    crate::par::scoped_ranks(n, |rank| {
+        let coll = slots[rank]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("run_ranks_with: rank handle already taken");
+        f(rank, coll)
+    })
+}

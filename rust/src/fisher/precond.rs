@@ -34,6 +34,39 @@ pub trait Preconditioner {
     /// checkpoint resume rebuilds cached inverses through this method
     /// and relies on bit-identical results.
     fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send>;
+
+    /// Flat length of layer `layer`'s independently-buildable part, or
+    /// `None` if this structure cannot shard its build per layer (the
+    /// default). When `Some` for every layer, `dist::sharded_build` splits
+    /// the refresh round-robin across ranks via `build_layer_part` /
+    /// `assemble_parts`; otherwise every rank falls back to a replicated
+    /// `build` from the (identical, already all-reduced) statistics.
+    fn layer_part_len(&self, stats: &RawStats, layer: usize) -> Option<usize> {
+        let _ = (stats, layer);
+        None
+    }
+
+    /// Factorize layer `layer` only, returning exactly
+    /// `layer_part_len(stats, layer)` f64s. Must be bitwise identical to
+    /// the corresponding slice of a full `build` — resume and the
+    /// `ranks=1` equivalence contract depend on it.
+    fn build_layer_part(&self, stats: &RawStats, gamma: f64, layer: usize) -> Vec<f64> {
+        let _ = (stats, gamma, layer);
+        Vec::new()
+    }
+
+    /// Reassemble a full inverse from one part per layer (each produced by
+    /// `build_layer_part` on some rank and broadcast). Returns `None` when
+    /// the structure does not support sharding or a part is malformed.
+    fn assemble_parts(
+        &self,
+        stats: &RawStats,
+        gamma: f64,
+        parts: &[Vec<f64>],
+    ) -> Option<Box<dyn FisherInverse + Send>> {
+        let _ = (stats, gamma, parts);
+        None
+    }
 }
 
 /// `F̌⁻¹` — block-diagonal (paper §4.2), factored Tikhonov damping.
@@ -46,6 +79,47 @@ impl Preconditioner for BlockDiagPrecond {
 
     fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
         Box::new(BlockDiagInverse::build(stats, gamma))
+    }
+
+    fn layer_part_len(&self, stats: &RawStats, layer: usize) -> Option<usize> {
+        let a = stats.aa[layer].rows;
+        let g = stats.gg[layer].rows;
+        Some(a * a + g * g)
+    }
+
+    fn build_layer_part(&self, stats: &RawStats, gamma: f64, layer: usize) -> Vec<f64> {
+        // Mirrors BlockDiagInverse::build's per-layer closure exactly so a
+        // sharded refresh is bitwise identical to a replicated one.
+        super::check_factors_finite("blkdiag", layer, &stats.aa[layer], &stats.gg[layer]);
+        let (ad, gd) = super::damping::damped_factors(&stats.aa[layer], &stats.gg[layer], gamma);
+        let ainv = crate::linalg::chol::spd_inverse(&ad);
+        let ginv = crate::linalg::chol::spd_inverse(&gd);
+        let mut out = ainv.data;
+        out.extend_from_slice(&ginv.data);
+        out
+    }
+
+    fn assemble_parts(
+        &self,
+        stats: &RawStats,
+        _gamma: f64,
+        parts: &[Vec<f64>],
+    ) -> Option<Box<dyn FisherInverse + Send>> {
+        if parts.len() != stats.num_layers() {
+            return None;
+        }
+        let mut ainv = Vec::with_capacity(parts.len());
+        let mut ginv = Vec::with_capacity(parts.len());
+        for (layer, part) in parts.iter().enumerate() {
+            let a = stats.aa[layer].rows;
+            let g = stats.gg[layer].rows;
+            if part.len() != a * a + g * g {
+                return None;
+            }
+            ainv.push(crate::linalg::Mat::from_vec(a, a, part[..a * a].to_vec()));
+            ginv.push(crate::linalg::Mat::from_vec(g, g, part[a * a..].to_vec()));
+        }
+        Some(Box::new(BlockDiagInverse { ainv, ginv }))
     }
 }
 

@@ -66,6 +66,50 @@ impl RawStats {
     pub fn num_layers(&self) -> usize {
         self.aa.len()
     }
+
+    /// All factor matrices in a fixed, stable order (`aa`, `aa_off`, `gg`,
+    /// `gg_off`) — the order the flat serialize/reduce view below relies
+    /// on. Distributed workers all-reduce this view, so the order must
+    /// match on every rank (it is a pure function of the architecture).
+    pub fn mats(&self) -> impl Iterator<Item = &Mat> {
+        self.aa.iter().chain(self.aa_off.iter()).chain(self.gg.iter()).chain(self.gg_off.iter())
+    }
+
+    /// Mutable counterpart of [`mats`](Self::mats), same order.
+    pub fn mats_mut(&mut self) -> impl Iterator<Item = &mut Mat> {
+        self.aa
+            .iter_mut()
+            .chain(self.aa_off.iter_mut())
+            .chain(self.gg.iter_mut())
+            .chain(self.gg_off.iter_mut())
+    }
+
+    /// Total element count of the flat view.
+    pub fn flat_len(&self) -> usize {
+        self.mats().map(|m| m.data.len()).sum()
+    }
+
+    /// Serialize every factor matrix into `out` (length `flat_len()`), in
+    /// [`mats`](Self::mats) order.
+    pub fn write_flat(&self, out: &mut [f64]) {
+        let mut i = 0;
+        for m in self.mats() {
+            out[i..i + m.data.len()].copy_from_slice(&m.data);
+            i += m.data.len();
+        }
+        assert_eq!(i, out.len(), "write_flat: buffer length != flat_len()");
+    }
+
+    /// Inverse of [`write_flat`](Self::write_flat): load every factor
+    /// matrix from `src` (shapes are unchanged; only data is read).
+    pub fn read_flat(&mut self, src: &[f64]) {
+        let mut i = 0;
+        for m in self.mats_mut() {
+            m.data.copy_from_slice(&src[i..i + m.data.len()]);
+            i += m.data.len();
+        }
+        assert_eq!(i, src.len(), "read_flat: buffer length != flat_len()");
+    }
 }
 
 /// Online exponentially-decayed estimates of the factor statistics.
@@ -164,6 +208,25 @@ mod tests {
         }
         for (a, b) in z.gg_off.iter().zip(st.gg_off.iter()) {
             assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+    }
+
+    #[test]
+    fn flat_view_roundtrips_bitwise() {
+        let (net, p, x) = setup();
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(4));
+        let st = RawStats::from_batch(&fwd, &gs);
+        let mut flat = vec![0.0; st.flat_len()];
+        st.write_flat(&mut flat);
+        assert_eq!(flat.len(), st.mats().map(|m| m.data.len()).sum::<usize>());
+        let mut back = RawStats::zeros(&net.arch);
+        back.read_flat(&flat);
+        for (a, b) in st.mats().zip(back.mats()) {
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

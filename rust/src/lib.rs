@@ -35,6 +35,8 @@ pub mod optim;
 
 pub mod data;
 
+pub mod dist;
+
 pub mod backend;
 pub mod runtime;
 
@@ -47,6 +49,7 @@ pub mod prelude {
     pub use crate::backend::{BatchStats, ModelBackend, RustBackend};
     pub use crate::coordinator::{Event, Problem, TrainReport, TrainSession};
     pub use crate::data::dataset::Dataset;
+    pub use crate::dist::{Collective, DistError, NoopCollective};
     pub use crate::fisher::{FisherInverse, PrecondRef, Preconditioner};
     pub use crate::linalg::{KronBasis, Mat};
     pub use crate::nn::{Act, Arch, LossKind, Params};

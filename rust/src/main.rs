@@ -1,7 +1,7 @@
 //! `kfac` CLI — train the paper's benchmark problems with K-FAC (any
 //! registered preconditioner) or the SGD baseline, on either the
 //! pure-Rust backend or the AOT/PJRT backend, with checkpoint
-//! save/resume.
+//! save/resume and optional multi-worker data parallelism.
 //!
 //! Examples:
 //!   kfac train --problem mnist_ae --iters 200 --batch 1000
@@ -10,43 +10,95 @@
 //!   kfac train --problem mnist_ae --checkpoint results/run.ckpt
 //!   kfac train --problem mnist_ae --resume results/run.ckpt --iters 400
 //!   kfac train --problem mnist_ae --backend pjrt --artifacts artifacts
+//!   kfac train --problem mnist_clf --ranks 4                 (in-process workers)
+//!   kfac train --problem mnist_clf --ranks 2 --dist tcp --rank 0   (one per process)
 //!   kfac list-archs --artifacts artifacts
 
 use kfac::backend::{ModelBackend, PjrtBackend, RustBackend};
 use kfac::coordinator::cli::Args;
 use kfac::coordinator::{log_to_csv, LogRow, Problem, TrainSession};
 use kfac::data::Dataset;
+use kfac::dist::backend::DistBackend;
+use kfac::dist::tcp::{TcpCollective, TcpOpts};
+use kfac::dist::trainer::run_local_ranks;
+use kfac::dist::Collective;
 use kfac::fisher::precond;
 use kfac::nn::Arch;
 use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
 use kfac::rng::Rng;
 use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Options that take a value (`--key v` / `--key=v`); the strict parser
+/// rejects a typo'd option instead of silently ignoring it.
+const VALUE_OPTS: &[&str] = &[
+    "artifacts",
+    "backend",
+    "batch",
+    "checkpoint",
+    "checkpoint-every",
+    "data",
+    "dist",
+    "dist-addr",
+    "eval-every",
+    "eval-rows",
+    "iters",
+    "lambda0",
+    "lr",
+    "mu-max",
+    "optimizer",
+    "out",
+    "problem",
+    "rank",
+    "ranks",
+    "resume",
+    "seed",
+    "t-cov",
+    "t-inv",
+    "t-scale",
+];
+
+/// Bare boolean flags.
+const FLAG_OPTS: &[&str] = &["exp-schedule", "no-momentum"];
 
 fn main() {
-    let args = Args::from_env();
+    let args = match Args::parse_checked(std::env::args().skip(1), VALUE_OPTS, FLAG_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
     match args.command.as_deref() {
         Some("train") => train(&args),
         Some("list-archs") => list_archs(&args),
-        _ => {
-            eprintln!(
-                "usage: kfac <command> [options]\n\
-                 commands:\n\
-                 \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf\n\
-                 \x20              --optimizer kfac|kfac_<precond>|sgd  --iters N --batch M\n\
-                 \x20              (preconditioners: {})\n\
-                 \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
-                 \x20              --t-scale N  (EKFAC scale-refresh period; 0 disables)\n\
-                 \x20              --t-cov N --t-inv N  (statistics / inverse-rebuild periods;\n\
-                 \x20              KFAC_ASYNC=1 rebuilds in the background, one epoch stale)\n\
-                 \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
-                 \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
-                 \x20              --checkpoint PATH --checkpoint-every N --resume PATH\n\
-                 \x20 list-archs   --artifacts DIR",
-                precond::names().join("|")
-            );
-            std::process::exit(2);
-        }
+        _ => usage(),
     }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: kfac <command> [options]\n\
+         commands:\n\
+         \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf\n\
+         \x20              --optimizer kfac|kfac_<precond>|sgd  --iters N --batch M\n\
+         \x20              (preconditioners: {})\n\
+         \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
+         \x20              --t-scale N  (EKFAC scale-refresh period; 0 disables)\n\
+         \x20              --t-cov N --t-inv N  (statistics / inverse-rebuild periods;\n\
+         \x20              KFAC_ASYNC=1 rebuilds in the background, one epoch stale)\n\
+         \x20              --backend rust|pjrt --artifacts DIR --out results/train.csv\n\
+         \x20              --exp-schedule  (exponential batch schedule, paper §13)\n\
+         \x20              --checkpoint PATH --checkpoint-every N --resume PATH\n\
+         \x20              --ranks N --dist local|tcp  (data-parallel workers: `local`\n\
+         \x20              spawns N in-process ranks, `tcp` runs one rank per process)\n\
+         \x20              --rank R --dist-addr HOST:PORT  (tcp mode: this process's\n\
+         \x20              rank; rank 0 listens on the address, others connect;\n\
+         \x20              see docs/env_registry.md for KFAC_DIST_* tuning)\n\
+         \x20 list-archs   --artifacts DIR",
+        precond::names().join("|")
+    );
+    std::process::exit(2);
 }
 
 fn list_archs(args: &Args) {
@@ -73,8 +125,15 @@ fn list_archs(args: &Args) {
 
 /// Build the optimizer named by `--optimizer`: `sgd`, `kfac` (paper
 /// default, block-tridiagonal), or `kfac_<name>` for any registered
-/// preconditioner.
-fn build_optimizer(args: &Args, arch: &Arch) -> Box<dyn Optimizer> {
+/// preconditioner. In distributed runs `coll` is threaded into
+/// [`KfacConfig::collective`] so inverse rebuilds are sharded across
+/// ranks; SGD ignores it (its gradients are already all-reduced by the
+/// [`DistBackend`] wrapper).
+fn build_optimizer(
+    args: &Args,
+    arch: &Arch,
+    coll: Option<Arc<dyn Collective>>,
+) -> Box<dyn Optimizer> {
     let name = args.get_or("optimizer", "kfac");
     if name == "sgd" {
         return Box::new(Sgd::new(SgdConfig {
@@ -115,11 +174,13 @@ fn build_optimizer(args: &Args, arch: &Arch) -> Box<dyn Optimizer> {
             // amortized EKFAC scale re-estimation cadence (ignored by
             // structures without re-estimable scales)
             t_scale: args.get_usize("t-scale", defaults.t_scale),
+            collective: coll,
             ..defaults
         },
     ))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_session(
     args: &Args,
     arch: &Arch,
@@ -128,8 +189,20 @@ fn run_session(
     iters: usize,
     schedule: BatchSchedule,
     seed: u64,
+    coll: Option<Arc<dyn Collective>>,
 ) -> Vec<LogRow> {
-    let optimizer = build_optimizer(args, arch);
+    let (rank, ranks) = coll.as_ref().map_or((0, 1), |c| (c.rank(), c.size()));
+    let optimizer = build_optimizer(args, arch, coll.clone());
+    // In distributed runs wrap the compute backend so losses, gradients
+    // and Kronecker statistics are all-reduced across ranks.
+    let mut wrapped;
+    let backend: &mut dyn ModelBackend = match &coll {
+        Some(c) => {
+            wrapped = DistBackend::new(backend, c.clone());
+            &mut wrapped
+        }
+        None => backend,
+    };
     let mut session = TrainSession::for_dataset(arch.clone(), ds)
         .iters(iters)
         .schedule(schedule)
@@ -140,9 +213,14 @@ fn run_session(
         .params(arch.sparse_init(&mut Rng::new(seed ^ 0xA5)))
         .optimizer_boxed(optimizer)
         .backend(backend)
-        .verbose(true);
-    if let Some(path) = args.get("checkpoint") {
-        session = session.checkpoint_every(args.get_usize("checkpoint-every", 25), path);
+        .shard(rank, ranks.max(1))
+        .verbose(rank == 0);
+    // Only rank 0 writes checkpoints (all ranks hold identical state,
+    // so one copy suffices and concurrent writers would race).
+    if rank == 0 {
+        if let Some(path) = args.get("checkpoint") {
+            session = session.checkpoint_every(args.get_usize("checkpoint-every", 25), path);
+        }
     }
     if let Some(path) = args.get("resume") {
         session = session.resume_from(path);
@@ -157,8 +235,11 @@ fn run_session(
 }
 
 fn train(args: &Args) {
-    let problem = Problem::from_name(&args.get_or("problem", "mnist_ae"))
-        .expect("unknown --problem");
+    let problem_name = args.get_or("problem", "mnist_ae");
+    let problem = Problem::from_name(&problem_name).unwrap_or_else(|| {
+        eprintln!("unknown --problem {problem_name} (use mnist_ae|curves_ae|faces_ae|mnist_clf)");
+        std::process::exit(2);
+    });
     let iters = args.get_usize("iters", 100);
     let n_data = args.get_usize("data", 4000);
     let seed = args.get_usize("seed", 0) as u64;
@@ -169,32 +250,77 @@ fn train(args: &Args) {
         BatchSchedule::Fixed(batch)
     };
 
+    let ranks = args.get_usize("ranks", 1);
+    let dist_mode = args.get_or("dist", "local");
+    if dist_mode != "local" && dist_mode != "tcp" {
+        eprintln!("unknown --dist {dist_mode} (use local or tcp)");
+        std::process::exit(2);
+    }
+    let backend_name = args.get_or("backend", "rust");
+    if ranks > 1 && backend_name != "rust" {
+        eprintln!("error: --ranks {ranks} requires --backend rust");
+        std::process::exit(2);
+    }
+
     println!("# generating {} dataset (n={n_data})…", problem.name());
     let ds = problem.dataset(n_data, seed);
     let arch = problem.arch();
     println!("# arch {:?} ({} params)", arch.widths, arch.num_params());
 
-    let log = match args.get_or("backend", "rust").as_str() {
-        "rust" => {
-            let mut backend = RustBackend::new(arch.clone());
-            run_session(args, &arch, &ds, &mut backend, iters, schedule, seed)
-        }
-        "pjrt" => {
-            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-            let mut backend = PjrtBackend::new(&dir, problem.name()).unwrap_or_else(|e| {
-                eprintln!("error loading artifacts: {e:#}");
-                std::process::exit(1);
-            });
-            assert_eq!(
-                backend.arch().widths,
-                arch.widths,
-                "artifact arch mismatch — re-run `make artifacts`"
-            );
-            run_session(args, &arch, &ds, &mut backend, iters, schedule, seed)
-        }
-        other => {
-            eprintln!("unknown --backend {other}");
+    let log = if ranks > 1 && dist_mode == "local" {
+        println!("# distributed: {ranks} in-process ranks");
+        let (arch_ref, ds_ref, sched) = (&arch, &ds, schedule);
+        let mut logs = run_local_ranks(ranks, |_rank, coll| {
+            let mut backend = RustBackend::new(arch_ref.clone());
+            let sched = sched.clone();
+            run_session(args, arch_ref, ds_ref, &mut backend, iters, sched, seed, Some(coll))
+        });
+        // every rank ends with an identical log; report rank 0's
+        logs.swap_remove(0)
+    } else if ranks > 1 {
+        // tcp: this process is exactly one rank of the group
+        let rank = args.get_usize("rank", 0);
+        if rank >= ranks {
+            eprintln!("error: --rank {rank} out of range for --ranks {ranks}");
             std::process::exit(2);
+        }
+        let mut opts = TcpOpts::from_env();
+        if let Some(a) = args.get("dist-addr") {
+            opts.addr = a.to_string();
+        }
+        println!("# distributed: rank {rank}/{ranks} over tcp at {}", opts.addr);
+        let coll: Arc<dyn Collective> = match TcpCollective::connect(rank, ranks, &opts) {
+            Ok(c) => Arc::new(c),
+            Err(e) => {
+                eprintln!("error: distributed setup failed (rank {rank}): {e}");
+                std::process::exit(1);
+            }
+        };
+        let mut backend = RustBackend::new(arch.clone());
+        run_session(args, &arch, &ds, &mut backend, iters, schedule, seed, Some(coll))
+    } else {
+        match backend_name.as_str() {
+            "rust" => {
+                let mut backend = RustBackend::new(arch.clone());
+                run_session(args, &arch, &ds, &mut backend, iters, schedule, seed, None)
+            }
+            "pjrt" => {
+                let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+                let mut backend = PjrtBackend::new(&dir, problem.name()).unwrap_or_else(|e| {
+                    eprintln!("error loading artifacts: {e:#}");
+                    std::process::exit(1);
+                });
+                assert_eq!(
+                    backend.arch().widths,
+                    arch.widths,
+                    "artifact arch mismatch — re-run `make artifacts`"
+                );
+                run_session(args, &arch, &ds, &mut backend, iters, schedule, seed, None)
+            }
+            other => {
+                eprintln!("unknown --backend {other}");
+                std::process::exit(2);
+            }
         }
     };
 

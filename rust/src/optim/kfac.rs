@@ -83,6 +83,21 @@ pub struct KfacConfig {
     /// `false` is the deterministic synchronous path, bit-identical to
     /// the pre-split `t3` cadence.
     pub refresh_async: bool,
+    /// Collective group for distributed training (`None` = single
+    /// process). With a group of size > 1, each `t_inv` boundary builds
+    /// the inverse through `dist::sharded_build`: the per-layer
+    /// factorization is sharded round-robin by layer index across ranks
+    /// and the parts are broadcast. A refresh that cannot complete (peer
+    /// slow past the deadline or dropped) records a stall and keeps
+    /// stepping on the previous `inv_epoch` — the async staleness
+    /// contract. Both the T₂ γ line search and the background async
+    /// refresh are disabled in this mode (the first would bypass
+    /// sharding with per-candidate local rebuilds; the second would
+    /// interleave two ranks' collective ops); γ follows the §6.6 default
+    /// √(λ+η) at each rebuild, as in async mode. A size-1 group is
+    /// ignored entirely, keeping the trajectory bit-identical to the
+    /// single-process path.
+    pub collective: Option<Arc<dyn crate::dist::Collective>>,
     /// λ decay ω₁ (paper: (19/20)^T₁).
     pub omega1: f64,
     /// γ step ω₂ (paper: sqrt(19/20)^T₂).
@@ -111,6 +126,7 @@ impl std::fmt::Debug for KfacConfig {
             .field("t_inv", &self.t_inv)
             .field("t_scale", &self.t_scale)
             .field("refresh_async", &self.refresh_async)
+            .field("collective", &self.collective.as_ref().map(|c| (c.rank(), c.size())))
             .finish()
     }
 }
@@ -130,6 +146,7 @@ impl Default for KfacConfig {
             t_inv: 20,
             t_scale: 5,
             refresh_async: refresh_async_from_env(),
+            collective: None,
             omega1: (19.0_f64 / 20.0).powi(t1 as i32),
             omega2: (19.0_f64 / 20.0).sqrt().powi(t2 as i32),
             tau1: 1.0 / 8.0,
@@ -211,8 +228,12 @@ pub struct Kfac {
     inv_epoch: usize,
     /// Asynchronous rebuild in flight, if any (`refresh_async` only).
     pending: Option<PendingBuild>,
-    /// Boundaries that had to block on an unfinished background build
-    /// (diagnostic only; not checkpointed).
+    /// Refresh boundaries that could not serve a fresh inverse: async
+    /// builds still in flight at the swap, and distributed sharded
+    /// builds that failed on a collective error (the step keeps using
+    /// the previous `inv_epoch` either way). Checkpointed alongside
+    /// `inv_epoch` in async/distributed mode so a resumed run's stall
+    /// accounting matches the uninterrupted one.
     stalls: usize,
     /// The (stats, γ) snapshot the cached inverse was built from —
     /// checkpointed so resume can rebuild `inv` bit-exactly.
@@ -358,7 +379,48 @@ impl Optimizer for Kfac {
         // follows the §6.6 default √(λ+η)).
         let bootstrap = self.inv.is_none() || k <= 3;
         let boundary = cfg.t_inv > 0 && k % cfg.t_inv == 0;
-        let run_async = cfg.refresh_async && !bootstrap;
+        let dist = cfg.collective.as_ref().filter(|c| c.size() > 1);
+        let run_async = cfg.refresh_async && !bootstrap && dist.is_none();
+        if let Some(coll) = dist {
+            if bootstrap || boundary {
+                // Distributed refresh: sharded round-robin factorization +
+                // broadcast, synchronous on every rank (the statistics were
+                // all-reduced, so every rank agrees on the inputs and on γ).
+                // The T₂ line search is disabled here, so γ follows the
+                // §6.6 default √(λ+η) past bootstrap, exactly like async.
+                if !bootstrap {
+                    self.gamma =
+                        (self.lambda + cfg.eta).sqrt().clamp(cfg.gamma_min, cfg.gamma_max);
+                }
+                match crate::dist::sharded_build(
+                    cfg.precond.as_ref(),
+                    &self.stats.s,
+                    self.gamma,
+                    coll.as_ref(),
+                ) {
+                    Ok(inv) => {
+                        let snap = self.stats.s.clone();
+                        let gamma = self.gamma;
+                        self.install_inverse(inv, snap, gamma);
+                    }
+                    Err(_) => {
+                        // Degraded mode: keep stepping on the previous
+                        // inverse epoch and record the missed refresh.
+                        self.stalls += 1;
+                        if self.inv.is_none() {
+                            // Bootstrap cannot degrade — there is no
+                            // previous epoch yet. Build replicated from
+                            // the local (already-reduced) statistics.
+                            let inv = cfg.precond.build(&self.stats.s, self.gamma);
+                            let snap = self.stats.s.clone();
+                            let gamma = self.gamma;
+                            self.install_inverse(inv, snap, gamma);
+                        }
+                    }
+                }
+            }
+        }
+        let dist_active = dist.is_some();
         if run_async && boundary {
             if let Some(p) = self.pending.take() {
                 let (inv, snap, stalled) = p.job.finish();
@@ -374,8 +436,8 @@ impl Optimizer for Kfac {
         }
 
         // candidate γ set (Section 6.6)
-        let adjust_gamma = !run_async && cfg.t2 > 0 && k % cfg.t2 == 0;
-        let refresh_inv = !run_async && (bootstrap || boundary);
+        let adjust_gamma = !run_async && !dist_active && cfg.t2 > 0 && k % cfg.t2 == 0;
+        let refresh_inv = !run_async && !dist_active && (bootstrap || boundary);
         let gammas: Vec<f64> = if adjust_gamma {
             vec![
                 self.gamma,
@@ -552,13 +614,17 @@ impl Optimizer for Kfac {
             st.set_scalar("scale_k", sc.k as f64);
             st.set_mats("scale_s", sc.s.clone());
         }
-        // Async-only keys (a synchronous snapshot stays bit-compatible
-        // with the pre-split format). A checkpoint cannot wait on the
-        // background job, so a mid-flight snapshot records the job's
-        // *inputs*; load_state re-submits the identical deterministic
-        // build, and the resumed run collects it at the same boundary.
-        if self.cfg.refresh_async {
+        // Async/distributed-only keys (a plain synchronous snapshot stays
+        // bit-compatible with the pre-split format; a size-1 "distributed"
+        // run takes the plain path and must snapshot identically to it). A
+        // checkpoint cannot wait on the background job, so a mid-flight
+        // snapshot records the job's *inputs*; load_state re-submits the
+        // identical deterministic build, and the resumed run collects it at
+        // the same boundary.
+        let dist = self.cfg.collective.as_ref().is_some_and(|c| c.size() > 1);
+        if self.cfg.refresh_async || dist {
             st.set_scalar("inv_epoch", self.inv_epoch as f64);
+            st.set_scalar("refresh_stalls", self.stalls as f64);
         }
         if let Some(p) = &self.pending {
             let snap = p.job.input();
@@ -658,6 +724,12 @@ impl Optimizer for Kfac {
             Some(v) => v as usize,
             None => usize::from(self.inv.is_some()),
         };
+        // Stall counter: carried by async/distributed checkpoints so the
+        // resumed run's accounting matches the uninterrupted one;
+        // pre-dist snapshots don't record it, so resume restarts the
+        // count at zero (deliberate — the counter is diagnostic and the
+        // trajectory never reads it).
+        self.stalls = st.scalar("refresh_stalls").map_or(0, |v| v as usize);
         // Mid-flight background build: re-submit the recorded inputs so
         // the resumed run collects the identical build at the same
         // boundary. A synchronous session discards the pending record —
@@ -968,6 +1040,40 @@ mod tests {
         }
         assert_eq!(epochs, vec![1, 2, 3, 3, 3, 3, 3, 4, 4, 4, 4, 5]);
         assert_eq!(opt.inverse_epoch(), 5);
+    }
+
+    #[test]
+    fn async_state_preserves_stall_counter() {
+        // Satellite audit of the async resume path: `refresh_stalls` and
+        // `inv_epoch` travel through state()/load_state(), so a resumed
+        // run's accounting matches the uninterrupted one. A pre-dist
+        // checkpoint (no refresh_stalls key) deliberately restarts the
+        // counter at zero.
+        let (arch, mut params, x, y) = toy_problem(12);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { lambda0: 10.0, t_inv: 4, refresh_async: true, ..Default::default() };
+        let mut opt = Kfac::new(&arch, cfg.clone());
+        for _ in 0..9 {
+            opt.step(&mut backend, &mut params, &x, &y);
+        }
+        let mut st = opt.state();
+        assert!(st.scalar("inv_epoch").is_some(), "async snapshot records inv_epoch");
+        let recorded = st.scalar("refresh_stalls").expect("async snapshot records refresh_stalls");
+        assert_eq!(recorded as usize, opt.refresh_stalls());
+
+        // Force a nonzero counter through the roundtrip.
+        st.set_scalar("refresh_stalls", 3.0);
+        let mut opt_b = Kfac::new(&arch, cfg.clone());
+        opt_b.load_state(&st).expect("state loads");
+        assert_eq!(opt_b.refresh_stalls(), 3);
+        assert_eq!(opt_b.inverse_epoch(), opt.inverse_epoch());
+
+        // Pre-dist snapshot: drop the key and confirm the documented zero.
+        let mut st_old = opt.state();
+        st_old.entries.remove("refresh_stalls");
+        let mut opt_c = Kfac::new(&arch, cfg);
+        opt_c.load_state(&st_old).expect("state loads");
+        assert_eq!(opt_c.refresh_stalls(), 0);
     }
 
     #[test]

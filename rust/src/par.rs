@@ -598,6 +598,42 @@ where
     }
 }
 
+/// Run `f(rank)` for every rank in `0..n` on long-lived scoped threads
+/// (rank 0 on the calling thread), collecting results in rank order.
+///
+/// Unlike `par_map`, each closure runs for the *whole call* — this is the
+/// in-process harness for multi-rank distributed training (`--dist local`),
+/// where every rank owns a blocking training loop that must make progress
+/// concurrently with its peers. Do not route through the worker pool: the
+/// ranks block on collective exchanges with each other, and parking them on
+/// pool workers could deadlock a pool smaller than `n`.
+#[cfg(not(loom))]
+pub fn scoped_ranks<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    if n <= 1 {
+        return vec![f(0)];
+    }
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let (first, rest) = slots.split_at_mut(1);
+        std::thread::scope(|s| {
+            for (i, slot) in rest.iter_mut().enumerate() {
+                let f = &f;
+                s.spawn(move || *slot = Some(f(i + 1)));
+            }
+            first[0] = Some(f(0));
+        });
+    }
+    slots.into_iter().map(|o| o.expect("scoped_ranks: rank did not finish")).collect()
+}
+
+/// Under loom the distributed harness is out of model scope (the collective
+/// ranks block on each other, which the bounded-interleaving explorer would
+/// deadlock on); keep the symbol callable as a serial sweep.
+#[cfg(loom)]
+pub fn scoped_ranks<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    (0..n.max(1)).map(f).collect()
+}
+
 /// Parallel map over indices `0..n`, collecting results in order.
 pub fn par_map<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
 where

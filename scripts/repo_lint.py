@@ -25,6 +25,11 @@ Rules — each encodes an invariant the generic toolchain can't check:
                         key without a pin update silently changes the
                         checkpoint format.
   R5  deny-attr         rust/src/lib.rs keeps `#![deny(unsafe_op_in_unsafe_fn)]`.
+  R6  dist-no-unsafe    The distributed transport layer (rust/src/dist)
+                        contains no `unsafe` at all — framing/length
+                        handling there parses attacker-reachable network
+                        input, so it stays in fully safe Rust (R1's
+                        SAFETY-comment escape hatch does not apply).
 
 Usage:
   scripts/repo_lint.py [--root DIR]   lint the tree (exit 1 on findings)
@@ -41,6 +46,7 @@ LOOKBACK = 10  # lines above an unsafe site that may hold its SAFETY comment
 # Directories scanned for .rs files (repo-relative).
 RS_DIRS = ["rust/src", "tests", "benches", "examples", "verify"]
 LIB_DIR = "rust/src"  # scope for R2/R4
+DIST_DIR = "rust/src/dist"  # scope for R6
 
 ENV_REGISTRY = "docs/env_registry.md"
 CHECKPOINT_RS = "rust/src/coordinator/checkpoint.rs"
@@ -219,6 +225,15 @@ def lint_safety(rel, raw, code):
     return findings
 
 
+def lint_dist_unsafe(rel, code):
+    """R6: no `unsafe` of any kind under rust/src/dist."""
+    findings = []
+    for m in UNSAFE_RE.finditer(code):
+        ln = line_of(code, m.start())
+        findings.append(f"{rel}:{ln}: R6 `unsafe` in the transport layer (rust/src/dist)")
+    return findings
+
+
 def lint_banned(rel, code, in_test):
     findings = []
     for pat, label in BANNED:
@@ -289,6 +304,8 @@ def run_lint(root):
         in_test = test_region_lines(code)
 
         findings += lint_safety(rel, raw, code)
+        if rel.startswith(DIST_DIR + os.sep) or rel.startswith(DIST_DIR + "/"):
+            findings += lint_dist_unsafe(rel, code)
         if rel.startswith(LIB_DIR + os.sep) or rel.startswith(LIB_DIR + "/"):
             findings += lint_banned(rel, code, in_test)
             for m in SETTER_RE.finditer(nocom):
@@ -354,6 +371,13 @@ def self_test():
     gated = "#[cfg(all(test, not(loom)))]\nmod tests { fn g() { v.get(0).unwrap(); } }\n"
     c, _ = split_views(gated)
     check("R2: cfg(all(test,..)) excluded", not lint_banned("t.rs", c, test_region_lines(c)))
+
+    # R6: unsafe in dist is flagged even with a SAFETY comment
+    dist_src = "// SAFETY: irrelevant here\nunsafe { x() }\n"
+    c, _ = split_views(dist_src)
+    check("R6: unsafe in dist flagged", len(lint_dist_unsafe("rust/src/dist/t.rs", c)) == 1)
+    c, _ = split_views('let s = "unsafe in a string";\n')
+    check("R6: string/comment unsafe ignored", not lint_dist_unsafe("rust/src/dist/t.rs", c))
 
     # R4 key extraction
     src = 'fn s(&mut self) { st.set_scalar("k", 1.0); st.set_str(&dyn_key, "x"); }\n'

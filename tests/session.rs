@@ -527,6 +527,50 @@ fn async_mid_flight_checkpoint_resumes_bit_exactly() {
 }
 
 #[test]
+fn async_checkpoint_carries_and_restores_stall_counter() {
+    // Degraded-mode diagnostics must survive save → load: a v3 (async)
+    // checkpoint carries `refresh_stalls`, and `Kfac::load_state`
+    // restores it together with `inv_epoch` instead of silently
+    // resetting the counter. Older v3 files without the key (written
+    // before the counter was checkpointed) restart it at zero.
+    let (arch, ds) = small_setup();
+    let init = arch.sparse_init(&mut Rng::new(29));
+    let cfg = || KfacConfig { lambda0: 5.0, t_inv: 4, refresh_async: true, ..Default::default() };
+    let path = tmp_ckpt("async_stalls");
+    TrainSession::for_dataset(arch.clone(), &ds)
+        .iters(10)
+        .schedule(BatchSchedule::Fixed(64))
+        .eval_every(5)
+        .eval_rows(64)
+        .seed(29)
+        .params(init.clone())
+        .optimizer(Kfac::new(&arch, cfg()))
+        .checkpoint_every(10, &path)
+        .run();
+
+    let mut ck = checkpoint::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(
+        ck.opt.scalar("refresh_stalls").is_some(),
+        "async checkpoints must carry the stall counter"
+    );
+    let epoch = ck.opt.scalar("inv_epoch").expect("async checkpoints tag the inverse epoch");
+
+    // forge a non-zero counter (healthy test runs never stall) and load
+    ck.opt.set_scalar("refresh_stalls", 5.0);
+    let mut opt = Kfac::new(&arch, cfg());
+    opt.load_state(&ck.opt).unwrap();
+    assert_eq!(opt.refresh_stalls(), 5, "stall counter lost on load");
+    assert_eq!(opt.inverse_epoch() as f64, epoch, "inverse epoch lost on load");
+
+    // a v3 snapshot without the key (pre-counter writer) loads cleanly
+    ck.opt.entries.remove("refresh_stalls");
+    let mut opt = Kfac::new(&arch, cfg());
+    opt.load_state(&ck.opt).unwrap();
+    assert_eq!(opt.refresh_stalls(), 0, "missing key must restart the counter at zero");
+}
+
+#[test]
 fn sync_v2_checkpoint_loads_into_async_session() {
     // Forward interop: a checkpoint written by a synchronous session
     // carries no async keys (v2), and a KFAC_ASYNC=1 session must
