@@ -2,7 +2,8 @@
 //! paper-scale architecture (the MNIST autoencoder): statistics
 //! computation, inverse refresh (task 5), preconditioner application
 //! (task 6) for both structures, the EKFAC amortized scale-refresh
-//! path (per-example gradient projection + diagonal swap), and the
+//! path (per-example gradient projection + diagonal swap), the KFC
+//! conv statistics + inverse refresh on the conv classifier, and the
 //! per-step overhead of a full K-FAC step vs SGD with the inverse
 //! rebuild amortized synchronously (t_inv) or hidden entirely behind
 //! the asynchronous background refresh (KFAC_ASYNC).
@@ -16,7 +17,7 @@ use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
 use kfac::coordinator::Problem;
 use kfac::data::mnist_like;
 use kfac::fisher::stats::KfacStats;
-use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, TridiagInverse};
+use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, KfcInverse, TridiagInverse};
 use kfac::linalg::{KronBasis, SymEig};
 use kfac::nn::{Act, Arch};
 use kfac::optim::{Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
@@ -91,6 +92,32 @@ fn main() {
     let r = bench("fvp_quad_2dirs_m64", budget, || {
         let d2 = grad.scale(0.5);
         std::hint::black_box(backend.fvp_quad(&params, &x, 64, &[&grad, &d2]));
+    });
+    results.push((r, None));
+
+    // KFC on the conv classifier: patch-based statistics (im2col rows
+    // dominate the GEMM) and the conv-block inverse refresh.
+    let conv_problem = Problem::ConvClf;
+    let conv_arch = conv_problem.arch();
+    let conv_ds = conv_problem.dataset(256, 0);
+    let mut conv_backend = RustBackend::new(conv_arch.clone());
+    let conv_params = conv_arch.sparse_init(&mut Rng::new(1));
+    let r = bench("conv_grad_and_stats_m256(conv_clf)", budget, || {
+        std::hint::black_box(conv_backend.grad_and_stats(
+            &conv_params,
+            &conv_ds.x,
+            &conv_ds.y,
+            256,
+            7,
+        ));
+    });
+    results.push((r, None));
+    let (_, _, conv_raw) =
+        conv_backend.grad_and_stats(&conv_params, &conv_ds.x, &conv_ds.y, 256, 7);
+    let mut conv_stats = KfacStats::new(&conv_arch);
+    conv_stats.update(&conv_raw);
+    let r = bench("kfc_build(conv_clf)", budget, || {
+        std::hint::black_box(KfcInverse::build(&conv_stats.s, gamma));
     });
     results.push((r, None));
 

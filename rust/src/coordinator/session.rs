@@ -22,20 +22,23 @@ use crate::backend::{ModelBackend, RustBackend};
 use crate::bench::Timer;
 use crate::coordinator::checkpoint::{self, Checkpoint};
 use crate::data::{curves_like, faces_like, mnist_like, Dataset};
+use crate::linalg::pack::ConvShape;
 use crate::linalg::Mat;
-use crate::nn::{Act, Arch, Params};
+use crate::nn::{Act, Arch, Layer, LossKind, Params};
 use crate::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer, PolyakAverager, StepInfo};
 use crate::rng::Rng;
 use std::path::PathBuf;
 
-/// The paper's three benchmark problems plus the small classifier used
-/// by the Fisher-structure figures.
+/// The paper's three benchmark problems, the small classifier used by
+/// the Fisher-structure figures, and a small conv classifier exercising
+/// the KFC curvature (Grosse & Martens 2016).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Problem {
     MnistAe,
     CurvesAe,
     FacesAe,
     MnistClf,
+    ConvClf,
 }
 
 impl Problem {
@@ -45,6 +48,7 @@ impl Problem {
             Problem::CurvesAe => "curves_ae",
             Problem::FacesAe => "faces_ae",
             Problem::MnistClf => "mnist_clf",
+            Problem::ConvClf => "conv_clf",
         }
     }
 
@@ -54,6 +58,7 @@ impl Problem {
             "curves_ae" => Problem::CurvesAe,
             "faces_ae" => Problem::FacesAe,
             "mnist_clf" => Problem::MnistClf,
+            "conv_clf" => Problem::ConvClf,
             _ => return None,
         })
     }
@@ -77,6 +82,19 @@ impl Problem {
             ),
             // the Figure-2 network: 16×16 MNIST, 256-20-20-20-20-10 tanh
             Problem::MnistClf => Arch::classifier(&[256, 20, 20, 20, 20, 10], Act::Tanh),
+            // 16×16 MNIST again, but through a strided conv front end:
+            // conv 5×5/2 (6 maps) → 8×8×6 → dense softmax head
+            Problem::ConvClf => {
+                let shape =
+                    ConvShape { in_h: 16, in_w: 16, in_c: 1, kh: 5, kw: 5, stride: 2, pad: 2 };
+                Arch::from_layers(
+                    vec![
+                        Layer::Conv2d { shape, out_c: 6, act: Act::Tanh },
+                        Layer::Dense { d_in: 384, d_out: 10, act: Act::Identity },
+                    ],
+                    LossKind::SoftmaxCe,
+                )
+            }
         }
     }
 
@@ -87,6 +105,7 @@ impl Problem {
             Problem::CurvesAe => curves_like::autoencoder_dataset(n, 28, seed),
             Problem::FacesAe => faces_like::autoencoder_dataset(n, 25, seed),
             Problem::MnistClf => mnist_like::classification_dataset(n, 16, seed),
+            Problem::ConvClf => mnist_like::classification_dataset(n, 16, seed),
         }
     }
 }
@@ -608,13 +627,21 @@ mod tests {
 
     #[test]
     fn problems_have_consistent_arch_and_data() {
-        for p in [Problem::MnistAe, Problem::CurvesAe, Problem::FacesAe, Problem::MnistClf] {
+        let all = [
+            Problem::MnistAe,
+            Problem::CurvesAe,
+            Problem::FacesAe,
+            Problem::MnistClf,
+            Problem::ConvClf,
+        ];
+        for p in all {
             let arch = p.arch();
             let ds = p.dataset(20, 1);
             assert_eq!(ds.x.cols, arch.widths[0], "{p:?} input width");
             assert_eq!(ds.y.cols, *arch.widths.last().unwrap(), "{p:?} target width");
             assert_eq!(Problem::from_name(p.name()), Some(p));
         }
+        assert!(Problem::ConvClf.arch().has_conv(), "conv_clf must exercise a conv layer");
     }
 
     #[test]

@@ -27,10 +27,13 @@
 //!
 //! A peer that is slow past the deadline or drops mid-operation is excluded
 //! permanently by the hub; the all-reduce keeps serving the survivors (the
-//! contributor count shrinks). A refresh that cannot complete (e.g. the owner
-//! of a layer shard died) surfaces as an `Err` from [`sharded_build`]; the
-//! optimizer then records a stall and keeps stepping on the previous
-//! `inv_epoch` — the same staleness contract the async refresh path uses.
+//! contributor count shrinks). A refresh interrupted by a death in flight
+//! surfaces as an `Err` from [`sharded_build`]; the optimizer then records a
+//! stall and keeps stepping on the previous `inv_epoch` — the same staleness
+//! contract the async refresh path uses. Shard ownership is re-derived over
+//! the live rank set at every `t_inv` boundary (a one-hot liveness
+//! all-reduce), so a dead owner's layers migrate to survivors and refreshes
+//! resume instead of stalling indefinitely.
 //! This module contains no `unsafe` code (enforced by repo lint rule R6).
 
 pub mod backend;
@@ -331,17 +334,26 @@ impl<L: Link> Star<L> {
 }
 
 /// Builds the Fisher inverse at a `t_inv` boundary with the per-layer
-/// factorization sharded round-robin by layer index across ranks, then
-/// broadcasts each layer's part from its owner (`layer % size`).
+/// factorization sharded round-robin by layer index across the **live**
+/// ranks, then broadcasts each layer's part from its owner.
+///
+/// Ownership is re-derived at every call from a one-hot liveness
+/// all-reduce: each rank contributes `1.0` at its own index, so every
+/// survivor observes the identical live set and maps layer `i` to
+/// `live[i % live.len()]`. When a peer dies its layers are re-assigned
+/// to survivors at the next boundary — refreshes keep landing
+/// (`inv_epoch` keeps advancing) instead of stalling forever on a dead
+/// static owner. With all ranks alive the map coincides with the static
+/// `layer % size` assignment, so healthy runs are unchanged.
 ///
 /// Preconditioners that do not support sharding (`layer_part_len` returns
 /// `None`) fall back to a replicated local build — deterministic because the
-/// statistics were already all-reduced identically on every rank.
+/// statistics were already all-reduced identically on every rank. The same
+/// fallback serves a group whose live set has shrunk to this rank alone.
 ///
 /// On `Err` the caller keeps the previous inverse epoch and records a stall
-/// (degraded mode). Note the ownership map is static: a dead owner means its
-/// layers can no longer refresh until that rank returns (see ROADMAP for the
-/// dynamic-resharding follow-on).
+/// (degraded mode); a kill *during* a boundary can still stall that one
+/// refresh, but the next boundary reshards around the hole.
 pub fn sharded_build(
     precond: &dyn Preconditioner,
     stats: &RawStats,
@@ -360,11 +372,21 @@ pub fn sharded_build(
         return Ok(precond.build(stats, gamma));
     }
     let rank = coll.rank();
+    // Liveness probe: one-hot contributions sum to the survivor set, and
+    // the fixed reduction order makes it bitwise identical on every rank.
+    let mut live = vec![0.0f64; n];
+    live[rank] = 1.0;
+    coll.all_reduce_sum(&mut live)?;
+    let live_ranks: Vec<usize> = (0..n).filter(|&r| live[r] > 0.5).collect();
+    if live_ranks.len() <= 1 {
+        return Ok(precond.build(stats, gamma));
+    }
+    let owner = |i: usize| live_ranks[i % live_ranks.len()];
     // Build owned parts first so the broadcast loop below never interleaves
     // local factorization work between collective ops on different ranks.
     let mut parts: Vec<Option<Vec<f64>>> = (0..l)
         .map(|i| {
-            if i % n == rank {
+            if owner(i) == rank {
                 Some(precond.build_layer_part(stats, gamma, i))
             } else {
                 None
@@ -386,7 +408,7 @@ pub fn sharded_build(
             }
             None => vec![0.0; len],
         };
-        coll.broadcast(i % n, &mut buf)?;
+        coll.broadcast(owner(i), &mut buf)?;
         out.push(buf);
     }
     precond

@@ -10,6 +10,9 @@
 //!   inverse.
 //! - [`ekfac`]: diagonal rescaling in the Kronecker eigenbasis (George
 //!   et al. 2018).
+//! - [`kfc`]: Kronecker Factors for Convolution (Grosse & Martens
+//!   2016) — patch/spatially-averaged factor semantics for conv
+//!   layers, sharing the block-diagonal inverse machinery.
 //! - [`precond`]: the open [`Preconditioner`] seam + registry through
 //!   which the optimizer reaches all of the above (and external
 //!   structures can plug in).
@@ -21,12 +24,14 @@ pub mod blockdiag;
 pub mod damping;
 pub mod ekfac;
 pub mod exact;
+pub mod kfc;
 pub mod precond;
 pub mod stats;
 pub mod tridiag;
 
 pub use blockdiag::BlockDiagInverse;
 pub use ekfac::EkfacInverse;
+pub use kfc::KfcInverse;
 pub use precond::{PrecondRef, Preconditioner};
 pub use stats::{KfacStats, RawStats};
 pub use tridiag::TridiagInverse;

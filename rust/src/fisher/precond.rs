@@ -15,6 +15,7 @@
 
 use super::blockdiag::BlockDiagInverse;
 use super::ekfac::EkfacInverse;
+use super::kfc::KfcPrecond;
 use super::stats::RawStats;
 use super::tridiag::TridiagInverse;
 use super::FisherInverse;
@@ -165,9 +166,15 @@ pub fn ekfac() -> PrecondRef {
     Arc::new(EkfacPrecond)
 }
 
+/// The KFC preconditioner (Grosse & Martens 2016): block-diagonal with
+/// conv-aware Kronecker factor semantics.
+pub fn kfc() -> PrecondRef {
+    Arc::new(KfcPrecond)
+}
+
 fn registry() -> &'static Mutex<Vec<PrecondRef>> {
     static REG: OnceLock<Mutex<Vec<PrecondRef>>> = OnceLock::new();
-    REG.get_or_init(|| Mutex::new(vec![block_diag(), block_tridiag(), ekfac()]))
+    REG.get_or_init(|| Mutex::new(vec![block_diag(), block_tridiag(), ekfac(), kfc()]))
 }
 
 /// Register a preconditioner under its `name()`, replacing any
@@ -217,7 +224,7 @@ mod tests {
 
     #[test]
     fn builtins_are_registered() {
-        for name in ["blkdiag", "blktridiag", "ekfac"] {
+        for name in ["blkdiag", "blktridiag", "ekfac", "kfc"] {
             let p = from_name(name).unwrap_or_else(|| panic!("{name} not registered"));
             assert_eq!(p.name(), name);
         }
@@ -238,7 +245,7 @@ mod tests {
                 })
                 .collect(),
         );
-        for p in [block_diag(), block_tridiag(), ekfac()] {
+        for p in [block_diag(), block_tridiag(), ekfac(), kfc()] {
             let inv = p.build(&stats, 0.5);
             let u = inv.apply(&grads);
             assert_eq!(u.0.len(), grads.0.len(), "{}", p.name());

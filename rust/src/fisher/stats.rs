@@ -14,6 +14,20 @@
 //! `ε = min(1 − 1/k, 0.95)` — the estimate therefore depends on much
 //! more data than a single mini-batch, which is the key practical
 //! advantage over HF-style methods the paper emphasizes.
+//!
+//! Each layer contributes its own factor-pair semantics. Dense layers
+//! are the paper's `(E[ā āᵀ], E[g gᵀ])`. Conv layers follow Grosse &
+//! Martens 2016 (KFC): the input factor is the **patch** second moment
+//! `Ω = E[Σ_t ā_t ā_tᵀ]` over the `P` im2col rows of each case (sum
+//! over positions, mean over cases — scale `1/m`), the gradient factor
+//! the **spatially averaged** `Γ = E[(1/P) Σ_t g_t g_tᵀ]` (scale
+//! `1/(m·P)`), so `F ≈ Ω ⊗ Γ` per conv block. Because the layer-local
+//! row counts already encode `P` (`abars[i]`/`gs[i]` have `m·P` rows),
+//! both reduce to the dense formulas bit-identically when `P = 1`.
+//! Off-diagonal (tridiagonal) factors are only defined between
+//! adjacent dense layers; pairs involving a conv layer keep their
+//! deterministic shape but stay zero, which makes the tridiagonal
+//! structure degrade gracefully to block-diagonal there.
 
 use crate::linalg::Mat;
 use crate::nn::net::Fwd;
@@ -36,30 +50,57 @@ pub struct RawStats {
 impl RawStats {
     /// Compute from cached forward activations and (sampled-target)
     /// backward derivatives. `gs[i]` must *not* be scaled by 1/m.
+    ///
+    /// Layer semantics come from the row counts the forward pass
+    /// cached: a dense layer's `abars[i]`/`gs[i]` have `m` rows, a conv
+    /// layer's `m·P` (one per case × output position). The diagonal
+    /// factors are `Ω_i = (1/m) Āᵢᵀ Āᵢ` (patch sum for conv) and
+    /// `Γ_i = (1/(m·P)) Gᵢᵀ Gᵢ` (spatial average; `P = 1` dense).
+    /// Off-diagonal factors are only formed between adjacent layers
+    /// whose rows are per-case (`m` rows each); any pair touching a
+    /// conv layer stays zero at its deterministic shape.
     pub fn from_batch(fwd: &Fwd, gs: &[Mat]) -> RawStats {
-        let m = fwd.abars[0].rows as f64;
+        let m = fwd.m as f64;
         let l = gs.len();
         let scale = 1.0 / m;
         let aa: Vec<Mat> =
             fwd.abars.iter().map(|ab| ab.matmul_tn(ab).scale(scale).symmetrize()).collect();
-        let gg: Vec<Mat> = gs.iter().map(|g| g.matmul_tn(g).scale(scale).symmetrize()).collect();
-        let aa_off: Vec<Mat> = (0..l - 1)
-            .map(|i| fwd.abars[i].matmul_tn(&fwd.abars[i + 1]).scale(scale))
+        let gg: Vec<Mat> = gs
+            .iter()
+            .map(|g| g.matmul_tn(g).scale(1.0 / g.rows as f64).symmetrize())
             .collect();
-        let gg_off: Vec<Mat> =
-            (0..l - 1).map(|i| gs[i].matmul_tn(&gs[i + 1]).scale(scale)).collect();
+        let per_case = |i: usize| fwd.abars[i].rows == fwd.m && gs[i].rows == fwd.m;
+        let aa_off: Vec<Mat> = (0..l - 1)
+            .map(|i| {
+                if per_case(i) && per_case(i + 1) {
+                    fwd.abars[i].matmul_tn(&fwd.abars[i + 1]).scale(scale)
+                } else {
+                    Mat::zeros(fwd.abars[i].cols, fwd.abars[i + 1].cols)
+                }
+            })
+            .collect();
+        let gg_off: Vec<Mat> = (0..l - 1)
+            .map(|i| {
+                if per_case(i) && per_case(i + 1) {
+                    gs[i].matmul_tn(&gs[i + 1]).scale(scale)
+                } else {
+                    Mat::zeros(gs[i].cols, gs[i + 1].cols)
+                }
+            })
+            .collect();
         RawStats { aa, aa_off, gg, gg_off }
     }
 
-    /// Zero-initialized stats for an architecture.
+    /// Zero-initialized stats for an architecture. Shapes follow each
+    /// layer's Kronecker factor dims (`Arch::factor_dims`): dense
+    /// `(d+1, d')`, conv `(K+1, out_c)`.
     pub fn zeros(arch: &Arch) -> RawStats {
         let l = arch.num_layers();
-        let aa = (0..l).map(|i| Mat::zeros(arch.widths[i] + 1, arch.widths[i] + 1)).collect();
-        let gg = (0..l).map(|i| Mat::zeros(arch.widths[i + 1], arch.widths[i + 1])).collect();
-        let aa_off =
-            (0..l - 1).map(|i| Mat::zeros(arch.widths[i] + 1, arch.widths[i + 1] + 1)).collect();
-        let gg_off =
-            (0..l - 1).map(|i| Mat::zeros(arch.widths[i + 1], arch.widths[i + 2])).collect();
+        let fd: Vec<(usize, usize)> = (0..l).map(|i| arch.factor_dims(i)).collect();
+        let aa = fd.iter().map(|&(a, _)| Mat::zeros(a, a)).collect();
+        let gg = fd.iter().map(|&(_, g)| Mat::zeros(g, g)).collect();
+        let aa_off = (0..l - 1).map(|i| Mat::zeros(fd[i].0, fd[i + 1].0)).collect();
+        let gg_off = (0..l - 1).map(|i| Mat::zeros(fd[i].1, fd[i + 1].1)).collect();
         RawStats { aa, aa_off, gg, gg_off }
     }
 
@@ -246,6 +287,55 @@ mod tests {
                 let av = aa.matvec(&v);
                 let q: f64 = v.iter().zip(av.iter()).map(|(a, b)| a * b).sum();
                 assert!(q >= -1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_stats_shapes_scaling_and_zero_off_factors() {
+        use crate::linalg::pack::ConvShape;
+        use crate::nn::Layer;
+        let shape = ConvShape { in_h: 4, in_w: 4, in_c: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let arch = Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 3, act: Act::Tanh },
+                Layer::Dense { d_in: 48, d_out: 5, act: Act::Identity },
+            ],
+            LossKind::SoftmaxCe,
+        );
+        let mut rng = Rng::new(13);
+        let p = arch.glorot_init(&mut rng);
+        let x = Mat::randn(8, 32, 1.0, &mut rng);
+        let net = Net::new(arch.clone());
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut rng);
+        let st = RawStats::from_batch(&fwd, &gs);
+        // shapes agree with the factor-dims template
+        let z = RawStats::zeros(&arch);
+        for (a, b) in z.mats().zip(st.mats()) {
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        }
+        // Ω is the patch second moment: homogeneous corner = P = 16
+        let omega = &st.aa[0];
+        assert_eq!(omega.rows, 2 * 3 * 3 + 1);
+        let p_count = shape.positions() as f64;
+        assert!((omega.at(omega.rows - 1, omega.cols - 1) - p_count).abs() < 1e-9);
+        // Γ is spatially averaged: same order of magnitude as a dense g
+        assert_eq!(st.gg[0].rows, 3);
+        // off-factors touching the conv layer are identically zero
+        assert_eq!(st.aa_off[0].max_abs(), 0.0);
+        assert_eq!(st.gg_off[0].max_abs(), 0.0);
+        // dense head keeps the per-case semantics (unit homog corner)
+        let aad = &st.aa[1];
+        assert!((aad.at(aad.rows - 1, aad.cols - 1) - 1.0).abs() < 1e-12);
+        // flat round-trip still works on the mixed-arch shapes
+        let mut flat = vec![0.0; st.flat_len()];
+        st.write_flat(&mut flat);
+        let mut back = RawStats::zeros(&arch);
+        back.read_flat(&flat);
+        for (a, b) in st.mats().zip(back.mats()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
             }
         }
     }

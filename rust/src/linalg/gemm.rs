@@ -2,7 +2,9 @@
 //!
 //! One kernel serves every transpose variant the crate needs: the
 //! operands are described by (row, column) strides, so `A`, `Aᵀ`, `B`
-//! and `Bᵀ` all flow through the same packing layer —
+//! and `Bᵀ` all flow through the same packing layer (the
+//! [`super::pack`] seam, which convolution's im2col view also
+//! implements) —
 //!
 //! - `op(A)[i, p] = a[i·ars + p·acs]`
 //! - `op(B)[p, c] = b[p·brs + c·bcs]`
@@ -31,6 +33,7 @@
 //! too small (or too narrow) to amortize packing fall back to a
 //! row-parallel saxpy/dot kernel that preserves the old behaviour.
 
+use super::pack::{self, Strided};
 use super::simd::{self, Kernel};
 use crate::par;
 
@@ -226,6 +229,10 @@ fn gemm_blocked(
     let kc_max = KC.min(k);
     let nc_max = NC.min(n);
     let mut bpack = vec![0.0f64; nc_max.div_ceil(nr) * nr * kc_max];
+    // Stride-described sources through the shared packing seam
+    // (`linalg::pack`): identical loads to the pre-seam packers.
+    let asrc = Strided::new(a, ars, acs);
+    let bsrc = Strided::new(b, brs, bcs);
 
     let mut jc = 0;
     while jc < n {
@@ -235,7 +242,7 @@ fn gemm_blocked(
             let kc = KC.min(k - pc);
             // B block packed once per (jc, pc) round, shared read-only
             // by every worker of the ic loop.
-            pack_b(&mut bpack, nr, b, brs, bcs, pc, kc, jc, nc);
+            pack::pack_b(&mut bpack, nr, &bsrc, pc, kc, jc, nc);
 
             // Distribute MR-row panels (not whole MC blocks) across the
             // pool, so even an m = 256 GEMM exposes m/MR ≥ 32 units of
@@ -256,7 +263,7 @@ fn gemm_blocked(
                     let pend = (p0 + panels_per_block).min(phi);
                     let row0 = p0 * mr;
                     let mc = (pend * mr).min(m) - row0;
-                    pack_a(&mut apack, mr, a, ars, acs, row0, mc, pc, kc);
+                    pack::pack_a(&mut apack, mr, &asrc, row0, mc, pc, kc);
                     macro_kernel(kern, o, ldc, row0, jc, mc, nc, kc, &apack, bref);
                     p0 = pend;
                 }
@@ -264,68 +271,6 @@ fn gemm_blocked(
             pc += kc;
         }
         jc += nc;
-    }
-}
-
-/// Pack an `mc × kc` block of op(A) (rows `row0..`, depth `p0..`) into
-/// `mr`-row panels: `dst[panel][p*mr + r]`, zero-padding the last panel.
-fn pack_a(
-    dst: &mut [f64],
-    mr: usize,
-    a: &[f64],
-    ars: usize,
-    acs: usize,
-    row0: usize,
-    mc: usize,
-    p0: usize,
-    kc: usize,
-) {
-    let panels = mc.div_ceil(mr);
-    for ip in 0..panels {
-        let panel = &mut dst[ip * kc * mr..(ip + 1) * kc * mr];
-        let r0 = ip * mr;
-        let rows = mr.min(mc - r0);
-        for p in 0..kc {
-            let col = (p0 + p) * acs;
-            let slot = &mut panel[p * mr..p * mr + mr];
-            for r in 0..rows {
-                slot[r] = a[(row0 + r0 + r) * ars + col];
-            }
-            for s in slot.iter_mut().skip(rows) {
-                *s = 0.0;
-            }
-        }
-    }
-}
-
-/// Pack a `kc × nc` block of op(B) (depth `p0..`, cols `col0..`) into
-/// `nr`-column panels: `dst[panel][p*nr + c]`, zero-padding the last panel.
-fn pack_b(
-    dst: &mut [f64],
-    nr: usize,
-    b: &[f64],
-    brs: usize,
-    bcs: usize,
-    p0: usize,
-    kc: usize,
-    col0: usize,
-    nc: usize,
-) {
-    let panels = nc.div_ceil(nr);
-    for jp in 0..panels {
-        let panel = &mut dst[jp * kc * nr..(jp + 1) * kc * nr];
-        let c0 = jp * nr;
-        let cols = nr.min(nc - c0);
-        for p in 0..kc {
-            let row = (p0 + p) * brs;
-            let slot = &mut panel[p * nr..p * nr + nr];
-            for c in 0..cols {
-                slot[c] = b[row + (col0 + c0 + c) * bcs];
-            }
-            for s in slot.iter_mut().skip(cols) {
-                *s = 0.0;
-            }
-        }
     }
 }
 

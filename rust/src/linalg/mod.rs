@@ -13,6 +13,7 @@ pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod kron;
+pub mod pack;
 pub mod simd;
 pub mod stein;
 

@@ -1,0 +1,426 @@
+//! The packing seam shared by dense GEMM and convolution lowering.
+//!
+//! The blocked GEMM in [`gemm`](super::gemm) never reads its operands
+//! directly in the hot loop — it copies `mr`-row / `nr`-column panels
+//! into contiguous scratch first. That copy is pure data movement, so
+//! the *description* of where element `(r, c)` of an operand lives is
+//! the only thing the packers need: the [`PackSource`] trait. Two
+//! sources implement it:
+//!
+//! - [`Strided`] — the classic `data[r·rs + c·cs]` view that serves
+//!   every dense transpose variant (this is exactly the indexing the
+//!   packers used before the seam was extracted, so the dense path is
+//!   bit-identical: packing performs no arithmetic on the values);
+//! - [`Im2col`] — a *virtual* patch matrix for convolution: row
+//!   `n·P + t` is the receptive-field patch of case `n` at output
+//!   position `t`, flattened `(ky, kx, c)`-major with a trailing
+//!   homogeneous coordinate, and out-of-bounds (padding) taps read as
+//!   zero. Conv forward/backward lower onto the existing packed SIMD
+//!   GEMM through this view — no new kernels.
+//!
+//! Layout convention is NHWC: a flat feature vector indexes as
+//! `(y·w + x)·c_in + c`, which makes the `[m·P, c_out]` GEMM output
+//! *be* the `[m, P·c_out]` flat activation matrix (free reshape).
+
+use super::Mat;
+
+/// Anything the GEMM packers can read an `f64` element from.
+///
+/// `at(r, c)` must be pure (same value on every call) and cheap; the
+/// packers call it once per packed element.
+pub trait PackSource: Sync {
+    fn at(&self, r: usize, c: usize) -> f64;
+}
+
+/// Stride-described view of a dense slice: element `(r, c)` lives at
+/// `data[r·rs + c·cs]`. `rs`/`cs` encode all four transpose variants.
+#[derive(Clone, Copy)]
+pub struct Strided<'a> {
+    pub data: &'a [f64],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl<'a> Strided<'a> {
+    pub fn new(data: &'a [f64], rs: usize, cs: usize) -> Strided<'a> {
+        Strided { data, rs, cs }
+    }
+}
+
+impl PackSource for Strided<'_> {
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.rs + c * self.cs]
+    }
+}
+
+/// Static shape of a 2-D convolution over NHWC-flattened inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Panic unless the shape yields at least one output position.
+    pub fn validate(&self) {
+        assert!(self.stride >= 1, "conv: stride must be >= 1");
+        assert!(self.in_c >= 1 && self.kh >= 1 && self.kw >= 1, "conv: degenerate kernel");
+        assert!(
+            self.in_h + 2 * self.pad >= self.kh && self.in_w + 2 * self.pad >= self.kw,
+            "conv: kernel larger than padded input"
+        );
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Number of output spatial positions `P`.
+    pub fn positions(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Receptive-field patch length `K = c_in·kh·kw` (without the
+    /// homogeneous coordinate).
+    pub fn patch_len(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+
+    /// Flat input width `h·w·c_in`.
+    pub fn in_dim(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    /// Flat output width `out_h·out_w·c_out` for `c_out` channels.
+    pub fn out_dim(&self, out_c: usize) -> usize {
+        self.positions() * out_c
+    }
+
+    /// Map a patch row/column to the flat input index of the tap it
+    /// reads, or `None` for a padding tap. Row `r = n·P + t`, column
+    /// `c = (ky·kw + kx)·c_in + ic`.
+    #[inline]
+    fn tap(&self, r: usize, c: usize) -> Option<usize> {
+        let p = self.positions();
+        let (n, pos) = (r / p, r % p);
+        let (oy, ox) = (pos / self.out_w(), pos % self.out_w());
+        let ic = c % self.in_c;
+        let kxy = c / self.in_c;
+        let (ky, kx) = (kxy / self.kw, kxy % self.kw);
+        let iy = oy * self.stride + ky;
+        let ix = ox * self.stride + kx;
+        if iy < self.pad || ix < self.pad {
+            return None;
+        }
+        let (iy, ix) = (iy - self.pad, ix - self.pad);
+        if iy >= self.in_h || ix >= self.in_w {
+            return None;
+        }
+        Some(n * self.in_dim() + (iy * self.in_w + ix) * self.in_c + ic)
+    }
+}
+
+/// Virtual im2col patch matrix: shape `[m·P, K+1]` over a flat
+/// `[m, h·w·c_in]` NHWC input. The last column is the homogeneous
+/// coordinate (`1.0` in a forward pass, `0.0` for tangents — the
+/// derivative of a constant), padding taps read as `0.0`.
+#[derive(Clone, Copy)]
+pub struct Im2col<'a> {
+    pub data: &'a [f64],
+    pub shape: ConvShape,
+    pub homog: f64,
+}
+
+impl<'a> Im2col<'a> {
+    pub fn new(x: &'a Mat, shape: ConvShape, homog: f64) -> Im2col<'a> {
+        assert_eq!(x.cols, shape.in_dim(), "im2col: input width mismatch");
+        Im2col { data: &x.data, shape, homog }
+    }
+}
+
+impl PackSource for Im2col<'_> {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        if c == self.shape.patch_len() {
+            return self.homog;
+        }
+        match self.shape.tap(r, c) {
+            Some(idx) => self.data[idx],
+            None => 0.0,
+        }
+    }
+}
+
+/// Materialize the im2col patch matrix `[m·P, K+1]` for a batch `x` of
+/// shape `[m, h·w·c_in]`. The homogeneous column takes the value
+/// `homog` in every row.
+pub fn im2col(x: &Mat, shape: ConvShape, homog: f64) -> Mat {
+    let src = Im2col::new(x, shape, homog);
+    let rows = x.rows * shape.positions();
+    let cols = shape.patch_len() + 1;
+    Mat::from_fn(rows, cols, |r, c| src.at(r, c))
+}
+
+/// Adjoint of patch extraction: scatter-add a patch-space gradient
+/// `dpatch` (`[m·P, K]`, homogeneous column already dropped) back to
+/// flat input space `[m, h·w·c_in]`. Padding taps are discarded —
+/// exactly the taps [`Im2col`] reads as zero.
+pub fn col2im_acc(dpatch: &Mat, shape: ConvShape, m: usize) -> Mat {
+    let p = shape.positions();
+    let kl = shape.patch_len();
+    assert_eq!(dpatch.rows, m * p, "col2im: row count mismatch");
+    assert_eq!(dpatch.cols, kl, "col2im: patch length mismatch");
+    let mut out = Mat::zeros(m, shape.in_dim());
+    for r in 0..dpatch.rows {
+        let row = dpatch.row(r);
+        for (c, &v) in row.iter().enumerate() {
+            if let Some(idx) = shape.tap(r, c) {
+                out.data[idx] += v;
+            }
+        }
+    }
+    out
+}
+
+/// Pack an `mc × kc` block of a source (rows `row0..`, depth `p0..`)
+/// into `mr`-row panels: `dst[panel][p*mr + r]`, zero-padding the last
+/// panel. Pure data movement — for a [`Strided`] source this performs
+/// exactly the loads the pre-seam GEMM packer performed.
+pub fn pack_a<S: PackSource>(
+    dst: &mut [f64],
+    mr: usize,
+    a: &S,
+    row0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    let panels = mc.div_ceil(mr);
+    for ip in 0..panels {
+        let panel = &mut dst[ip * kc * mr..(ip + 1) * kc * mr];
+        let r0 = ip * mr;
+        let rows = mr.min(mc - r0);
+        for p in 0..kc {
+            let slot = &mut panel[p * mr..p * mr + mr];
+            for r in 0..rows {
+                slot[r] = a.at(row0 + r0 + r, p0 + p);
+            }
+            for s in slot.iter_mut().skip(rows) {
+                *s = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nc` block of a source (depth `p0..`, cols `col0..`)
+/// into `nr`-column panels: `dst[panel][p*nr + c]`, zero-padding the
+/// last panel.
+pub fn pack_b<S: PackSource>(
+    dst: &mut [f64],
+    nr: usize,
+    b: &S,
+    p0: usize,
+    kc: usize,
+    col0: usize,
+    nc: usize,
+) {
+    let panels = nc.div_ceil(nr);
+    for jp in 0..panels {
+        let panel = &mut dst[jp * kc * nr..(jp + 1) * kc * nr];
+        let c0 = jp * nr;
+        let cols = nr.min(nc - c0);
+        for p in 0..kc {
+            let slot = &mut panel[p * nr..p * nr + nr];
+            for c in 0..cols {
+                slot[c] = b.at(p0 + p, col0 + c0 + c);
+            }
+            for s in slot.iter_mut().skip(cols) {
+                *s = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Naive patch extraction: loop over every (case, position, tap)
+    /// with explicit bounds checks, independent of `ConvShape::tap`.
+    fn naive_patches(x: &Mat, s: ConvShape, homog: f64) -> Mat {
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let mut out = Mat::zeros(x.rows * oh * ow, s.patch_len() + 1);
+        for n in 0..x.rows {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let r = (n * oh + oy) * ow + ox;
+                    for ky in 0..s.kh {
+                        for kx in 0..s.kw {
+                            for ic in 0..s.in_c {
+                                let c = (ky * s.kw + kx) * s.in_c + ic;
+                                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                                let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                                let v = if iy < 0
+                                    || ix < 0
+                                    || iy >= s.in_h as isize
+                                    || ix >= s.in_w as isize
+                                {
+                                    0.0
+                                } else {
+                                    x.at(n, (iy as usize * s.in_w + ix as usize) * s.in_c + ic)
+                                };
+                                out.set(r, c, v);
+                            }
+                        }
+                    }
+                    out.set(r, s.patch_len(), homog);
+                }
+            }
+        }
+        out
+    }
+
+    fn shapes_under_test() -> Vec<ConvShape> {
+        vec![
+            // odd stride + padding
+            ConvShape { in_h: 7, in_w: 5, in_c: 3, kh: 3, kw: 3, stride: 3, pad: 1 },
+            // 1×1 kernel (pure channel mixing)
+            ConvShape { in_h: 4, in_w: 6, in_c: 2, kh: 1, kw: 1, stride: 1, pad: 0 },
+            // kernel = input size (collapses to a dense layer per channel)
+            ConvShape { in_h: 5, in_w: 4, in_c: 2, kh: 5, kw: 4, stride: 1, pad: 0 },
+            // stride 2, asymmetric kernel, padding
+            ConvShape { in_h: 8, in_w: 8, in_c: 1, kh: 3, kw: 2, stride: 2, pad: 2 },
+            // padding larger than needed on one side
+            ConvShape { in_h: 3, in_w: 3, in_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ]
+    }
+
+    #[test]
+    fn im2col_matches_naive_patch_extraction() {
+        let mut rng = Rng::new(42);
+        for s in shapes_under_test() {
+            s.validate();
+            let x = Mat::randn(3, s.in_dim(), 1.0, &mut rng);
+            for homog in [1.0, 0.0] {
+                let got = im2col(&x, s, homog);
+                let want = naive_patches(&x, s, homog);
+                assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{s:?}");
+                for (a, b) in got.data.iter().zip(want.data.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{s:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> = <x, col2im(y)> for the non-homogeneous
+        // columns — patch extraction is linear, col2im is its adjoint.
+        let mut rng = Rng::new(7);
+        for s in shapes_under_test() {
+            let m = 2;
+            let x = Mat::randn(m, s.in_dim(), 1.0, &mut rng);
+            let y = Mat::randn(m * s.positions(), s.patch_len(), 1.0, &mut rng);
+            let px = im2col(&x, s, 0.0);
+            let mut lhs = 0.0;
+            for r in 0..y.rows {
+                for c in 0..y.cols {
+                    lhs += px.at(r, c) * y.at(r, c);
+                }
+            }
+            let back = col2im_acc(&y, s, m);
+            let rhs = back.dot(&x);
+            assert!((lhs - rhs).abs() < 1e-10, "{s:?}: lhs={lhs} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn strided_pack_matches_pre_seam_indexing() {
+        // The exact loads the packers performed before the seam was
+        // extracted, written against the raw slice: a[(row)*ars + col].
+        let mut rng = Rng::new(3);
+        let (mr, nr) = (4usize, 8usize);
+        for &(rows, cols, rs, cs) in
+            &[(13usize, 9usize, 9usize, 1usize), (9, 13, 1, 9), (16, 8, 8, 1)]
+        {
+            let data: Vec<f64> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let (row0, mc, p0, kc) = (4usize, rows - 4, 2usize, cols.min(6));
+            let mut got = vec![0.0; mc.div_ceil(mr) * mr * kc];
+            pack_a(&mut got, mr, &Strided::new(&data, rs, cs), row0, mc, p0, kc);
+            let mut want = vec![0.0; got.len()];
+            for ip in 0..mc.div_ceil(mr) {
+                let r0 = ip * mr;
+                let live = mr.min(mc - r0);
+                for p in 0..kc {
+                    for r in 0..live {
+                        want[ip * kc * mr + p * mr + r] =
+                            data[(row0 + r0 + r) * rs + (p0 + p) * cs];
+                    }
+                }
+            }
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let (c0, nc) = (1usize, cols - 1);
+            let (bp0, bkc) = (3usize, rows - 3);
+            let mut gotb = vec![0.0; nc.div_ceil(nr) * nr * bkc];
+            pack_b(&mut gotb, nr, &Strided::new(&data, rs, cs), bp0, bkc, c0, nc);
+            let mut wantb = vec![0.0; gotb.len()];
+            for jp in 0..nc.div_ceil(nr) {
+                let j0 = jp * nr;
+                let live = nr.min(nc - j0);
+                for p in 0..bkc {
+                    for c in 0..live {
+                        wantb[jp * bkc * nr + p * nr + c] =
+                            data[(bp0 + p) * rs + (c0 + j0 + c) * cs];
+                    }
+                }
+            }
+            for (a, b) in gotb.iter().zip(wantb.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_source_packs_like_materialized_matrix() {
+        // Packing the virtual im2col view must equal materializing the
+        // patch matrix first and packing that — the seam contract.
+        let mut rng = Rng::new(11);
+        let s = ConvShape { in_h: 6, in_w: 5, in_c: 2, kh: 3, kw: 2, stride: 2, pad: 1 };
+        let x = Mat::randn(3, s.in_dim(), 1.0, &mut rng);
+        let mat = im2col(&x, s, 1.0);
+        let virt = Im2col::new(&x, s, 1.0);
+        let (mr, kc) = (4usize, mat.cols);
+        let mc = mat.rows;
+        let mut from_virt = vec![0.0; mc.div_ceil(mr) * mr * kc];
+        let mut from_mat = vec![0.0; from_virt.len()];
+        pack_a(&mut from_virt, mr, &virt, 0, mc, 0, kc);
+        pack_a(&mut from_mat, mr, &Strided::new(&mat.data, mat.cols, 1), 0, mc, 0, kc);
+        for (a, b) in from_virt.iter().zip(from_mat.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn conv_shape_edge_geometry() {
+        let s = ConvShape { in_h: 5, in_w: 4, in_c: 2, kh: 5, kw: 4, stride: 1, pad: 0 };
+        assert_eq!((s.out_h(), s.out_w()), (1, 1));
+        assert_eq!(s.patch_len(), 40);
+        let s = ConvShape { in_h: 16, in_w: 16, in_c: 1, kh: 5, kw: 5, stride: 2, pad: 2 };
+        assert_eq!((s.out_h(), s.out_w()), (8, 8));
+        assert_eq!(s.out_dim(6), 8 * 8 * 6);
+    }
+}

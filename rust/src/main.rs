@@ -80,7 +80,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: kfac <command> [options]\n\
          commands:\n\
-         \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf\n\
+         \x20 train        --problem mnist_ae|curves_ae|faces_ae|mnist_clf|conv_clf\n\
          \x20              --optimizer kfac|kfac_<precond>|sgd  --iters N --batch M\n\
          \x20              (preconditioners: {})\n\
          \x20              --data N --seed S --no-momentum --lambda0 L --lr E\n\
@@ -237,7 +237,10 @@ fn run_session(
 fn train(args: &Args) {
     let problem_name = args.get_or("problem", "mnist_ae");
     let problem = Problem::from_name(&problem_name).unwrap_or_else(|| {
-        eprintln!("unknown --problem {problem_name} (use mnist_ae|curves_ae|faces_ae|mnist_clf)");
+        eprintln!(
+            "unknown --problem {problem_name} \
+             (use mnist_ae|curves_ae|faces_ae|mnist_clf|conv_clf)"
+        );
         std::process::exit(2);
     });
     let iters = args.get_usize("iters", 100);

@@ -17,6 +17,7 @@ pub mod net;
 
 pub use net::{Fwd, Net};
 
+use crate::linalg::pack::ConvShape;
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -298,17 +299,98 @@ impl Mat {
     }
 }
 
-/// Network architecture: `widths = [d₀, d₁, …, d_ℓ]`, one activation per
-/// layer (the last must be `Identity` — the output nonlinearity lives in
-/// the loss), and the loss/predictive-distribution kind.
+/// One typed layer. Every variant maps a flat `[m, in_dim]` activation
+/// matrix to `[m, out_dim]` and owns one weight matrix of shape
+/// `weight_shape()` (bias in the last column).
+///
+/// - `Dense` is the paper's fully-connected layer: `s = W ā`.
+/// - `Conv2d` is a 2-D convolution over NHWC-flattened inputs, lowered
+///   onto the packed GEMM via the im2col view in
+///   [`crate::linalg::pack`]; its weight is `out_c × (c_in·kh·kw + 1)`,
+///   one receptive-field filter (plus bias) per output channel, shared
+///   across all `P = out_h·out_w` spatial positions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    Dense { d_in: usize, d_out: usize, act: Act },
+    Conv2d { shape: ConvShape, out_c: usize, act: Act },
+}
+
+impl Layer {
+    /// Flat input width the layer consumes.
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Layer::Dense { d_in, .. } => *d_in,
+            Layer::Conv2d { shape, .. } => shape.in_dim(),
+        }
+    }
+
+    /// Flat output width the layer produces.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Layer::Dense { d_out, .. } => *d_out,
+            Layer::Conv2d { shape, out_c, .. } => shape.out_dim(*out_c),
+        }
+    }
+
+    pub fn act(&self) -> Act {
+        match self {
+            Layer::Dense { act, .. } | Layer::Conv2d { act, .. } => *act,
+        }
+    }
+
+    /// Spatial weight-sharing positions `P` (1 for dense layers).
+    pub fn positions(&self) -> usize {
+        match self {
+            Layer::Dense { .. } => 1,
+            Layer::Conv2d { shape, .. } => shape.positions(),
+        }
+    }
+
+    /// Kronecker factor dimensions `(a, g)`: the input-side factor is
+    /// `a × a` (homogeneous coordinate included), the gradient-side
+    /// factor `g × g`. Dense: `(d_in+1, d_out)`; conv: `(K+1, out_c)`
+    /// with `K = c_in·kh·kw` (Grosse & Martens 2016).
+    pub fn factor_dims(&self) -> (usize, usize) {
+        match self {
+            Layer::Dense { d_in, d_out, .. } => (d_in + 1, *d_out),
+            Layer::Conv2d { shape, out_c, .. } => (shape.patch_len() + 1, *out_c),
+        }
+    }
+
+    /// Weight matrix shape `(rows, cols) = (g, a)`.
+    pub fn weight_shape(&self) -> (usize, usize) {
+        let (a, g) = self.factor_dims();
+        (g, a)
+    }
+
+    pub fn conv_shape(&self) -> Option<ConvShape> {
+        match self {
+            Layer::Dense { .. } => None,
+            Layer::Conv2d { shape, .. } => Some(*shape),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Layer::Dense { .. })
+    }
+}
+
+/// Network architecture: a sequence of typed [`Layer`]s plus the
+/// loss/predictive-distribution kind. `widths = [d₀, d₁, …, d_ℓ]` holds
+/// the flat boundary dims, derived from the layers at construction —
+/// most call sites (datasets, backends, reporting) only need those.
+/// The last layer must be dense with `Identity` activation (the output
+/// nonlinearity lives in the loss).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Arch {
+    pub layers: Vec<Layer>,
     pub widths: Vec<usize>,
-    pub acts: Vec<Act>,
     pub loss: LossKind,
 }
 
 impl Arch {
+    /// Dense-only constructor (the original MLP spec): one activation
+    /// per layer, `widths.len() == acts.len() + 1`.
     pub fn new(widths: Vec<usize>, acts: Vec<Act>, loss: LossKind) -> Arch {
         assert_eq!(widths.len(), acts.len() + 1, "arch: need one act per layer");
         assert_eq!(
@@ -316,7 +398,40 @@ impl Arch {
             Act::Identity,
             "arch: last activation must be Identity (output link lives in the loss)"
         );
-        Arch { widths, acts, loss }
+        let layers = acts
+            .iter()
+            .enumerate()
+            .map(|(i, &act)| Layer::Dense { d_in: widths[i], d_out: widths[i + 1], act })
+            .collect();
+        Arch::from_layers(layers, loss)
+    }
+
+    /// General constructor from a typed layer sequence. Adjacent flat
+    /// dims must match; conv shapes must be geometrically valid.
+    pub fn from_layers(layers: Vec<Layer>, loss: LossKind) -> Arch {
+        assert!(!layers.is_empty(), "arch: at least one layer");
+        for (i, pair) in layers.windows(2).enumerate() {
+            assert_eq!(
+                pair[0].out_dim(),
+                pair[1].in_dim(),
+                "arch: layer {i} out_dim != layer {} in_dim",
+                i + 1
+            );
+        }
+        for l in &layers {
+            if let Some(s) = l.conv_shape() {
+                s.validate();
+            }
+        }
+        let last = layers.last().expect("arch: at least one layer");
+        assert!(
+            last.is_dense() && last.act() == Act::Identity,
+            "arch: last layer must be Dense with Identity activation"
+        );
+        let mut widths = Vec::with_capacity(layers.len() + 1);
+        widths.push(layers[0].in_dim());
+        widths.extend(layers.iter().map(|l| l.out_dim()));
+        Arch { layers, widths, loss }
     }
 
     /// Deep autoencoder: hidden activations `act`, linear code layer in
@@ -347,12 +462,29 @@ impl Arch {
 
     /// Number of layers ℓ.
     pub fn num_layers(&self) -> usize {
-        self.acts.len()
+        self.layers.len()
     }
 
-    /// Shape of `W_i` (0-based layer index): `d_{i+1} × (d_i + 1)`.
+    /// Activation of layer `i`.
+    pub fn act(&self, i: usize) -> Act {
+        self.layers[i].act()
+    }
+
+    /// Shape of `W_i` (0-based layer index). Dense: `d_{i+1} × (d_i+1)`;
+    /// conv: `out_c × (c_in·kh·kw + 1)`.
     pub fn weight_shape(&self, i: usize) -> (usize, usize) {
-        (self.widths[i + 1], self.widths[i] + 1)
+        self.layers[i].weight_shape()
+    }
+
+    /// Kronecker factor dims `(a, g)` of layer `i` (see
+    /// [`Layer::factor_dims`]).
+    pub fn factor_dims(&self, i: usize) -> (usize, usize) {
+        self.layers[i].factor_dims()
+    }
+
+    /// True if any layer is non-dense.
+    pub fn has_conv(&self) -> bool {
+        self.layers.iter().any(|l| !l.is_dense())
     }
 
     /// Total parameter count.
@@ -465,7 +597,40 @@ mod tests {
         assert_eq!(a.weight_shape(0), (4, 9));
         assert_eq!(a.weight_shape(3), (8, 5));
         assert_eq!(a.num_params(), 4 * 9 + 2 * 5 + 4 * 3 + 8 * 5);
-        assert_eq!(*a.acts.last().unwrap(), Act::Identity);
+        assert_eq!(a.act(a.num_layers() - 1), Act::Identity);
+        assert!(!a.has_conv());
+    }
+
+    #[test]
+    fn conv_arch_shapes_and_counts() {
+        let shape = ConvShape { in_h: 8, in_w: 8, in_c: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let a = Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 4, act: Act::Relu },
+                Layer::Dense { d_in: 4 * 4 * 4, d_out: 10, act: Act::Identity },
+            ],
+            LossKind::SoftmaxCe,
+        );
+        assert_eq!(a.widths, vec![64, 64, 10]);
+        assert_eq!(a.weight_shape(0), (4, 10)); // out_c × (1·3·3 + 1)
+        assert_eq!(a.factor_dims(0), (10, 4));
+        assert_eq!(a.weight_shape(1), (10, 65));
+        assert_eq!(a.num_params(), 4 * 10 + 10 * 65);
+        assert!(a.has_conv());
+        assert_eq!(a.layers[0].positions(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "out_dim != layer")]
+    fn from_layers_rejects_dim_mismatch() {
+        let shape = ConvShape { in_h: 8, in_w: 8, in_c: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let _ = Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 4, act: Act::Relu },
+                Layer::Dense { d_in: 99, d_out: 10, act: Act::Identity },
+            ],
+            LossKind::SoftmaxCe,
+        );
     }
 
     #[test]

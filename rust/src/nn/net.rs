@@ -1,18 +1,22 @@
 //! Forward / backward / linearized-forward passes (paper Algorithm 1 and
 //! Appendix C), batched over mini-batches.
 
-use super::{Arch, Params};
-use crate::linalg::{KronBasis, Mat};
+use super::{Arch, Layer, Params};
+use crate::linalg::{pack, KronBasis, Mat};
 use crate::rng::Rng;
 
-/// Cached forward-pass quantities for a mini-batch.
+/// Cached forward-pass quantities for a mini-batch of `m` cases.
 ///
-/// `abars[i]` is `Ā_i = [A_i, 1]` with one case per row — `abars[0]` is
-/// the (homogenized) input, and `abars[i]` for `i ≥ 1` the homogenized
-/// activities of layer `i`. `ss[i]` holds the pre-activations `S_{i+1}`
-/// of layer `i+1` (0-based), so `z = ss[ℓ-1]` are the output natural
-/// parameters.
+/// `abars[i]` is the layer's homogenized GEMM input: for a dense layer
+/// `Ā = [A, 1]` with one case per row (`m` rows); for a conv layer the
+/// im2col patch matrix (`m·P` rows, one receptive-field patch per
+/// output position, homogeneous coordinate last). `ss[i]` holds the
+/// layer-local pre-activations (`[m, d]` dense, `[m·P, out_c]` conv),
+/// so `z = ss[ℓ-1]` are the output natural parameters (the last layer
+/// is always dense).
 pub struct Fwd {
+    /// Mini-batch size (`abars[0].rows` only when layer 0 is dense).
+    pub m: usize,
     pub abars: Vec<Mat>,
     pub ss: Vec<Mat>,
 }
@@ -21,6 +25,73 @@ impl Fwd {
     /// Output natural parameters `z = s_ℓ`.
     pub fn z(&self) -> &Mat {
         self.ss.last().expect("empty network")
+    }
+
+    /// Weight-sharing positions `P` of layer `i` in this batch.
+    pub fn positions(&self, i: usize) -> usize {
+        self.ss[i].rows / self.m
+    }
+}
+
+impl Layer {
+    /// Homogenize a flat `[m, in_dim]` input into the layer's GEMM
+    /// operand: dense appends a `homog` column; conv extracts im2col
+    /// patches (`[m·P, K+1]`) with `homog` in the trailing column.
+    /// `homog` is 1 for activations and 0 for tangents (the derivative
+    /// of the constant coordinate).
+    fn capture(&self, x: &Mat, homog: f64) -> Mat {
+        match self {
+            Layer::Dense { .. } => {
+                let mut xb = Mat::zeros(x.rows, x.cols + 1);
+                xb.set_block(0, 0, x);
+                for r in 0..xb.rows {
+                    xb.set(r, x.cols, homog);
+                }
+                xb
+            }
+            Layer::Conv2d { shape, .. } => pack::im2col(x, *shape, homog),
+        }
+    }
+
+    /// Reshape a layer-local activation (`[m·P, out_c]`) to the flat
+    /// `[m, P·out_c]` boundary matrix — free in NHWC. Identity for
+    /// dense layers.
+    fn flatten_out(&self, a: Mat, m: usize) -> Mat {
+        match self {
+            Layer::Dense { .. } => a,
+            Layer::Conv2d { .. } => {
+                let cols = a.rows / m * a.cols;
+                Mat::from_vec(m, cols, a.data)
+            }
+        }
+    }
+
+    /// Inverse of [`flatten_out`](Self::flatten_out): flat boundary
+    /// `[m, P·out_c]` to the layer-local shape.
+    fn localize(&self, a: Mat, m: usize) -> Mat {
+        match self {
+            Layer::Dense { .. } => a,
+            Layer::Conv2d { shape, .. } => {
+                let p = shape.positions();
+                let cols = a.cols / p;
+                Mat::from_vec(m * p, cols, a.data)
+            }
+        }
+    }
+
+    /// Gradient w.r.t. the layer's flat input, from the layer-local
+    /// pre-activation gradient `g` and the layer's weight `w` (bias
+    /// column dropped): dense `g·W`; conv maps to patch space and
+    /// scatter-adds through the im2col adjoint.
+    fn input_grad(&self, g: &Mat, w: &Mat, m: usize) -> Mat {
+        let w_nob = w.drop_last_col();
+        match self {
+            Layer::Dense { .. } => g.matmul(&w_nob),
+            Layer::Conv2d { shape, .. } => {
+                let dpatch = g.matmul(&w_nob); // [m·P, K]
+                pack::col2im_acc(&dpatch, *shape, m)
+            }
+        }
     }
 }
 
@@ -40,34 +111,38 @@ impl Net {
         let l = self.arch.num_layers();
         assert_eq!(params.num_layers(), l);
         assert_eq!(x.cols, self.arch.widths[0], "input width mismatch");
+        let m = x.rows;
         let mut abars = Vec::with_capacity(l);
         let mut ss = Vec::with_capacity(l);
-        abars.push(x.append_ones_col());
+        let mut flat: Option<Mat> = None; // layer input at the flat boundary
         for i in 0..l {
-            let s = abars[i].matmul_nt(&params.0[i]); // [m, d_{i+1}]
+            let layer = &self.arch.layers[i];
+            let abar = layer.capture(flat.as_ref().unwrap_or(x), 1.0);
+            let s = abar.matmul_nt(&params.0[i]); // layer-local pre-activations
             if i + 1 < l {
-                let act = self.arch.acts[i];
+                let act = layer.act();
                 let a = Mat::from_fn(s.rows, s.cols, |r, c| act.apply(s.at(r, c)));
-                abars.push(a.append_ones_col());
+                flat = Some(layer.flatten_out(a, m));
             }
+            abars.push(abar);
             ss.push(s);
         }
-        Fwd { abars, ss }
+        Fwd { m, abars, ss }
     }
 
     /// Backward pass from per-case output derivatives `dz` (Algorithm 1,
-    /// backward half). Returns the per-case pre-activation derivatives
-    /// `gs[i] = G_i` (`[m, d_{i+1}]`, *not* scaled by 1/m).
+    /// backward half). Returns the layer-local pre-activation
+    /// derivatives `gs[i] = G_i` (`[m, d_{i+1}]` dense, `[m·P, out_c]`
+    /// conv; *not* scaled by 1/m).
     pub fn backward(&self, params: &Params, fwd: &Fwd, dz: &Mat) -> Vec<Mat> {
         let l = self.arch.num_layers();
         let mut gs = vec![Mat::zeros(0, 0); l];
         gs[l - 1] = dz.clone();
         for i in (0..l - 1).rev() {
-            // dA_i = G_{i+1} * W_{i+1}[:, :d_i]  (drop bias column)
-            let w_next = &params.0[i + 1];
-            let w_nob = w_next.drop_last_col();
-            let da = gs[i + 1].matmul(&w_nob); // [m, d_{i+1 widths}]
-            let act = self.arch.acts[i];
+            // dA_i (flat) = layer i+1's gradient w.r.t. its input.
+            let da_flat = self.arch.layers[i + 1].input_grad(&gs[i + 1], &params.0[i + 1], fwd.m);
+            let da = self.arch.layers[i].localize(da_flat, fwd.m);
+            let act = self.arch.act(i);
             let s = &fwd.ss[i];
             // g_i = dA_i ⊙ φ'(s_i); recompute a from s for the derivative.
             gs[i] = Mat::from_fn(da.rows, da.cols, |r, c| {
@@ -79,9 +154,11 @@ impl Net {
     }
 
     /// Mean gradient `∇_W h` from cached activations and `gs`:
-    /// `DW_i = (1/m) G_iᵀ Ā_{i-1}`.
+    /// `DW_i = (1/m) G_iᵀ Ā_{i-1}` — for conv layers the row index
+    /// runs over cases *and* positions, summing the weight-shared
+    /// contributions exactly as the chain rule requires.
     pub fn grads_from(&self, fwd: &Fwd, gs: &[Mat]) -> Params {
-        let m = fwd.abars[0].rows as f64;
+        let m = fwd.m as f64;
         Params(
             gs.iter()
                 .zip(fwd.abars.iter())
@@ -128,16 +205,33 @@ impl Net {
     ///
     /// `gs` must *not* be scaled by 1/m (the convention of
     /// [`Net::backward`]); one `d_out × (d_in+1)` matrix per layer.
+    /// For a conv layer the per-example gradient is a rank-`P` sum over
+    /// positions, `DW_n = Σ_t g_{n,t} ā_{n,t}ᵀ`, so the projected square
+    /// no longer factors into row-wise products: the `P`-row blocks are
+    /// projected, contracted per example, and only then squared.
     pub fn grad_sq_in_basis(&self, fwd: &Fwd, gs: &[Mat], bases: &[KronBasis]) -> Vec<Mat> {
         assert_eq!(gs.len(), bases.len(), "grad_sq_in_basis: one basis per layer");
-        let m = fwd.abars[0].rows as f64;
+        let m = fwd.m;
         gs.iter()
             .zip(fwd.abars.iter())
             .zip(bases.iter())
             .map(|((g, abar), b)| {
-                let gt = g.matmul(&b.ug); // [m, d_out], row n = (U_Gᵀ g_n)ᵀ
-                let at = abar.matmul(&b.ua); // [m, d_in+1], row n = (U_Aᵀ ā_n)ᵀ
-                gt.hadamard(&gt).matmul_tn(&at.hadamard(&at)).scale(1.0 / m)
+                let gt = g.matmul(&b.ug); // row n (or n·P+t) = (U_Gᵀ g)ᵀ
+                let at = abar.matmul(&b.ua); // row n (or n·P+t) = (U_Aᵀ ā)ᵀ
+                if g.rows == m {
+                    // dense: rank-1 per example, projection-first trick
+                    gt.hadamard(&gt).matmul_tn(&at.hadamard(&at)).scale(1.0 / m as f64)
+                } else {
+                    let p = g.rows / m;
+                    let mut acc = Mat::zeros(gt.cols, at.cols);
+                    for n in 0..m {
+                        let gb = gt.block(n * p, (n + 1) * p, 0, gt.cols);
+                        let ab = at.block(n * p, (n + 1) * p, 0, at.cols);
+                        let dw = gb.matmul_tn(&ab); // projected DW_n
+                        acc.axpy(1.0 / m as f64, &dw.hadamard(&dw));
+                    }
+                    acc
+                }
             })
             .collect()
     }
@@ -147,9 +241,12 @@ impl Net {
     /// activations cached in `fwd`. Returns `Jz` of shape `[m, d_ℓ]`.
     pub fn jvp(&self, params: &Params, fwd: &Fwd, v: &Params) -> Mat {
         let l = self.arch.num_layers();
-        let m = fwd.abars[0].rows;
-        // jabar: derivative of ā_i (homogeneous coord derivative is 0)
-        let mut jabar = Mat::zeros(m, self.arch.widths[0] + 1);
+        let m = fwd.m;
+        // jabar: derivative of Ā_i. The input's derivative is zero —
+        // and both homogenization and patch extraction are linear, so
+        // the tangent flows through `capture` with homog = 0 (the
+        // constant coordinate's derivative).
+        let mut jabar = Mat::zeros(fwd.abars[0].rows, fwd.abars[0].cols);
         let mut jz = Mat::zeros(0, 0);
         for i in 0..l {
             // js = Ā_{i-1} V_iᵀ + JĀ_{i-1} W_iᵀ
@@ -157,16 +254,15 @@ impl Net {
             let prop = jabar.matmul_nt(&params.0[i]);
             js.axpy(1.0, &prop);
             if i + 1 < l {
-                let act = self.arch.acts[i];
+                let layer = &self.arch.layers[i];
+                let act = layer.act();
                 let s = &fwd.ss[i];
-                let ja = Mat::from_fn(m, js.cols, |r, c| {
+                let ja = Mat::from_fn(js.rows, js.cols, |r, c| {
                     let sv = s.at(r, c);
                     js.at(r, c) * act.deriv(sv, act.apply(sv))
                 });
-                // append zero column for the constant homogeneous coord
-                let mut jab = Mat::zeros(m, ja.cols + 1);
-                jab.set_block(0, 0, &ja);
-                jabar = jab;
+                let ja_flat = layer.flatten_out(ja, m);
+                jabar = self.arch.layers[i + 1].capture(&ja_flat, 0.0);
             } else {
                 jz = js;
             }
@@ -212,6 +308,33 @@ mod tests {
 
     fn tiny_arch(loss: LossKind) -> Arch {
         Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], loss)
+    }
+
+    /// conv(5×5×2, 3×3, stride 2, pad 1) → 3×3×3 = 27 → dense 4.
+    fn tiny_conv_arch(loss: LossKind) -> Arch {
+        let shape = pack::ConvShape { in_h: 5, in_w: 5, in_c: 2, kh: 3, kw: 3, stride: 2, pad: 1 };
+        Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 3, act: Act::Tanh },
+                Layer::Dense { d_in: 27, d_out: 4, act: Act::Identity },
+            ],
+            loss,
+        )
+    }
+
+    /// Two stacked conv layers (exercises conv→conv propagation):
+    /// conv(6×6×1) → 6×6×2 → conv(6×6×2, stride 2) → 2×2×3 → dense 3.
+    fn deep_conv_arch(loss: LossKind) -> Arch {
+        let s1 = pack::ConvShape { in_h: 6, in_w: 6, in_c: 1, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let s2 = pack::ConvShape { in_h: 6, in_w: 6, in_c: 2, kh: 3, kw: 3, stride: 2, pad: 0 };
+        Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape: s1, out_c: 2, act: Act::Tanh },
+                Layer::Conv2d { shape: s2, out_c: 3, act: Act::Relu },
+                Layer::Dense { d_in: 12, d_out: 3, act: Act::Identity },
+            ],
+            loss,
+        )
     }
 
     fn make_targets(loss: LossKind, rows: usize, cols: usize, rng: &mut Rng) -> Mat {
@@ -355,6 +478,135 @@ mod tests {
             let scale = want.max_abs().max(1e-12);
             let err = got[i].sub(&want).max_abs() / scale;
             assert!(err < 1e-12, "layer {i}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn conv_gradient_matches_finite_difference() {
+        for arch in [
+            tiny_conv_arch(LossKind::SoftmaxCe),
+            tiny_conv_arch(LossKind::SquaredError),
+            deep_conv_arch(LossKind::SoftmaxCe),
+        ] {
+            let net = Net::new(arch.clone());
+            let mut rng = Rng::new(21);
+            let params = arch.glorot_init(&mut rng);
+            let m = 3;
+            let x = Mat::randn(m, arch.widths[0], 1.0, &mut rng);
+            let y = make_targets(arch.loss, m, *arch.widths.last().unwrap(), &mut rng);
+            let (_, grad) = net.loss_and_grad(&params, &x, &y);
+            let eps = 1e-6;
+            for li in 0..arch.num_layers() {
+                let len = params.0[li].rows * params.0[li].cols;
+                for idx in [0usize, 3, 7, len - 1] {
+                    let (r, c) = (idx / params.0[li].cols, idx % params.0[li].cols);
+                    let mut pp = params.clone();
+                    pp.0[li].set(r, c, params.0[li].at(r, c) + eps);
+                    let mut pm = params.clone();
+                    pm.0[li].set(r, c, params.0[li].at(r, c) - eps);
+                    let fd = (net.loss(&pp, &x, &y) - net.loss(&pm, &x, &y)) / (2.0 * eps);
+                    let g = grad.0[li].at(r, c);
+                    assert!(
+                        (fd - g).abs() < 1e-5 * (1.0 + g.abs()),
+                        "conv l{li} ({r},{c}) fd={fd} g={g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_jvp_matches_finite_difference() {
+        for arch in [tiny_conv_arch(LossKind::SquaredError), deep_conv_arch(LossKind::SquaredError)]
+        {
+            let net = Net::new(arch.clone());
+            let mut rng = Rng::new(22);
+            let params = arch.glorot_init(&mut rng);
+            let x = Mat::randn(3, arch.widths[0], 1.0, &mut rng);
+            let v = Params(
+                params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect(),
+            );
+            let fwd = net.forward(&params, &x);
+            let jz = net.jvp(&params, &fwd, &v);
+            let eps = 1e-6;
+            let mut pp = params.clone();
+            pp.axpy(eps, &v);
+            let mut pm = params.clone();
+            pm.axpy(-eps, &v);
+            let zp = net.forward(&pp, &x);
+            let zm = net.forward(&pm, &x);
+            let fd = zp.z().sub(zm.z()).scale(1.0 / (2.0 * eps));
+            assert!(fd.sub(&jz).max_abs() < 1e-6, "err={}", fd.sub(&jz).max_abs());
+        }
+    }
+
+    #[test]
+    fn conv_fvp_quad_consistent_with_fvp() {
+        let arch = tiny_conv_arch(LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(23);
+        let params = arch.glorot_init(&mut rng);
+        let x = Mat::randn(4, arch.widths[0], 1.0, &mut rng);
+        let mk = |rng: &mut Rng| {
+            Params(params.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, rng)).collect())
+        };
+        let u = mk(&mut rng);
+        let v = mk(&mut rng);
+        let q = net.fvp_quad(&params, &x, &[&u, &v]);
+        let fu = net.fvp(&params, &x, &u);
+        let fv = net.fvp(&params, &x, &v);
+        assert!((q.at(0, 0) - u.dot(&fu)).abs() < 1e-9);
+        assert!((q.at(0, 1) - u.dot(&fv)).abs() < 1e-9);
+        assert!((q.at(1, 1) - v.dot(&fv)).abs() < 1e-9);
+        assert!((u.dot(&fv) - v.dot(&fu)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_grad_sq_in_basis_matches_per_example_sums() {
+        // Conv per-example gradient is rank-P: DW_n = Σ_t g_{n,t} ā_{n,t}ᵀ.
+        // Materialize it per example, project as a matrix, square, average.
+        let arch = tiny_conv_arch(LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(24);
+        let params = arch.glorot_init(&mut rng);
+        let m = 4;
+        let x = Mat::randn(m, arch.widths[0], 1.0, &mut rng);
+        let fwd = net.forward(&params, &x);
+        let gs = net.sampled_backward(&params, &fwd, &mut rng);
+        let bases: Vec<KronBasis> = (0..arch.num_layers())
+            .map(|i| {
+                let (r, c) = arch.weight_shape(i);
+                KronBasis {
+                    ua: Mat::randn(c, c, 1.0, &mut rng),
+                    ug: Mat::randn(r, r, 1.0, &mut rng),
+                }
+            })
+            .collect();
+        let got = net.grad_sq_in_basis(&fwd, &gs, &bases);
+        for i in 0..arch.num_layers() {
+            let (r, c) = arch.weight_shape(i);
+            let p = gs[i].rows / m;
+            let mut want = Mat::zeros(r, c);
+            for n in 0..m {
+                let mut dw = Mat::zeros(r, c);
+                for t in 0..p {
+                    let row = n * p + t;
+                    for pr in 0..r {
+                        for q in 0..c {
+                            dw.set(
+                                pr,
+                                q,
+                                dw.at(pr, q) + gs[i].at(row, pr) * fwd.abars[i].at(row, q),
+                            );
+                        }
+                    }
+                }
+                let proj = bases[i].ug.matmul_tn(&dw).matmul(&bases[i].ua);
+                want.axpy(1.0 / m as f64, &proj.hadamard(&proj));
+            }
+            let scale = want.max_abs().max(1e-12);
+            let err = got[i].sub(&want).max_abs() / scale;
+            assert!(err < 1e-10, "layer {i}: rel err {err}");
         }
     }
 

@@ -1,0 +1,297 @@
+//! Dense-checked battery for the convolution layers and the KFC
+//! curvature (Grosse & Martens 2016), mirroring the regime
+//! `tests/ekfac_scales.rs` uses for EKFAC:
+//!
+//! - on data constructed to satisfy KFC's assumptions exactly
+//!   (rank-one patches, one active spatial position per case), the
+//!   factored block `Ω ⊗ Γ` equals the densely materialized
+//!   per-example Fisher block to 1e-10 relative — this pins the
+//!   `1/m` (sum over positions) Ω scaling and the `1/(mP)` Γ scaling
+//!   against the ground-truth definition;
+//! - a pointwise conv (1×1 input, 1×1 kernel) is mathematically a
+//!   dense layer: a full `kfac_kfc` run on the conv arch is
+//!   bit-identical to `kfac_blkdiag` on the equivalent dense arch;
+//! - on a real conv net the KFC quadratic form tracks the exact
+//!   per-example Fisher quadratic form within a loose multiplicative
+//!   band (the factorization is approximate; a positions-count
+//!   scaling bug would be off by ~P);
+//! - `kfac_kfc` trains the `conv_clf` problem end to end, sync and
+//!   async, and its optimizer state round-trips bit-exactly.
+
+use kfac::backend::RustBackend;
+use kfac::coordinator::session::Problem;
+use kfac::coordinator::TrainSession;
+use kfac::fisher::kfc::KfcInverse;
+use kfac::fisher::precond;
+use kfac::fisher::stats::RawStats;
+use kfac::fisher::FisherInverse;
+use kfac::linalg::kron::{kron, unvec, vec_mat};
+use kfac::linalg::pack::ConvShape;
+use kfac::linalg::Mat;
+use kfac::nn::net::{Fwd, Net};
+use kfac::nn::{Act, Arch, Layer, LossKind, Params};
+use kfac::optim::{BatchSchedule, Kfac, KfacConfig, Optimizer};
+use kfac::rng::Rng;
+
+/// Densely materialized per-example Fisher block of conv layer `i`:
+/// `F = (1/m) Σ_n vec(ΔW_n) vec(ΔW_n)ᵀ` with the rank-P per-example
+/// gradient `ΔW_n = Σ_t g_{n,t} ā_{n,t}ᵀ` (weight sharing sums over
+/// spatial positions; column-stacking vec).
+fn dense_conv_fisher_block(fwd: &Fwd, gs: &[Mat], i: usize) -> Mat {
+    let m = fwd.m;
+    let p = fwd.abars[i].rows / m;
+    let (rows, cols) = (gs[i].cols, fwd.abars[i].cols);
+    let n = rows * cols;
+    let mut f = Mat::zeros(n, n);
+    for case in 0..m {
+        let ab = fwd.abars[i].block(case * p, (case + 1) * p, 0, cols);
+        let gb = gs[i].block(case * p, (case + 1) * p, 0, rows);
+        let dw = gb.matmul_tn(&ab);
+        let v = vec_mat(&dw);
+        for a in 0..n {
+            for b in 0..n {
+                let acc = f.at(a, b) + v[a] * v[b] / m as f64;
+                f.set(a, b, acc);
+            }
+        }
+    }
+    f
+}
+
+#[test]
+fn kfc_factorization_is_exact_on_data_satisfying_its_assumptions() {
+    // ā_{n,t} = a0 for every case and position; g_{n,t} = b_n·g0 at one
+    // case-dependent position, zero elsewhere. Then the per-example
+    // gradient is rank one along (a0, g0) and the spatial sums
+    // factorize, so Ω ⊗ Γ must equal the dense per-example Fisher
+    // block exactly — any Ω/Γ normalization slip (1/m vs 1/(mP))
+    // breaks this identity by a factor of P.
+    let (m, p_pos, ka, dg) = (6usize, 4usize, 3usize, 2usize);
+    let a0 = [0.7, -1.3, 1.0]; // last coordinate plays the homogeneous 1
+    let g0 = [0.4, 2.0];
+    let b: Vec<f64> = (0..m).map(|n| 0.5 + n as f64).collect();
+    let abar = Mat::from_fn(m * p_pos, ka, |_, c| a0[c]);
+    let g = Mat::from_fn(m * p_pos, dg, |r, c| {
+        let (case, t) = (r / p_pos, r % p_pos);
+        if t == case % p_pos {
+            b[case] * g0[c]
+        } else {
+            0.0
+        }
+    });
+    let fwd = Fwd { m, abars: vec![abar], ss: Vec::new() };
+    let gs = vec![g];
+    let st = RawStats::from_batch(&fwd, &gs);
+    let f_dense = dense_conv_fisher_block(&fwd, &gs, 0);
+    let f_kfc = kron(&st.aa[0], &st.gg[0]);
+    let scale = f_dense.max_abs().max(1e-300);
+    let err = f_kfc.sub(&f_dense).max_abs() / scale;
+    assert!(err < 1e-10, "Ω ⊗ Γ must be exact here, rel err {err}");
+}
+
+#[test]
+fn kfc_factors_match_their_patchwise_definitions_on_a_real_conv_net() {
+    // On genuine forward/backward output (overlapping stride-1 patches,
+    // padding, the homogeneous column, P = 16 positions), the vectorized
+    // statistics must equal the definitional per-case/per-position sums
+    // `Ω = (1/m) Σ_n Σ_t ā ā ᵀ` and `Γ = (1/(mP)) Σ_n Σ_t g g ᵀ`
+    // computed by explicit loops.
+    let shape = ConvShape { in_h: 4, in_w: 4, in_c: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let arch = Arch::from_layers(
+        vec![
+            Layer::Conv2d { shape, out_c: 3, act: Act::Tanh },
+            Layer::Dense { d_in: 48, d_out: 4, act: Act::Identity },
+        ],
+        LossKind::SoftmaxCe,
+    );
+    let net = Net::new(arch.clone());
+    let mut rng = Rng::new(11);
+    let p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(64, arch.widths[0], 1.0, &mut rng);
+    let fwd = net.forward(&p, &x);
+    let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(12));
+    let st = RawStats::from_batch(&fwd, &gs);
+    let m = fwd.m;
+    let p_pos = fwd.abars[0].rows / m;
+    assert_eq!(p_pos, shape.positions(), "conv layer must capture one row per position");
+    let (ka, dg) = (fwd.abars[0].cols, gs[0].cols);
+    let mut omega = Mat::zeros(ka, ka);
+    let mut gamma = Mat::zeros(dg, dg);
+    for row in 0..m * p_pos {
+        for i in 0..ka {
+            for j in 0..ka {
+                let acc = omega.at(i, j) + fwd.abars[0].at(row, i) * fwd.abars[0].at(row, j);
+                omega.set(i, j, acc);
+            }
+        }
+        for i in 0..dg {
+            for j in 0..dg {
+                let acc = gamma.at(i, j) + gs[0].at(row, i) * gs[0].at(row, j);
+                gamma.set(i, j, acc);
+            }
+        }
+    }
+    let omega = omega.scale(1.0 / m as f64);
+    let gamma = gamma.scale(1.0 / (m * p_pos) as f64);
+    let oerr = st.aa[0].sub(&omega).max_abs() / omega.max_abs().max(1e-300);
+    let gerr = st.gg[0].sub(&gamma).max_abs() / gamma.max_abs().max(1e-300);
+    assert!(oerr < 1e-12, "Ω definition mismatch: rel err {oerr}");
+    assert!(gerr < 1e-12, "Γ definition mismatch: rel err {gerr}");
+    // the homogeneous corner of Ω is exactly the position count
+    assert_eq!(st.aa[0].at(ka - 1, ka - 1), p_pos as f64);
+}
+
+#[test]
+fn pointwise_conv_kfc_is_bit_identical_to_dense_blkdiag() {
+    // A 1×1 conv on a 1×1 spatial grid *is* a dense layer (P = 1, the
+    // im2col view is the identity). The whole kfac_kfc trajectory on
+    // the conv arch must therefore be bitwise the kfac_blkdiag
+    // trajectory on the equivalent dense arch — forward capture,
+    // statistics, damped inverses, and updates all reduce exactly.
+    let shape = ConvShape { in_h: 1, in_w: 1, in_c: 5, kh: 1, kw: 1, stride: 1, pad: 0 };
+    let conv_arch = Arch::from_layers(
+        vec![
+            Layer::Conv2d { shape, out_c: 4, act: Act::Tanh },
+            Layer::Dense { d_in: 4, d_out: 3, act: Act::Identity },
+        ],
+        LossKind::SoftmaxCe,
+    );
+    let dense_arch = Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+    let mut rng = Rng::new(21);
+    let init = dense_arch.glorot_init(&mut rng);
+    let x = Mat::randn(32, 5, 1.0, &mut rng);
+    let y = {
+        let net = Net::new(dense_arch.clone());
+        let fwd = net.forward(&init, &x);
+        // one-hot targets from the model's own argmax keep this test
+        // self-contained and deterministic
+        let probs = fwd.ss.last().unwrap();
+        Mat::from_fn(32, 3, |r, c| {
+            let row: Vec<f64> = (0..3).map(|j| probs.at(r, j)).collect();
+            let arg = (0..3).max_by(|&a, &b| row[a].total_cmp(&row[b])).unwrap();
+            if c == arg {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    };
+    let run = |arch: &Arch, pre: kfac::fisher::PrecondRef| {
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig { precond: pre, lambda0: 10.0, t_inv: 3, ..Default::default() };
+        let mut opt = Kfac::new(arch, cfg);
+        let mut params = init.clone();
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(opt.step(&mut backend, &mut params, &x, &y).loss);
+        }
+        (params, losses)
+    };
+    let (pc, lc) = run(&conv_arch, precond::from_name("kfc").expect("kfc registered"));
+    let (pd, ld) = run(&dense_arch, precond::from_name("blkdiag").unwrap());
+    assert_eq!(
+        lc.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        ld.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "loss trajectories diverged"
+    );
+    assert!(pc == pd, "final params diverged");
+}
+
+#[test]
+fn kfc_inverse_application_matches_dense_kron_on_conv_clf_arch() {
+    // Application check at the 1e-8 regime on the CLI-facing conv
+    // problem's real architecture.
+    let arch = Problem::ConvClf.arch();
+    let net = Net::new(arch.clone());
+    let mut rng = Rng::new(31);
+    let p = arch.glorot_init(&mut rng);
+    let x = Mat::randn(24, arch.widths[0], 1.0, &mut rng);
+    let fwd = net.forward(&p, &x);
+    let gs = net.sampled_backward(&p, &fwd, &mut Rng::new(32));
+    let st = RawStats::from_batch(&fwd, &gs);
+    let gamma = 0.3;
+    let inv = KfcInverse::build(&st, gamma);
+    let grads = Params(p.0.iter().map(|w| Mat::randn(w.rows, w.cols, 1.0, &mut rng)).collect());
+    let got = inv.apply(&grads);
+    // dense-check the conv layer only — the dense head is covered by
+    // the existing blockdiag battery
+    let (ad, gd) = kfac::fisher::damping::damped_factors(&st.aa[0], &st.gg[0], gamma);
+    let dense = kron(&ad, &gd).inverse();
+    let want = unvec(&dense.matvec(&vec_mat(&grads.0[0])), grads.0[0].rows, grads.0[0].cols);
+    let err = got.0[0].sub(&want).max_abs();
+    assert!(err < 1e-8, "conv layer application err {err}");
+}
+
+fn conv_clf_session(async_refresh: bool, iters: usize) -> kfac::coordinator::TrainReport {
+    let arch = Problem::ConvClf.arch();
+    let cfg = KfacConfig {
+        precond: precond::from_name("kfc").expect("kfc registered"),
+        lambda0: 15.0,
+        refresh_async: async_refresh,
+        ..Default::default()
+    };
+    let opt = Kfac::new(&arch, cfg);
+    TrainSession::for_problem(Problem::ConvClf)
+        .data(256, 3)
+        .iters(iters)
+        .schedule(BatchSchedule::Fixed(128))
+        .eval_every(5)
+        .eval_rows(128)
+        .seed(4)
+        .optimizer(opt)
+        .run()
+}
+
+#[test]
+fn kfac_kfc_trains_conv_clf_end_to_end_sync() {
+    let report = conv_clf_session(false, 20);
+    let first = report.log.first().unwrap().train_err;
+    let last = report.log.last().unwrap().train_err;
+    assert_eq!(report.iters_run, 20);
+    assert!(report.log.iter().all(|r| r.train_loss.is_finite()), "loss went non-finite");
+    assert!(last < first, "conv_clf error did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn kfac_kfc_trains_conv_clf_end_to_end_async() {
+    // KFAC_ASYNC=1 equivalent: epoch-tagged background rebuilds. The
+    // staleness contract makes the trajectory different from sync, but
+    // it must still train.
+    let report = conv_clf_session(true, 20);
+    let first = report.log.first().unwrap().train_err;
+    let last = report.log.last().unwrap().train_err;
+    assert_eq!(report.iters_run, 20);
+    assert!(report.log.iter().all(|r| r.train_loss.is_finite()), "loss went non-finite");
+    assert!(last <= first, "conv_clf (async) error increased: {first} -> {last}");
+}
+
+#[test]
+fn kfc_state_roundtrips_bit_exact_on_conv_arch() {
+    // KFC introduces no new optimizer-state keys: the standard KFACCKPT
+    // snapshot restores a conv-arch kfac_kfc run bit-exactly
+    // mid-interval (same contract `tests/session.rs` pins for dense).
+    let arch = Problem::ConvClf.arch();
+    let ds = kfac::data::mnist_like::classification_dataset(64, 16, 5);
+    let mut backend = RustBackend::new(arch.clone());
+    let cfg = KfacConfig {
+        precond: precond::from_name("kfc").unwrap(),
+        lambda0: 10.0,
+        t_inv: 4,
+        ..Default::default()
+    };
+    let mut opt_a = Kfac::new(&arch, cfg.clone());
+    let mut params_a = arch.sparse_init(&mut Rng::new(6));
+    for _ in 0..6 {
+        opt_a.step(&mut backend, &mut params_a, &ds.x, &ds.y);
+    }
+    let snapshot = opt_a.state();
+    let mut params_b = params_a.clone();
+    let mut opt_b = Kfac::new(&arch, cfg);
+    opt_b.load_state(&snapshot).expect("conv-arch kfc state loads");
+    for s in 0..5 {
+        let ia = opt_a.step(&mut backend, &mut params_a, &ds.x, &ds.y);
+        let ib = opt_b.step(&mut backend, &mut params_b, &ds.x, &ds.y);
+        assert_eq!(ia.loss.to_bits(), ib.loss.to_bits(), "loss diverged at step {s}");
+        assert!(params_a == params_b, "params diverged at step {s}");
+    }
+}

@@ -210,3 +210,76 @@ fn zero_and_identity_special_cases() {
     let z = Mat::zeros(260, 64);
     assert_eq!(a.matmul(&z).max_abs(), 0.0);
 }
+
+#[test]
+fn pack_seam_is_bit_identical_to_direct_indexing_on_many_shapes() {
+    // The packing layer is the seam the blocked GEMM and im2col share
+    // (`linalg::pack`). Packing is pure data movement, so routing it
+    // through the `PackSource` trait must reproduce the pre-seam direct
+    // slice indexing *bitwise* on the whole shape battery — for the
+    // normal, transposed (matmul_tn view: rs/cs swapped) and offset
+    // block geometries the GEMM drives it with.
+    use kfac::linalg::pack::{self, Strided};
+    let (mr, nr) = (4usize, 8usize);
+    let mut rng = Rng::new(7);
+    for (idx, &(m, k, n)) in shapes().iter().enumerate() {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        // offset sub-block on the larger shapes, full block otherwise
+        let (row0, p0, col0) = (m / 3, k / 3, n / 3);
+        let (mc, kc, nc) = (m - row0, k - p0, n - col0);
+        let panels_b = nc.div_ceil(nr);
+        for (rs, cs, src_rows) in [(a.cols, 1, m), (1, a.cols, k)] {
+            // (rs, cs) = (cols, 1) is the plain row-major view; (1, cols)
+            // is the transposed view matmul_tn packs through. With the
+            // transposed view the roles of m and k swap, so clamp the
+            // block to the view's extents.
+            let (mc_v, kc_v) = if src_rows == m { (mc, kc) } else { (kc, mc) };
+            let (row0_v, p0_v) = if src_rows == m { (row0, p0) } else { (p0, row0) };
+            let panels_v = mc_v.div_ceil(mr);
+            let mut got = vec![f64::NAN; panels_v * kc_v * mr];
+            let src = Strided::new(&a.data, rs, cs);
+            pack::pack_a(&mut got, mr, &src, row0_v, mc_v, p0_v, kc_v);
+            // pre-seam reference: direct slice indexing, same layout
+            let mut want = vec![f64::NAN; panels_v * kc_v * mr];
+            for ip in 0..panels_v {
+                let r0 = ip * mr;
+                let rows = mr.min(mc_v - r0);
+                for p in 0..kc_v {
+                    for r in 0..mr {
+                        let slot = ip * kc_v * mr + p * mr + r;
+                        want[slot] = if r < rows {
+                            a.data[(row0_v + r0 + r) * rs + (p0_v + p) * cs]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+            }
+            for (s, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "shape {idx} A-pack slot {s}");
+            }
+        }
+        let mut got = vec![f64::NAN; panels_b * kc * nr];
+        let src = Strided::new(&b.data, b.cols, 1);
+        pack::pack_b(&mut got, nr, &src, p0, kc, col0, nc);
+        let mut want = vec![f64::NAN; panels_b * kc * nr];
+        for jp in 0..panels_b {
+            let c0 = jp * nr;
+            let cols = nr.min(nc - c0);
+            for p in 0..kc {
+                for c in 0..nr {
+                    let slot = jp * kc * nr + p * nr + c;
+                    want[slot] = if c < cols {
+                        b.data[(p0 + p) * b.cols + (col0 + c0 + c)]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+        for (s, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "shape {idx} B-pack slot {s}");
+        }
+    }
+}
