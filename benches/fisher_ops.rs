@@ -6,7 +6,10 @@
 //! conv statistics + inverse refresh on the conv classifier, and the
 //! per-step overhead of a full K-FAC step vs SGD with the inverse
 //! rebuild amortized synchronously (t_inv) or hidden entirely behind
-//! the asynchronous background refresh (KFAC_ASYNC).
+//! the asynchronous background refresh (KFAC_ASYNC), plus the frontier
+//! structures (KPSVD builds/applies and the ikfac rank-k incremental
+//! update vs the full block-diagonal refactorization) at the paper's
+//! 8-layer autoencoder shapes.
 //!
 //! Results are written as JSON (`KFAC_BENCH_JSON`, default
 //! `BENCH_fisher_ops.json`) in the same schema as the linalg bench so
@@ -16,8 +19,13 @@ use kfac::backend::{ModelBackend, RustBackend};
 use kfac::bench::{bench, default_budget, write_results_json, BenchResult};
 use kfac::coordinator::Problem;
 use kfac::data::mnist_like;
+use kfac::fisher::ikfac::IkfacPrecond;
+use kfac::fisher::kpsvd::KpsvdPrecond;
 use kfac::fisher::stats::KfacStats;
-use kfac::fisher::{BlockDiagInverse, EkfacInverse, FisherInverse, KfcInverse, TridiagInverse};
+use kfac::fisher::{
+    BlockDiagInverse, EkfacInverse, FisherInverse, KfcInverse, Preconditioner, TridiagInverse,
+    UpdateOutcome,
+};
 use kfac::linalg::{KronBasis, SymEig};
 use kfac::nn::{Act, Arch};
 use kfac::optim::{Kfac, KfacConfig, Optimizer, Sgd, SgdConfig};
@@ -167,6 +175,56 @@ fn main() {
         results.push((r, None));
         println!("  {label} refresh: {} background stalls", opt.refresh_stalls());
     }
+
+    // Frontier structures at the paper's 8-layer autoencoder shapes:
+    // KPSVD full builds/applies, and the ikfac rank-k Woodbury
+    // correction vs the full block-diagonal refactorization it replaces
+    // (blockdiag_build(ae8) is the baseline the incremental update must
+    // beat).
+    let mut fr_backend = RustBackend::new(step_arch.clone());
+    let fr_params = step_arch.sparse_init(&mut Rng::new(1));
+    let (_, fr_grad, fr_raw) =
+        fr_backend.grad_and_stats(&fr_params, &step_ds.x, &step_ds.y, 256, 7);
+    let mut fr_stats = KfacStats::new(&step_arch);
+    fr_stats.update(&fr_raw);
+
+    let r = bench("blockdiag_build(ae8)", budget, || {
+        std::hint::black_box(BlockDiagInverse::build(&fr_stats.s, gamma));
+    });
+    results.push((r, None));
+    for rank in [1usize, 2] {
+        let kp = KpsvdPrecond::new(rank);
+        let r = bench(&format!("kpsvd_build_r{rank}(ae8)"), budget, || {
+            std::hint::black_box(kp.build(&fr_stats.s, gamma));
+        });
+        results.push((r, None));
+        let inv = kp.build(&fr_stats.s, gamma);
+        let r = bench(&format!("kpsvd_apply_r{rank}(ae8)"), budget, || {
+            std::hint::black_box(inv.apply(&fr_grad));
+        });
+        results.push((r, None));
+    }
+
+    // ikfac: snapshot the base statistics, drift them with one more
+    // batch, and time the rank-k correction against that fixed delta.
+    let fr_base = fr_stats.s.clone();
+    let mut ik_inv = IkfacPrecond::new(4, 1e300).build(&fr_base, gamma);
+    let (_, _, fr_raw2) =
+        fr_backend.grad_and_stats(&fr_params, &step_ds.x, &step_ds.y, 256, 8);
+    fr_stats.update(&fr_raw2);
+    let fr_delta = fr_stats.s.delta_from(&fr_base);
+    assert!(
+        matches!(ik_inv.update(&fr_delta, gamma), UpdateOutcome::Updated),
+        "ikfac must accept the drift delta it is benched on"
+    );
+    let r = bench("ikfac_update_k4(ae8)", budget, || {
+        std::hint::black_box(ik_inv.update(&fr_delta, gamma));
+    });
+    results.push((r, None));
+    let r = bench("ikfac_apply(ae8)", budget, || {
+        std::hint::black_box(ik_inv.apply(&fr_grad));
+    });
+    results.push((r, None));
 
     let path =
         std::env::var("KFAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_fisher_ops.json".to_string());

@@ -1,0 +1,270 @@
+//! Curvature-structure frontier — quality vs wall-clock for every
+//! registered preconditioner on one shared problem.
+//!
+//! For each structure in the registry (`blkdiag`, `blktridiag`,
+//! `ekfac`, `kfc`, `kpsvd`, `ikfac`, plus anything user-registered)
+//! the harness records, on a tiny all-dense autoencoder:
+//!
+//! - **refresh ms** — median cost of a full inverse build;
+//! - **apply ms** — median cost of preconditioning one gradient;
+//! - **dense residual** — `‖T·M − I‖_F / √n` where `M` is the
+//!   column-by-column densified inverse action and `T` the damped
+//!   Khatri–Rao target assembled from the same statistics (diagonal
+//!   blocks `Ā_i⊗G_i`, adjacent off blocks `Ā_{i,i+1}⊗G_{i,i+1}`, plus
+//!   `γ²I`) — small enough here to measure exactly;
+//! - **loss trajectory** — a short K-FAC run through the optimizer
+//!   seam, identical seeds/init/batches across structures.
+//!
+//! Structures whose `check_arch` rejects the problem are recorded as
+//! skipped with their own reason. Results go to `KFAC_FRONTIER_JSON`
+//! (default `BENCH_frontier.json`); the CI `frontier-smoke` step runs
+//! this at tiny scale and uploads the artifact.
+
+use kfac::backend::{ModelBackend, RustBackend};
+use kfac::bench::{bench, default_budget};
+use kfac::data::mnist_like;
+use kfac::fisher::kpsvd::KpsvdPrecond;
+use kfac::fisher::stats::KfacStats;
+use kfac::fisher::{precond, PrecondRef, RawStats};
+use kfac::linalg::kron::kron;
+use kfac::linalg::Mat;
+use kfac::nn::{Act, Arch, Params};
+use kfac::optim::{Kfac, KfacConfig, Optimizer};
+use kfac::rng::Rng;
+use std::io::Write as _;
+
+/// Densify the inverse action: column k of the returned matrix is
+/// `inv.apply(e_k)` under the global column-stacked indexing
+/// `offs[l] + c·d_out + r` (the same vec convention as
+/// `fisher::exact::ExactBlocks`).
+fn densify(
+    inv: &dyn kfac::fisher::FisherInverse,
+    shapes: &[(usize, usize)],
+    offs: &[usize],
+    n: usize,
+) -> Mat {
+    let mut m = Mat::zeros(n, n);
+    for (l, &(rows, cols)) in shapes.iter().enumerate() {
+        for c in 0..cols {
+            for r in 0..rows {
+                let mut e = Params(
+                    shapes.iter().map(|&(rr, cc)| Mat::zeros(rr, cc)).collect::<Vec<_>>(),
+                );
+                e.0[l].set(r, c, 1.0);
+                let y = inv.apply(&e);
+                let col = offs[l] + c * rows + r;
+                for (l2, &(rows2, cols2)) in shapes.iter().enumerate() {
+                    for c2 in 0..cols2 {
+                        for r2 in 0..rows2 {
+                            m.set(offs[l2] + c2 * rows2 + r2, col, y.0[l2].at(r2, c2));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Dense damped Khatri–Rao target from the optimizer's statistics:
+/// diagonal blocks `Ā_i⊗G_i`, adjacent off-diagonal blocks
+/// `Ā_{i,i+1}⊗G_{i,i+1}` (and transposes), plus `γ²` on the diagonal.
+fn dense_target(stats: &RawStats, offs: &[usize], n: usize, gamma: f64) -> Mat {
+    let mut t = Mat::zeros(n, n);
+    let set_block = |t: &mut Mat, ro: usize, co: usize, b: &Mat| {
+        for r in 0..b.rows {
+            for c in 0..b.cols {
+                t.set(ro + r, co + c, b.at(r, c));
+            }
+        }
+    };
+    for i in 0..stats.num_layers() {
+        let d = kron(&stats.aa[i], &stats.gg[i]);
+        set_block(&mut t, offs[i], offs[i], &d);
+    }
+    for i in 0..stats.aa_off.len() {
+        let o = kron(&stats.aa_off[i], &stats.gg_off[i]);
+        set_block(&mut t, offs[i], offs[i + 1], &o);
+        set_block(&mut t, offs[i + 1], offs[i], &o.transpose());
+    }
+    t.add_diag(gamma * gamma)
+}
+
+fn residual(inv: &dyn kfac::fisher::FisherInverse, t: &Mat, arch: &Arch) -> f64 {
+    let shapes: Vec<(usize, usize)> = (0..arch.num_layers()).map(|i| arch.weight_shape(i)).collect();
+    let mut offs = Vec::with_capacity(shapes.len());
+    let mut n = 0usize;
+    for &(r, c) in &shapes {
+        offs.push(n);
+        n += r * c;
+    }
+    let m = densify(inv, &shapes, &offs, n);
+    let tm = t.matmul(&m);
+    let mut err = 0.0f64;
+    for r in 0..n {
+        for c in 0..n {
+            let want = if r == c { 1.0 } else { 0.0 };
+            err += (tm.at(r, c) - want).powi(2);
+        }
+    }
+    (err / n as f64).sqrt()
+}
+
+/// Short K-FAC run through the optimizer seam: identical seeds, init
+/// and (full-batch) data for every structure.
+fn trajectory(
+    pre: PrecondRef,
+    arch: &Arch,
+    x: &Mat,
+    y: &Mat,
+    iters: usize,
+) -> Result<Vec<f64>, String> {
+    let cfg = KfacConfig {
+        precond: pre,
+        lambda0: 10.0,
+        t_inv: 5,
+        refresh_async: false,
+        ..Default::default()
+    };
+    let mut opt = Kfac::try_new(arch, cfg)?;
+    let mut backend = RustBackend::new(arch.clone());
+    let mut params = arch.sparse_init(&mut Rng::new(0xA5));
+    let mut losses = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        losses.push(opt.step(&mut backend, &mut params, x, y).loss);
+    }
+    Ok(losses)
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    println!("== Curvature-structure frontier ==");
+    let arch = Arch::autoencoder(&[16, 8, 4, 8, 16], Act::Tanh);
+    let n_data = kfac::experiments::scaled(256, 64);
+    let ds = mnist_like::autoencoder_dataset(n_data, 4, 0);
+    let iters = kfac::experiments::scaled(16, 10);
+    let gamma = 0.5;
+    let budget = default_budget();
+
+    let mut backend = RustBackend::new(arch.clone());
+    let params = arch.sparse_init(&mut Rng::new(1));
+    let (_, grad, raw) = backend.grad_and_stats(&params, &ds.x, &ds.y, ds.x.rows, 7);
+    let mut stats = KfacStats::new(&arch);
+    stats.update(&raw);
+
+    let shapes: Vec<(usize, usize)> = (0..arch.num_layers()).map(|i| arch.weight_shape(i)).collect();
+    let mut offs = Vec::with_capacity(shapes.len());
+    let mut n = 0usize;
+    for &(r, c) in &shapes {
+        offs.push(n);
+        n += r * c;
+    }
+    let target = dense_target(&stats.s, &offs, n, gamma);
+    println!("problem: tiny_ae {:?} ({n} params), gamma={gamma}", arch.widths);
+
+    struct Row {
+        name: String,
+        refresh_ms: f64,
+        apply_ms: f64,
+        dense_residual: f64,
+        loss: Vec<f64>,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    let mut skipped: Vec<(String, String)> = Vec::new();
+
+    for name in precond::names() {
+        let p = precond::from_name(&name).expect("registered name resolves");
+        if let Err(reason) = p.check_arch(&arch) {
+            println!("  {name}: skipped ({reason})");
+            skipped.push((name, reason));
+            continue;
+        }
+        let rb = bench(&format!("{name}_refresh(tiny_ae)"), budget, || {
+            std::hint::black_box(p.build(&stats.s, gamma));
+        });
+        let inv = p.build(&stats.s, gamma);
+        let ra = bench(&format!("{name}_apply(tiny_ae)"), budget, || {
+            std::hint::black_box(inv.apply(&grad));
+        });
+        let res = residual(inv.as_ref(), &target, &arch);
+        let loss = match trajectory(p.clone(), &arch, &ds.x, &ds.y, iters) {
+            Ok(l) => l,
+            Err(e) => {
+                println!("  {name}: skipped ({e})");
+                skipped.push((name, e));
+                continue;
+            }
+        };
+        println!(
+            "  {name}: refresh {:.3}ms apply {:.3}ms residual {res:.4e} \
+             loss {:.5} -> {:.5}",
+            rb.median_s * 1e3,
+            ra.median_s * 1e3,
+            loss.first().copied().unwrap_or(f64::NAN),
+            loss.last().copied().unwrap_or(f64::NAN),
+        );
+        rows.push(Row {
+            name,
+            refresh_ms: rb.median_s * 1e3,
+            apply_ms: ra.median_s * 1e3,
+            dense_residual: res,
+            loss,
+        });
+    }
+
+    // KPSVD rank sweep: on the exactly-Kronecker-rank-2 damped target
+    // the R=2 fit must be at least as good as R=1 (which is bitwise the
+    // factored-Tikhonov block-diagonal inverse).
+    let r1 = KpsvdPrecond::new(1).build(&stats.s, gamma);
+    let r2 = KpsvdPrecond::new(2).build(&stats.s, gamma);
+    let res1 = residual(r1.as_ref(), &target, &arch);
+    let res2 = residual(r2.as_ref(), &target, &arch);
+    println!("  kpsvd rank sweep: R=1 residual {res1:.4e}, R=2 residual {res2:.4e}");
+    assert!(
+        res2 <= res1 + 1e-9,
+        "kpsvd R=2 must fit the damped target at least as well as R=1: {res2} vs {res1}"
+    );
+
+    let path = std::env::var("KFAC_FRONTIER_JSON")
+        .unwrap_or_else(|_| "BENCH_frontier.json".to_string());
+    let mut f = std::fs::File::create(&path).expect("creating frontier json");
+    writeln!(f, "{{").unwrap();
+    writeln!(f, "  \"problem\": \"tiny_ae {:?}\",", arch.widths).unwrap();
+    writeln!(f, "  \"params\": {n},").unwrap();
+    writeln!(f, "  \"gamma\": {gamma},").unwrap();
+    writeln!(f, "  \"kpsvd_residual_r1\": {},", json_f64(res1)).unwrap();
+    writeln!(f, "  \"kpsvd_residual_r2\": {},", json_f64(res2)).unwrap();
+    writeln!(f, "  \"structures\": [").unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        let loss: Vec<String> = row.loss.iter().map(|&l| json_f64(l)).collect();
+        writeln!(
+            f,
+            "    {{\"name\": \"{}\", \"refresh_ms\": {}, \"apply_ms\": {}, \
+             \"dense_residual\": {}, \"loss\": [{}]}}{sep}",
+            row.name,
+            json_f64(row.refresh_ms),
+            json_f64(row.apply_ms),
+            json_f64(row.dense_residual),
+            loss.join(", ")
+        )
+        .unwrap();
+    }
+    writeln!(f, "  ],").unwrap();
+    writeln!(f, "  \"skipped\": [").unwrap();
+    for (i, (name, reason)) in skipped.iter().enumerate() {
+        let sep = if i + 1 == skipped.len() { "" } else { "," };
+        let reason = reason.replace('\\', "\\\\").replace('"', "\\\"");
+        writeln!(f, "    {{\"name\": \"{name}\", \"reason\": \"{reason}\"}}{sep}").unwrap();
+    }
+    writeln!(f, "  ]").unwrap();
+    writeln!(f, "}}").unwrap();
+    println!("wrote {path} ({} structures, {} skipped)", rows.len(), skipped.len());
+}

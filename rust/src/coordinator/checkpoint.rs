@@ -30,7 +30,12 @@
 //! of an in-flight inverse build, re-submitted on resume) — again no
 //! wire change, only new tagged entries. Snapshots without async state
 //! are still written as v2, so synchronous runs stay interchangeable
-//! with pre-split readers; this build reads v2 and v3.
+//! with pre-split readers. v4 adds the incremental-update record
+//! (`upd_*`: the stats/γ snapshot of the latest rank-k inverse
+//! correction an incremental preconditioner absorbed, replayed on top
+//! of the rebuilt base at resume) — written only when such a record is
+//! live, so non-incremental runs keep producing v2/v3 files; this build
+//! reads v2 through v4.
 
 use crate::linalg::Mat;
 use crate::nn::Params;
@@ -40,16 +45,24 @@ use std::path::Path;
 
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFACCKPT";
 pub const CHECKPOINT_VERSION: u32 = 2;
-/// Highest version this build writes: v3 when the optimizer state
-/// carries asynchronous-refresh entries, v2 otherwise.
+/// Version written when the optimizer state carries
+/// asynchronous-refresh entries (and nothing newer).
 pub const CHECKPOINT_VERSION_ASYNC: u32 = 3;
+/// Highest version this build writes: v4 when the optimizer state
+/// carries an incremental-update record (`upd_*`).
+pub const CHECKPOINT_VERSION_INCR: u32 = 4;
 
-/// The version a snapshot of `opt` must be written as: v3 only when
-/// async-refresh state is present, so synchronous runs keep producing
-/// v2 files readable by pre-split builds.
+/// The version a snapshot of `opt` must be written as: the lowest
+/// version whose vocabulary covers the live entries, so runs not using
+/// a feature keep producing files readable by older builds (v2 for
+/// plain synchronous runs, v3 with async-refresh state, v4 with an
+/// incremental-update record).
 pub fn version_for(opt: &OptState) -> u32 {
+    let incr_keys = ["upd_gamma", "upd_aa"];
     let async_keys = ["inv_epoch", "pending_gamma", "pending_aa"];
-    if async_keys.iter().any(|k| opt.entries.contains_key(*k)) {
+    if incr_keys.iter().any(|k| opt.entries.contains_key(*k)) {
+        CHECKPOINT_VERSION_INCR
+    } else if async_keys.iter().any(|k| opt.entries.contains_key(*k)) {
         CHECKPOINT_VERSION_ASYNC
     } else {
         CHECKPOINT_VERSION
@@ -95,6 +108,12 @@ pub const KNOWN_OPT_STATE_KEYS: &[&str] = &[
     "pending_gg_off",
     "pending_k",
     "refresh_stalls",
+    // Kfac incremental-update record (v4)
+    "upd_aa",
+    "upd_aa_off",
+    "upd_gamma",
+    "upd_gg",
+    "upd_gg_off",
 ];
 
 /// A full training snapshot.
@@ -320,10 +339,10 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, String> {
         return Err("not a kfac checkpoint (bad magic)".to_string());
     }
     let version = r.u32()?;
-    if !(CHECKPOINT_VERSION..=CHECKPOINT_VERSION_ASYNC).contains(&version) {
+    if !(CHECKPOINT_VERSION..=CHECKPOINT_VERSION_INCR).contains(&version) {
         return Err(format!(
             "unsupported checkpoint version {version} (this build reads \
-             {CHECKPOINT_VERSION}-{CHECKPOINT_VERSION_ASYNC})"
+             {CHECKPOINT_VERSION}-{CHECKPOINT_VERSION_INCR})"
         ));
     }
     let iter = r.u64()? as usize;
@@ -444,6 +463,26 @@ mod tests {
         with_pending.set_scalar("pending_gamma", 0.5);
         with_pending.set_mats("pending_aa", vec![Mat::eye(2)]);
         assert_eq!(version_for(&with_pending), CHECKPOINT_VERSION_ASYNC);
+        // the incremental-update record outranks async state
+        let mut with_upd = ck.opt.clone();
+        with_upd.set_scalar("upd_gamma", 0.5);
+        with_upd.set_mats("upd_aa", vec![Mat::eye(2)]);
+        assert_eq!(version_for(&with_upd), CHECKPOINT_VERSION_INCR);
+        with_upd.set_scalar("inv_epoch", 4.0);
+        assert_eq!(version_for(&with_upd), CHECKPOINT_VERSION_INCR);
+    }
+
+    #[test]
+    fn v4_checkpoints_roundtrip() {
+        let mut ck = sample();
+        ck.opt.set_scalar("upd_gamma", 0.25);
+        ck.opt.set_mats("upd_aa", vec![Mat::eye(3)]);
+        ck.opt.set_mats("upd_gg", vec![Mat::eye(2)]);
+        ck.version = version_for(&ck.opt);
+        assert_eq!(ck.version, CHECKPOINT_VERSION_INCR);
+        let back = from_bytes(&to_bytes(&ck)).unwrap();
+        assert_eq!(back.version, CHECKPOINT_VERSION_INCR);
+        assert_eq!(back.opt, ck.opt);
     }
 
     #[test]
@@ -461,9 +500,9 @@ mod tests {
 
     #[test]
     fn key_pin_is_consistent() {
-        // the v3-trigger keys must themselves be pinned writer keys
-        for k in ["inv_epoch", "pending_gamma", "pending_aa"] {
-            assert!(KNOWN_OPT_STATE_KEYS.contains(&k), "async key '{k}' missing from pin");
+        // the v3/v4-trigger keys must themselves be pinned writer keys
+        for k in ["inv_epoch", "pending_gamma", "pending_aa", "upd_gamma", "upd_aa"] {
+            assert!(KNOWN_OPT_STATE_KEYS.contains(&k), "version key '{k}' missing from pin");
         }
         // no duplicates (a duplicate would mask a forgotten rename)
         let mut seen = std::collections::BTreeSet::new();

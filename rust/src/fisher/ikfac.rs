@@ -1,0 +1,454 @@
+//! Iterative K-FAC — incremental inverse maintenance (Chen 2021,
+//! "Iterative K-FAC: accelerating K-FAC via online rank-k inverse
+//! corrections").
+//!
+//! A full K-FAC refresh pays two `O(n³)` factorizations per layer at
+//! every `t_inv` boundary even when the factor statistics barely moved
+//! between boundaries (the EMA makes consecutive factors differ by a
+//! heavily down-weighted batch). This structure keeps the inverses of
+//! a **base** factor snapshot and, at each boundary, absorbs the drift
+//!
+//! `Δ = damped(Ā_now, γ_now) − damped(Ā_base, γ_base)`
+//!
+//! by a memoryless rank-k Woodbury correction: with `V Λ Vᵀ` the top-k
+//! eigenpairs of `Δ` (deterministic subspace iteration,
+//! [`sym_topk`](crate::linalg::eig::sym_topk), `O(n²k)`),
+//!
+//! `(A_b + VΛVᵀ)⁻¹ = A_b⁻¹ − W (Λ⁻¹ + VᵀW)⁻¹ Wᵀ`,  `W = A_b⁻¹ V`.
+//!
+//! Corrections are always taken against the base snapshot (never
+//! chained), so the applied inverse is a pure function of
+//! `(base snapshot, latest stats snapshot, γ)` — which is exactly what
+//! lets checkpoint resume rebuild the base and replay one recorded
+//! update bit-for-bit. When the relative drift
+//! `max_i ‖Δᵢ‖_F / ‖damped baseᵢ‖_F` exceeds a threshold
+//! (`KFAC_IKFAC_DRIFT`, default 0.5) the update declines with
+//! [`UpdateOutcome::NeedsRebuild`] and the optimizer runs the ordinary
+//! full rebuild, which re-bases the structure. The correction rank is
+//! `KFAC_IKFAC_RANK` (default 4).
+//!
+//! Outside the sync single-process fast path (async refresh, γ line
+//! search, distributed sharded builds) the optimizer never offers
+//! deltas — those boundaries fall back to full builds, identical to
+//! block-diagonal behavior.
+
+use super::damping::damped_factors;
+use super::precond::Preconditioner;
+use super::stats::RawStats;
+use super::{FisherInverse, UpdateOutcome};
+use crate::linalg::chol::spd_inverse;
+use crate::linalg::eig::sym_topk;
+use crate::linalg::Mat;
+use crate::nn::Params;
+
+/// Subspace-iteration rounds inside [`sym_topk`] per factor. Fixed so
+/// the correction is a deterministic pure function of its inputs.
+const TOPK_ITERS: usize = 12;
+
+/// Relative eigenvalue floor below which drift directions are dropped.
+const TOPK_TOL: f64 = 1e-12;
+
+/// Cached base factorization plus the rank-k-corrected inverses the
+/// optimizer actually applies.
+pub struct IkfacInverse {
+    /// Raw (undamped) factor snapshot the base was built from.
+    base_aa: Vec<Mat>,
+    base_gg: Vec<Mat>,
+    /// Damped base factors (what the base inverses invert).
+    base_ad: Vec<Mat>,
+    base_gd: Vec<Mat>,
+    /// Inverses of the damped base factors.
+    base_ainv: Vec<Mat>,
+    base_ginv: Vec<Mat>,
+    /// Corrected inverses currently in effect (== base until the first
+    /// accepted update).
+    cur_ainv: Vec<Mat>,
+    cur_ginv: Vec<Mat>,
+    rank: usize,
+    drift_threshold: f64,
+}
+
+impl IkfacInverse {
+    /// Full (re)build: numerically identical per-layer work to
+    /// [`BlockDiagInverse::build`](super::BlockDiagInverse::build),
+    /// plus snapshotting the base for later corrections.
+    pub fn build(stats: &RawStats, gamma: f64, rank: usize, drift_threshold: f64) -> IkfacInverse {
+        let l = stats.num_layers();
+        let built = crate::par::par_map_send(l, 1, |i| {
+            super::check_factors_finite("ikfac", i, &stats.aa[i], &stats.gg[i]);
+            let (ad, gd) = damped_factors(&stats.aa[i], &stats.gg[i], gamma);
+            let ainv = spd_inverse(&ad);
+            let ginv = spd_inverse(&gd);
+            (ad, gd, ainv, ginv)
+        });
+        let mut base_ad = Vec::with_capacity(l);
+        let mut base_gd = Vec::with_capacity(l);
+        let mut base_ainv = Vec::with_capacity(l);
+        let mut base_ginv = Vec::with_capacity(l);
+        for (ad, gd, ainv, ginv) in built {
+            base_ad.push(ad);
+            base_gd.push(gd);
+            base_ainv.push(ainv);
+            base_ginv.push(ginv);
+        }
+        IkfacInverse {
+            base_aa: stats.aa.clone(),
+            base_gg: stats.gg.clone(),
+            base_ad,
+            base_gd,
+            cur_ainv: base_ainv.clone(),
+            cur_ginv: base_ginv.clone(),
+            base_ainv,
+            base_ginv,
+            rank,
+            drift_threshold,
+        }
+    }
+
+    /// Rank-k Woodbury correction of `base_inv = base⁻¹` toward
+    /// `(base + Δ)⁻¹`. `None` when the correction degenerates
+    /// numerically (caller falls back to a full rebuild).
+    fn woodbury(base_inv: &Mat, delta: &Mat, rank: usize) -> Option<Mat> {
+        let (lam, v) = sym_topk(delta, rank, TOPK_ITERS, TOPK_TOL);
+        if lam.is_empty() {
+            return Some(base_inv.clone());
+        }
+        let k = lam.len();
+        let w = base_inv.matmul(&v); // n×k
+        let mut s = v.matmul_tn(&w); // VᵀW, k×k
+        for (j, &l) in lam.iter().enumerate() {
+            s.set(j, j, s.at(j, j) + 1.0 / l);
+        }
+        let sinv = s.inverse();
+        if !sinv.all_finite() {
+            return None;
+        }
+        let corr = w.matmul(&sinv).matmul_nt(&w);
+        let out = base_inv.sub(&corr).symmetrize();
+        if out.all_finite() {
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+impl FisherInverse for IkfacInverse {
+    fn apply(&self, grads: &Params) -> Params {
+        Params(
+            grads
+                .0
+                .iter()
+                .enumerate()
+                .map(|(i, v)| self.cur_ginv[i].matmul(&v.matmul(&self.cur_ainv[i])))
+                .collect(),
+        )
+    }
+
+    fn update(&mut self, stats_delta: &RawStats, gamma: f64) -> UpdateOutcome {
+        let l = self.base_aa.len();
+        if stats_delta.aa.len() != l || stats_delta.gg.len() != l {
+            return UpdateOutcome::NeedsRebuild;
+        }
+        // Pass 1: form the damped-factor drifts and the trigger norm.
+        // Nothing is mutated until every layer's correction succeeds.
+        let mut deltas = Vec::with_capacity(l);
+        let mut drift = 0.0f64;
+        for i in 0..l {
+            let aa_now = self.base_aa[i].add(&stats_delta.aa[i]);
+            let gg_now = self.base_gg[i].add(&stats_delta.gg[i]);
+            if !aa_now.all_finite() || !gg_now.all_finite() {
+                return UpdateOutcome::NeedsRebuild;
+            }
+            let (ad_now, gd_now) = damped_factors(&aa_now, &gg_now, gamma);
+            let da = ad_now.sub(&self.base_ad[i]);
+            let dg = gd_now.sub(&self.base_gd[i]);
+            let ra = da.frob_norm() / self.base_ad[i].frob_norm().max(1e-300);
+            let rg = dg.frob_norm() / self.base_gd[i].frob_norm().max(1e-300);
+            drift = drift.max(ra).max(rg);
+            deltas.push((da, dg));
+        }
+        if !drift.is_finite() || drift > self.drift_threshold {
+            return UpdateOutcome::NeedsRebuild;
+        }
+        // Pass 2: rank-k corrections, all-or-nothing.
+        let mut corrected = Vec::with_capacity(l);
+        for (i, (da, dg)) in deltas.iter().enumerate() {
+            let ca = match Self::woodbury(&self.base_ainv[i], da, self.rank) {
+                Some(m) => m,
+                None => return UpdateOutcome::NeedsRebuild,
+            };
+            let cg = match Self::woodbury(&self.base_ginv[i], dg, self.rank) {
+                Some(m) => m,
+                None => return UpdateOutcome::NeedsRebuild,
+            };
+            corrected.push((ca, cg));
+        }
+        for (i, (ca, cg)) in corrected.into_iter().enumerate() {
+            self.cur_ainv[i] = ca;
+            self.cur_ginv[i] = cg;
+        }
+        UpdateOutcome::Updated
+    }
+}
+
+/// Correction rank from `KFAC_IKFAC_RANK` (default 4).
+pub fn rank_from_env() -> usize {
+    match std::env::var("KFAC_IKFAC_RANK") {
+        Err(_) => 4,
+        Ok(s) => match s.parse::<usize>() {
+            Ok(v) if v >= 1 => v,
+            _ => panic!("KFAC_IKFAC_RANK must be an integer ≥ 1 (got '{s}')"),
+        },
+    }
+}
+
+/// Rebuild trigger from `KFAC_IKFAC_DRIFT` (default 0.5): relative
+/// Frobenius drift above which `update` declines. `0` forces a full
+/// rebuild at every boundary (bit-identical to blkdiag trajectories).
+pub fn drift_from_env() -> f64 {
+    match std::env::var("KFAC_IKFAC_DRIFT") {
+        Err(_) => 0.5,
+        Ok(s) => match s.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => v,
+            _ => panic!("KFAC_IKFAC_DRIFT must be a finite number ≥ 0 (got '{s}')"),
+        },
+    }
+}
+
+/// Iterative K-FAC preconditioner: registered as `"ikfac"` (CLI
+/// `kfac_ikfac`).
+pub struct IkfacPrecond {
+    rank: usize,
+    drift: f64,
+}
+
+impl IkfacPrecond {
+    pub fn new(rank: usize, drift: f64) -> IkfacPrecond {
+        assert!(rank >= 1, "ikfac: correction rank must be ≥ 1 (got {rank})");
+        assert!(drift.is_finite() && drift >= 0.0, "ikfac: drift threshold must be ≥ 0");
+        IkfacPrecond { rank, drift }
+    }
+}
+
+impl Preconditioner for IkfacPrecond {
+    fn name(&self) -> &str {
+        "ikfac"
+    }
+
+    fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
+        Box::new(IkfacInverse::build(stats, gamma, self.rank, self.drift))
+    }
+
+    fn incremental(&self) -> bool {
+        true
+    }
+
+    fn layer_part_len(&self, stats: &RawStats, layer: usize) -> Option<usize> {
+        let a = stats.aa[layer].rows;
+        let g = stats.gg[layer].rows;
+        Some(a * a + g * g)
+    }
+
+    fn build_layer_part(&self, stats: &RawStats, gamma: f64, layer: usize) -> Vec<f64> {
+        // Mirrors IkfacInverse::build's per-layer closure exactly so a
+        // sharded refresh is bitwise identical to a replicated one.
+        super::check_factors_finite("ikfac", layer, &stats.aa[layer], &stats.gg[layer]);
+        let (ad, gd) = damped_factors(&stats.aa[layer], &stats.gg[layer], gamma);
+        let ainv = spd_inverse(&ad);
+        let ginv = spd_inverse(&gd);
+        let mut out = ainv.data;
+        out.extend_from_slice(&ginv.data);
+        out
+    }
+
+    fn assemble_parts(
+        &self,
+        stats: &RawStats,
+        gamma: f64,
+        parts: &[Vec<f64>],
+    ) -> Option<Box<dyn FisherInverse + Send>> {
+        if parts.len() != stats.num_layers() {
+            return None;
+        }
+        let mut base_ainv = Vec::with_capacity(parts.len());
+        let mut base_ginv = Vec::with_capacity(parts.len());
+        let mut base_ad = Vec::with_capacity(parts.len());
+        let mut base_gd = Vec::with_capacity(parts.len());
+        for (layer, part) in parts.iter().enumerate() {
+            let a = stats.aa[layer].rows;
+            let g = stats.gg[layer].rows;
+            if part.len() != a * a + g * g {
+                return None;
+            }
+            base_ainv.push(Mat::from_vec(a, a, part[..a * a].to_vec()));
+            base_ginv.push(Mat::from_vec(g, g, part[a * a..].to_vec()));
+            let (ad, gd) = damped_factors(&stats.aa[layer], &stats.gg[layer], gamma);
+            base_ad.push(ad);
+            base_gd.push(gd);
+        }
+        Some(Box::new(IkfacInverse {
+            base_aa: stats.aa.clone(),
+            base_gg: stats.gg.clone(),
+            base_ad,
+            base_gd,
+            cur_ainv: base_ainv.clone(),
+            cur_ginv: base_ginv.clone(),
+            base_ainv,
+            base_ginv,
+            rank: self.rank,
+            drift_threshold: self.drift,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fisher::stats::KfacStats;
+    use crate::nn::net::Net;
+    use crate::nn::{Act, Arch, LossKind};
+    use crate::rng::Rng;
+
+    fn toy_stats_pair() -> (Arch, RawStats, RawStats) {
+        // Two EMA snapshots of the same toy problem: `base` after one
+        // batch, `moved` after folding in a second batch.
+        let arch =
+            Arch::new(vec![5, 4, 3], vec![Act::Tanh, Act::Identity], LossKind::SoftmaxCe);
+        let net = Net::new(arch.clone());
+        let mut rng = Rng::new(1);
+        let p = arch.glorot_init(&mut rng);
+        let mut st = KfacStats::new(&arch);
+        for _ in 0..2 {
+            let x = Mat::randn(64, 5, 1.0, &mut rng);
+            let fwd = net.forward(&p, &x);
+            let gs = net.sampled_backward(&p, &fwd, &mut rng);
+            st.update(&RawStats::from_batch(&fwd, &gs));
+        }
+        let base = st.s.clone();
+        let x = Mat::randn(64, 5, 1.0, &mut rng);
+        let fwd = net.forward(&p, &x);
+        let gs = net.sampled_backward(&p, &fwd, &mut rng);
+        st.update(&RawStats::from_batch(&fwd, &gs));
+        (arch, base, st.s)
+    }
+
+    fn rand_grads(arch: &Arch, seed: u64) -> crate::nn::Params {
+        let mut rng = Rng::new(seed);
+        crate::nn::Params(
+            (0..arch.num_layers())
+                .map(|i| {
+                    let (r, c) = arch.weight_shape(i);
+                    Mat::randn(r, c, 1.0, &mut rng)
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn zero_delta_update_is_a_noop() {
+        let (arch, base, _) = toy_stats_pair();
+        let gamma = 0.5;
+        let mut inv = IkfacInverse::build(&base, gamma, 4, 0.0);
+        let g = rand_grads(&arch, 7);
+        let before = inv.apply(&g);
+        let zero = base.delta_from(&base);
+        assert_eq!(inv.update(&zero, gamma), UpdateOutcome::Updated);
+        let after = inv.apply(&g);
+        for (a, b) in before.0.iter().zip(after.0.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn drift_trigger_declines_without_mutation() {
+        let (arch, base, moved) = toy_stats_pair();
+        let gamma = 0.5;
+        // Threshold 0: any real drift must decline and leave the
+        // inverse untouched.
+        let mut inv = IkfacInverse::build(&base, gamma, 4, 0.0);
+        let g = rand_grads(&arch, 8);
+        let before = inv.apply(&g);
+        let delta = moved.delta_from(&base);
+        assert_eq!(inv.update(&delta, gamma), UpdateOutcome::NeedsRebuild);
+        let after = inv.apply(&g);
+        for (a, b) in before.0.iter().zip(after.0.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn accepted_update_moves_toward_full_rebuild() {
+        // The corrected inverse must be a strictly better proxy for
+        // the rebuilt inverse than the stale base inverse is.
+        let (arch, base, moved) = toy_stats_pair();
+        let gamma = 0.5;
+        let mut inv = IkfacInverse::build(&base, gamma, 6, f64::INFINITY);
+        let delta = moved.delta_from(&base);
+        assert_eq!(inv.update(&delta, gamma), UpdateOutcome::Updated);
+        let fresh = IkfacInverse::build(&moved, gamma, 6, f64::INFINITY);
+        let stale = IkfacInverse::build(&base, gamma, 6, f64::INFINITY);
+        let g = rand_grads(&arch, 9);
+        let (u_upd, u_fresh, u_stale) = (inv.apply(&g), fresh.apply(&g), stale.apply(&g));
+        let mut err_upd = 0.0;
+        let mut err_stale = 0.0;
+        for i in 0..arch.num_layers() {
+            err_upd += u_upd.0[i].sub(&u_fresh.0[i]).frob_norm().powi(2);
+            err_stale += u_stale.0[i].sub(&u_fresh.0[i]).frob_norm().powi(2);
+        }
+        assert!(
+            err_upd < err_stale,
+            "rank-k correction did not improve on the stale inverse: \
+             {err_upd} vs {err_stale}"
+        );
+    }
+
+    #[test]
+    fn full_rank_update_matches_full_rebuild() {
+        // With rank ≥ n the Woodbury correction is exact: applying the
+        // updated inverse must match a from-scratch rebuild at the new
+        // stats up to roundoff.
+        let (arch, base, moved) = toy_stats_pair();
+        let gamma = 0.8;
+        let max_dim = (0..arch.num_layers())
+            .map(|i| base.aa[i].rows.max(base.gg[i].rows))
+            .max()
+            .unwrap();
+        let mut inv = IkfacInverse::build(&base, gamma, max_dim, f64::INFINITY);
+        let delta = moved.delta_from(&base);
+        assert_eq!(inv.update(&delta, gamma), UpdateOutcome::Updated);
+        let fresh = IkfacInverse::build(&moved, gamma, max_dim, f64::INFINITY);
+        let g = rand_grads(&arch, 10);
+        let (u_upd, u_fresh) = (inv.apply(&g), fresh.apply(&g));
+        for i in 0..arch.num_layers() {
+            let rel = u_upd.0[i].sub(&u_fresh.0[i]).max_abs()
+                / (1.0 + u_fresh.0[i].max_abs());
+            assert!(rel < 1e-6, "layer {i}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn update_replay_is_deterministic() {
+        // Same (base, delta, γ) → bit-identical corrected inverse —
+        // the property checkpoint resume relies on.
+        let (arch, base, moved) = toy_stats_pair();
+        let gamma = 0.5;
+        let delta = moved.delta_from(&base);
+        let g = rand_grads(&arch, 11);
+        let mut run = || {
+            let mut inv = IkfacInverse::build(&base, gamma, 4, f64::INFINITY);
+            assert_eq!(inv.update(&delta, gamma), UpdateOutcome::Updated);
+            inv.apply(&g)
+        };
+        let (u1, u2) = (run(), run());
+        for (a, b) in u1.0.iter().zip(u2.0.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

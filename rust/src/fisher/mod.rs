@@ -13,25 +13,66 @@
 //! - [`kfc`]: Kronecker Factors for Convolution (Grosse & Martens
 //!   2016) — patch/spatially-averaged factor semantics for conv
 //!   layers, sharing the block-diagonal inverse machinery.
+//! - [`kpsvd`]: rank-R Kronecker-sum approximation `Σᵣ Aᵣ⊗Gᵣ` per
+//!   block (Koroko et al. 2022), fit by power iteration on the
+//!   Van Loan–Pitsianis rearrangement.
+//! - [`ikfac`]: iterative inverse maintenance (Chen 2021) — rank-k
+//!   Woodbury corrections against factor drift instead of full
+//!   refactorization at every `t_inv` boundary.
 //! - [`precond`]: the open [`Preconditioner`] seam + registry through
 //!   which the optimizer reaches all of the above (and external
 //!   structures can plug in).
 //! - [`exact`]: dense exact `F` and exact `F̃` over a layer range for
 //!   small networks — the substrate behind the Figure 2/3/5/6
 //!   structure experiments.
+//!
+//! # Optional capabilities
+//!
+//! [`FisherInverse`] and [`Preconditioner`] are deliberately small
+//! cores (`apply` / `build`) surrounded by **optional capability
+//! pairs**. Each pair has inert defaults so a minimal structure
+//! implements nothing extra, and each pair must be implemented
+//! *completely or not at all* (pinned by a registry-wide test in
+//! [`precond`]):
+//!
+//! - **Scale re-estimation** (EKFAC): [`FisherInverse::eigenbases`]
+//!   (default `None`) + [`FisherInverse::set_scales`] (default
+//!   `false`). The optimizer only projects per-example gradients when
+//!   `eigenbases()` is `Some`, and only swaps scales in when
+//!   `set_scales` accepts them.
+//! - **Incremental update** (iterative K-FAC):
+//!   [`Preconditioner::incremental`] (default `false`) +
+//!   [`FisherInverse::update`] (default
+//!   [`UpdateOutcome::NeedsRebuild`]). The optimizer only computes a
+//!   stats delta when the preconditioner opts in, and any `update` that
+//!   declines falls through to the ordinary full rebuild bit-for-bit.
+//! - **Sharded build** (distributed): `Preconditioner::layer_part_len`
+//!   (default `None`) + `build_layer_part` (default empty) +
+//!   `assemble_parts` (default `None`). `dist::sharded_build` falls
+//!   back to a replicated build whenever any layer's part length is
+//!   `None`.
+//! - **Architecture fencing**: `Preconditioner::check_arch` (default
+//!   `Ok`) is the one non-paired option — structures whose factor
+//!   semantics are only defined for dense layers (tridiag, EKFAC)
+//!   return a descriptive `Err` at construction time instead of
+//!   silently degrading on conv nets.
 
 pub mod blockdiag;
 pub mod damping;
 pub mod ekfac;
 pub mod exact;
+pub mod ikfac;
 pub mod kfc;
+pub mod kpsvd;
 pub mod precond;
 pub mod stats;
 pub mod tridiag;
 
 pub use blockdiag::BlockDiagInverse;
 pub use ekfac::EkfacInverse;
+pub use ikfac::IkfacInverse;
 pub use kfc::KfcInverse;
+pub use kpsvd::KpsvdInverse;
 pub use precond::{PrecondRef, Preconditioner};
 pub use stats::{KfacStats, RawStats};
 pub use tridiag::TridiagInverse;
@@ -56,6 +97,19 @@ pub(crate) fn check_factors_finite(structure: &str, layer: usize, aa: &Mat, gg: 
     );
 }
 
+/// Result of offering a stats delta to a cached [`FisherInverse`]
+/// (the incremental-update capability; see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateOutcome {
+    /// The cached inverse absorbed the delta in place; the optimizer
+    /// keeps it (with a bumped `inv_epoch`) instead of rebuilding.
+    Updated,
+    /// The structure cannot (or chooses not to) absorb this delta —
+    /// the optimizer must run the ordinary full rebuild. The inverse
+    /// MUST be left unmodified when returning this.
+    NeedsRebuild,
+}
+
 /// A built approximate inverse Fisher: applies `F₀⁻¹` to a
 /// gradient-shaped `Params` (i.e. computes the update proposal
 /// `Δ = -F₀⁻¹ ∇h` up to sign). Produced by a [`Preconditioner`] at
@@ -68,7 +122,7 @@ pub trait FisherInverse {
     /// for structures without one (the default). The optimizer hands
     /// these to `ModelBackend::grad_sq_in_basis` (the backend seam) to
     /// project per-example gradients for the amortized scale
-    /// re-estimation.
+    /// re-estimation. Paired with [`set_scales`](Self::set_scales).
     fn eigenbases(&self) -> Option<&[KronBasis]> {
         None
     }
@@ -76,8 +130,24 @@ pub trait FisherInverse {
     /// Replace the diagonal scales with externally re-estimated
     /// second moments `scales` (one weight-shaped matrix per layer),
     /// damped by `γ²`. Returns `false` when the structure has no
-    /// re-estimable scales (the default no-op).
+    /// re-estimable scales (the default no-op). Paired with
+    /// [`eigenbases`](Self::eigenbases).
     fn set_scales(&mut self, _scales: &[Mat], _gamma: f64) -> bool {
         false
+    }
+
+    /// Absorb a factor-statistics drift `stats_delta` (new EMA minus
+    /// the EMA this inverse was built/last rebuilt from) at damping
+    /// `gamma`, if the structure supports incremental maintenance.
+    /// The default declines, which the optimizer turns into the
+    /// ordinary full rebuild — so structures without an incremental
+    /// path need no code. Implementations must be deterministic pure
+    /// functions of `(built-from state, stats_delta, gamma)` and must
+    /// not mutate `self` when declining: checkpoint resume replays the
+    /// recorded delta against a freshly rebuilt base and requires
+    /// bit-identical results. Paired with
+    /// [`Preconditioner::incremental`](precond::Preconditioner::incremental).
+    fn update(&mut self, _stats_delta: &RawStats, _gamma: f64) -> UpdateOutcome {
+        UpdateOutcome::NeedsRebuild
     }
 }

@@ -15,10 +15,13 @@
 
 use super::blockdiag::BlockDiagInverse;
 use super::ekfac::EkfacInverse;
+use super::ikfac::IkfacPrecond;
 use super::kfc::KfcPrecond;
+use super::kpsvd::KpsvdPrecond;
 use super::stats::RawStats;
 use super::tridiag::TridiagInverse;
 use super::FisherInverse;
+use crate::nn::Arch;
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Shared handle to a (stateless) preconditioner factory.
@@ -35,6 +38,26 @@ pub trait Preconditioner {
     /// checkpoint resume rebuilds cached inverses through this method
     /// and relies on bit-identical results.
     fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send>;
+
+    /// Whether this structure's factor semantics are defined for
+    /// `arch`. The default accepts everything; structures whose
+    /// cross-layer or eigenbasis machinery is only validated for dense
+    /// nets (tridiag, EKFAC) return a descriptive `Err` here so the
+    /// optimizer can fail at construction time instead of silently
+    /// degrading (see "Optional capabilities" in [`super`]).
+    fn check_arch(&self, arch: &Arch) -> Result<(), String> {
+        let _ = arch;
+        Ok(())
+    }
+
+    /// Whether [`FisherInverse::update`] may accept stats deltas for
+    /// this structure (the incremental-update capability; default
+    /// `false`). When `true`, the optimizer offers the drift since the
+    /// last rebuild at each `t_inv` boundary before falling back to a
+    /// full `build`.
+    fn incremental(&self) -> bool {
+        false
+    }
 
     /// Flat length of layer `layer`'s independently-buildable part, or
     /// `None` if this structure cannot shard its build per layer (the
@@ -135,6 +158,20 @@ impl Preconditioner for TridiagPrecond {
     fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
         Box::new(TridiagInverse::build(stats, gamma))
     }
+
+    fn check_arch(&self, arch: &Arch) -> Result<(), String> {
+        if arch.has_conv() {
+            return Err(
+                "blktridiag is unsupported on conv architectures: the adjacent \
+                 off-diagonal factors Ā_{i,i+1}/G_{i,i+1} are identically zero for \
+                 any pair touching a conv layer, which silently degrades the \
+                 structure to block-diagonal at tridiagonal cost — use kfac_kfc or \
+                 kfac_blkdiag instead"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
 }
 
 /// EKFAC — diagonal rescaling in the Kronecker eigenbasis with exact
@@ -148,6 +185,18 @@ impl Preconditioner for EkfacPrecond {
 
     fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
         Box::new(EkfacInverse::build(stats, gamma))
+    }
+
+    fn check_arch(&self, arch: &Arch) -> Result<(), String> {
+        if arch.has_conv() {
+            return Err(
+                "ekfac is unsupported on conv architectures: the per-example \
+                 eigenbasis scale re-estimation is only validated for dense layers \
+                 — use kfac_kfc or kfac_blkdiag instead"
+                    .to_string(),
+            );
+        }
+        Ok(())
     }
 }
 
@@ -172,9 +221,26 @@ pub fn kfc() -> PrecondRef {
     Arc::new(KfcPrecond)
 }
 
+/// The KPSVD rank-R Kronecker-sum preconditioner (Koroko et al. 2022).
+/// Rank from `KFAC_KPSVD_RANK` (default 2; rank 1 is bitwise identical
+/// to `blkdiag`).
+pub fn kpsvd() -> PrecondRef {
+    Arc::new(KpsvdPrecond::new(super::kpsvd::rank_from_env()))
+}
+
+/// The iterative K-FAC preconditioner (Chen 2021): rank-k Woodbury
+/// inverse corrections between full rebuilds. Rank from
+/// `KFAC_IKFAC_RANK` (default 4), rebuild trigger from
+/// `KFAC_IKFAC_DRIFT` (default 0.5).
+pub fn ikfac() -> PrecondRef {
+    Arc::new(IkfacPrecond::new(super::ikfac::rank_from_env(), super::ikfac::drift_from_env()))
+}
+
 fn registry() -> &'static Mutex<Vec<PrecondRef>> {
     static REG: OnceLock<Mutex<Vec<PrecondRef>>> = OnceLock::new();
-    REG.get_or_init(|| Mutex::new(vec![block_diag(), block_tridiag(), ekfac(), kfc()]))
+    REG.get_or_init(|| {
+        Mutex::new(vec![block_diag(), block_tridiag(), ekfac(), kfc(), kpsvd(), ikfac()])
+    })
 }
 
 /// Register a preconditioner under its `name()`, replacing any
@@ -194,6 +260,35 @@ pub fn from_name(name: &str) -> Option<PrecondRef> {
 /// Names of all registered preconditioners (for CLI help/errors).
 pub fn names() -> Vec<String> {
     registry().lock().unwrap().iter().map(|p| p.name().to_string()).collect()
+}
+
+/// Resolve a CLI `--optimizer` value to a preconditioner through the
+/// registry: `"kfac"` is the paper's default (block-tridiagonal), and
+/// `"kfac_<name>"` selects any registered structure — built-in or
+/// plugged in via [`register`] — with zero per-structure CLI code. The
+/// `Err` lists the live registry contents so the usage message stays
+/// accurate as structures come and go. (`"sgd"` is not a
+/// preconditioner and is handled before this by the caller.)
+pub fn resolve_optimizer(optimizer: &str) -> Result<PrecondRef, String> {
+    let name = match optimizer {
+        "kfac" => "blktridiag",
+        other => match other.strip_prefix("kfac_") {
+            Some(rest) if !rest.is_empty() => rest,
+            _ => {
+                return Err(format!(
+                    "unknown optimizer '{optimizer}' (expected sgd, kfac, or kfac_<p> with \
+                     p one of: {})",
+                    names().join(", ")
+                ))
+            }
+        },
+    };
+    from_name(name).ok_or_else(|| {
+        format!(
+            "unknown preconditioner '{name}' in optimizer '{optimizer}' (registered: {})",
+            names().join(", ")
+        )
+    })
 }
 
 #[cfg(test)]
@@ -224,13 +319,152 @@ mod tests {
 
     #[test]
     fn builtins_are_registered() {
-        for name in ["blkdiag", "blktridiag", "ekfac", "kfc"] {
+        for name in ["blkdiag", "blktridiag", "ekfac", "kfc", "kpsvd", "ikfac"] {
             let p = from_name(name).unwrap_or_else(|| panic!("{name} not registered"));
             assert_eq!(p.name(), name);
         }
         assert!(from_name("nonexistent").is_none());
         let all = names();
         assert!(all.iter().any(|n| n == "ekfac"), "names() missing ekfac: {all:?}");
+    }
+
+    #[test]
+    fn resolve_optimizer_is_registry_driven() {
+        assert_eq!(resolve_optimizer("kfac").unwrap().name(), "blktridiag");
+        for name in ["blkdiag", "blktridiag", "ekfac", "kfc", "kpsvd", "ikfac"] {
+            let p = resolve_optimizer(&format!("kfac_{name}")).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        // strict parse: no prefix-matching, no empty suffix, and the
+        // error names the live registry so CLI help stays accurate
+        for bad in ["kfacx", "kfac_", "kfac_nope", "adam", ""] {
+            let err = resolve_optimizer(bad).unwrap_err();
+            assert!(err.contains("blkdiag"), "error for '{bad}' should list registry: {err}");
+        }
+        // a plugged-in structure is immediately CLI-reachable
+        struct ResolvePlug;
+        impl Preconditioner for ResolvePlug {
+            fn name(&self) -> &str {
+                "resolve-plug-test"
+            }
+            fn build(&self, stats: &RawStats, gamma: f64) -> Box<dyn FisherInverse + Send> {
+                Box::new(BlockDiagInverse::build(stats, gamma))
+            }
+        }
+        register(Arc::new(ResolvePlug));
+        assert_eq!(resolve_optimizer("kfac_resolve-plug-test").unwrap().name(), "resolve-plug-test");
+    }
+
+    #[test]
+    fn conv_fences_reject_at_construction_only_for_conv() {
+        use crate::linalg::pack::ConvShape;
+        use crate::nn::Layer;
+        let shape = ConvShape { in_h: 8, in_w: 8, in_c: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let conv_arch = Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 4, act: Act::Tanh },
+                Layer::Dense { d_in: 64, d_out: 10, act: Act::Identity },
+            ],
+            LossKind::SoftmaxCe,
+        );
+        let (dense_arch, _) = toy_stats();
+        let tri_err = block_tridiag().check_arch(&conv_arch).unwrap_err();
+        assert!(
+            tri_err.contains("unsupported on conv architectures"),
+            "tridiag fence message changed: {tri_err}"
+        );
+        let ek_err = ekfac().check_arch(&conv_arch).unwrap_err();
+        assert!(
+            ek_err.contains("unsupported on conv architectures"),
+            "ekfac fence message changed: {ek_err}"
+        );
+        // conv-capable structures and all-dense nets are unaffected
+        for name in names() {
+            let p = from_name(&name).unwrap();
+            assert!(
+                p.check_arch(&dense_arch).is_ok(),
+                "{name} must accept all-dense architectures"
+            );
+        }
+        for p in [block_diag(), kfc(), kpsvd(), ikfac()] {
+            assert!(p.check_arch(&conv_arch).is_ok(), "{} must accept conv", p.name());
+        }
+    }
+
+    #[test]
+    fn capability_pairs_are_all_or_nothing() {
+        // Every registered preconditioner must implement each optional
+        // capability pair completely or not at all (the convention
+        // documented in the fisher module docs).
+        let (arch, stats) = toy_stats();
+        let gamma = 0.5;
+        let l = stats.num_layers();
+        for name in names() {
+            let p = from_name(&name).unwrap();
+            if p.check_arch(&arch).is_err() {
+                continue;
+            }
+            // -- sharded-build trio --
+            let lens: Vec<Option<usize>> = (0..l).map(|i| p.layer_part_len(&stats, i)).collect();
+            let shardable = lens[0].is_some();
+            assert!(
+                lens.iter().all(|len| len.is_some() == shardable),
+                "{name}: layer_part_len must be Some for all layers or none"
+            );
+            if shardable {
+                let parts: Vec<Vec<f64>> =
+                    (0..l).map(|i| p.build_layer_part(&stats, gamma, i)).collect();
+                for (i, part) in parts.iter().enumerate() {
+                    assert_eq!(
+                        part.len(),
+                        lens[i].unwrap(),
+                        "{name}: build_layer_part length must match layer_part_len"
+                    );
+                }
+                let asm = p.assemble_parts(&stats, gamma, &parts);
+                assert!(asm.is_some(), "{name}: shardable but assemble_parts declined");
+            } else {
+                assert!(
+                    p.build_layer_part(&stats, gamma, 0).is_empty(),
+                    "{name}: non-shardable build_layer_part must stay inert"
+                );
+                assert!(
+                    p.assemble_parts(&stats, gamma, &[]).is_none(),
+                    "{name}: non-shardable assemble_parts must stay inert"
+                );
+            }
+            // -- incremental-update pair --
+            let mut inv = p.build(&stats, gamma);
+            let zero = stats.delta_from(&stats);
+            let outcome = inv.update(&zero, gamma);
+            if p.incremental() {
+                assert_eq!(
+                    outcome,
+                    crate::fisher::UpdateOutcome::Updated,
+                    "{name}: incremental() but update declined a zero delta"
+                );
+            } else {
+                assert_eq!(
+                    outcome,
+                    crate::fisher::UpdateOutcome::NeedsRebuild,
+                    "{name}: not incremental() but update accepted a delta"
+                );
+            }
+            // -- eigenbasis-scales pair --
+            let mut inv = p.build(&stats, gamma);
+            let has_bases = inv.eigenbases().is_some();
+            let scales: Vec<Mat> = (0..l)
+                .map(|i| {
+                    let (r, c) = arch.weight_shape(i);
+                    Mat::from_fn(r, c, |_, _| 1.0)
+                })
+                .collect();
+            let accepted = inv.set_scales(&scales, gamma);
+            assert_eq!(
+                has_bases, accepted,
+                "{name}: eigenbases()/set_scales must be implemented together"
+            );
+        }
     }
 
     #[test]
@@ -245,7 +479,7 @@ mod tests {
                 })
                 .collect(),
         );
-        for p in [block_diag(), block_tridiag(), ekfac(), kfc()] {
+        for p in [block_diag(), block_tridiag(), ekfac(), kfc(), kpsvd(), ikfac()] {
             let inv = p.build(&stats, 0.5);
             let u = inv.apply(&grads);
             assert_eq!(u.0.len(), grads.0.len(), "{}", p.name());

@@ -151,6 +151,23 @@ impl RawStats {
         }
         assert_eq!(i, src.len(), "read_flat: buffer length != flat_len()");
     }
+
+    /// Elementwise difference `self − base` over every factor matrix —
+    /// the "factor drift" the incremental-update capability
+    /// (`FisherInverse::update`) consumes. Shapes must match (same
+    /// architecture).
+    pub fn delta_from(&self, base: &RawStats) -> RawStats {
+        let diff = |xs: &[Mat], ys: &[Mat]| -> Vec<Mat> {
+            assert_eq!(xs.len(), ys.len(), "delta_from: layer count mismatch");
+            xs.iter().zip(ys.iter()).map(|(x, y)| x.sub(y)).collect()
+        };
+        RawStats {
+            aa: diff(&self.aa, &base.aa),
+            aa_off: diff(&self.aa_off, &base.aa_off),
+            gg: diff(&self.gg, &base.gg),
+            gg_off: diff(&self.gg_off, &base.gg_off),
+        }
+    }
 }
 
 /// Online exponentially-decayed estimates of the factor statistics.

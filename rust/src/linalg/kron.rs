@@ -64,6 +64,35 @@ pub fn unvec(v: &[f64], rows: usize, cols: usize) -> Mat {
     x
 }
 
+/// Van Loan–Pitsianis rearrangement `R(M)` of an `(na·ng)²` matrix
+/// viewed as an `na×na` grid of `ng×ng` blocks: row `j·na+i` of the
+/// output is `vec(block(i,j))ᵀ` (column-stacking `vec`, consistent
+/// with [`vec_mat`]), so
+///
+/// `R(A ⊗ B) = vec(A) vec(B)ᵀ`    and, in general,
+/// `‖M − Σᵣ Aᵣ⊗Gᵣ‖_F = ‖R(M) − Σᵣ vec(Aᵣ) vec(Gᵣ)ᵀ‖_F`.
+///
+/// The best rank-R Kronecker-sum approximation of `M` (KPSVD, Koroko
+/// et al. 2022) is therefore the rank-R truncated SVD of `R(M)`. Dense
+/// `rearrange` is test/experiment machinery — the KPSVD preconditioner
+/// power-iterates `R(M)` implicitly without forming it.
+pub fn rearrange(m: &Mat, na: usize, ng: usize) -> Mat {
+    assert_eq!(m.rows, na * ng, "rearrange: M must be (na·ng)²");
+    assert_eq!(m.cols, na * ng, "rearrange: M must be (na·ng)²");
+    let mut out = Mat::zeros(na * na, ng * ng);
+    for j in 0..na {
+        for i in 0..na {
+            let orow = j * na + i;
+            for l in 0..ng {
+                for k in 0..ng {
+                    out.set(orow, l * ng + k, m.at(i * ng + k, j * ng + l));
+                }
+            }
+        }
+    }
+    out
+}
+
 /// A Kronecker basis pair `U_A ⊗ U_G` for one layer's weight space.
 ///
 /// Follows the K-FAC convention of this module: `U_A` acts on the
@@ -129,6 +158,31 @@ mod tests {
         let mut rng = Rng::new(3);
         let x = Mat::randn(4, 6, 1.0, &mut rng);
         assert_eq!(unvec(&vec_mat(&x), 4, 6), x);
+    }
+
+    #[test]
+    fn rearrange_of_kron_is_rank_one_outer_product() {
+        // R(A ⊗ B) = vec(A) vec(B)ᵀ — the identity KPSVD rides on.
+        let mut rng = Rng::new(7);
+        for &(na, ng) in &[(3usize, 2usize), (2, 4), (4, 4), (1, 3)] {
+            let a = Mat::randn(na, na, 1.0, &mut rng);
+            let b = Mat::randn(ng, ng, 1.0, &mut rng);
+            let r = rearrange(&kron(&a, &b), na, ng);
+            let (va, vb) = (vec_mat(&a), vec_mat(&b));
+            for i in 0..na * na {
+                for j in 0..ng * ng {
+                    assert!((r.at(i, j) - va[i] * vb[j]).abs() < 1e-15, "({na},{ng}) [{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rearrange_preserves_frobenius_norm() {
+        let mut rng = Rng::new(8);
+        let m = Mat::randn(12, 12, 1.0, &mut rng);
+        let r = rearrange(&m, 3, 4);
+        assert!((r.frob_norm() - m.frob_norm()).abs() < 1e-12);
     }
 
     #[test]

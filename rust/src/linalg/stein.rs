@@ -65,6 +65,56 @@ impl KronPairInverse {
         // K2 T K1ᵀ
         self.k2.matmul(&t.matmul_nt(&self.k1))
     }
+
+    /// `(A-side dim, B-side dim)` of the factorization.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k1.rows, self.k2.rows)
+    }
+
+    /// Flat length of [`to_flat`](Self::to_flat) for given dims — the
+    /// layer-part size the sharded-build seam advertises.
+    pub fn flat_len(na: usize, ng: usize) -> usize {
+        na * na + ng * ng + na + ng + 1
+    }
+
+    /// Serialize the cached factorization as `k1 ‖ k2 ‖ s1 ‖ s2 ‖ sign`
+    /// (row-major matrices). Bit-exact: [`from_flat`](Self::from_flat)
+    /// reproduces identical `apply` results, which is what lets the
+    /// distributed sharded-build path broadcast factorizations instead
+    /// of re-deriving them per rank.
+    pub fn to_flat(&self) -> Vec<f64> {
+        let (na, ng) = self.dims();
+        let mut out = Vec::with_capacity(Self::flat_len(na, ng));
+        out.extend_from_slice(&self.k1.data);
+        out.extend_from_slice(&self.k2.data);
+        out.extend_from_slice(&self.s1);
+        out.extend_from_slice(&self.s2);
+        out.push(self.sign);
+        out
+    }
+
+    /// Inverse of [`to_flat`](Self::to_flat). `None` on length mismatch
+    /// or a sign that is not `±1.0` (corrupt part).
+    pub fn from_flat(na: usize, ng: usize, flat: &[f64]) -> Option<KronPairInverse> {
+        if flat.len() != Self::flat_len(na, ng) {
+            return None;
+        }
+        let (k1d, rest) = flat.split_at(na * na);
+        let (k2d, rest) = rest.split_at(ng * ng);
+        let (s1, rest) = rest.split_at(na);
+        let (s2, rest) = rest.split_at(ng);
+        let sign = rest[0];
+        if sign != 1.0 && sign != -1.0 {
+            return None;
+        }
+        Some(KronPairInverse {
+            k1: Mat::from_vec(na, na, k1d.to_vec()),
+            k2: Mat::from_vec(ng, ng, k2d.to_vec()),
+            s1: s1.to_vec(),
+            s2: s2.to_vec(),
+            sign,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +180,30 @@ mod tests {
         let want = unvec(&inv.matvec(&vec_mat(&x)), nb, na);
         let got = fast.apply(&x);
         assert!(got.sub(&want).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn flat_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(4);
+        let (na, nb) = (5, 3);
+        let a = random_spd(na, &mut rng, 0.4);
+        let b = random_spd(nb, &mut rng, 0.4);
+        let c = random_spd(na, &mut rng, 0.1);
+        let d = random_spd(nb, &mut rng, 0.1);
+        let orig = KronPairInverse::new(&a, &b, &c, &d, 1.0);
+        let flat = orig.to_flat();
+        assert_eq!(flat.len(), KronPairInverse::flat_len(na, nb));
+        let back = KronPairInverse::from_flat(na, nb, &flat).expect("roundtrip");
+        let x = Mat::randn(nb, na, 1.0, &mut rng);
+        let (y1, y2) = (orig.apply(&x), back.apply(&x));
+        for (p, q) in y1.data.iter().zip(y2.data.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        // corrupt parts are rejected, not misinterpreted
+        assert!(KronPairInverse::from_flat(na, nb, &flat[1..]).is_none());
+        let mut bad = flat.clone();
+        *bad.last_mut().unwrap() = 0.5;
+        assert!(KronPairInverse::from_flat(na, nb, &bad).is_none());
     }
 
     #[test]

@@ -123,12 +123,14 @@ fn list_archs(args: &Args) {
     }
 }
 
-/// Build the optimizer named by `--optimizer`: `sgd`, `kfac` (paper
-/// default, block-tridiagonal), or `kfac_<name>` for any registered
-/// preconditioner. In distributed runs `coll` is threaded into
-/// [`KfacConfig::collective`] so inverse rebuilds are sharded across
-/// ranks; SGD ignores it (its gradients are already all-reduced by the
-/// [`DistBackend`] wrapper).
+/// Build the optimizer named by `--optimizer`: `sgd`, or anything
+/// [`precond::resolve_optimizer`] accepts (`kfac` for the paper
+/// default, `kfac_<name>` for any registered preconditioner — the CLI
+/// has no per-structure code, so plugging a structure into the registry
+/// makes it trainable immediately). In distributed runs `coll` is
+/// threaded into [`KfacConfig::collective`] so inverse rebuilds are
+/// sharded across ranks; SGD ignores it (its gradients are already
+/// all-reduced by the [`DistBackend`] wrapper).
 fn build_optimizer(
     args: &Args,
     arch: &Arch,
@@ -142,42 +144,36 @@ fn build_optimizer(
             ..Default::default()
         }));
     }
-    let pname = match name.as_str() {
-        "kfac" => "blktridiag".to_string(),
-        other => match other.strip_prefix("kfac_") {
-            Some(p) => p.to_string(),
-            None => {
-                eprintln!("unknown --optimizer {other} (use sgd, kfac, or kfac_<precond>)");
-                std::process::exit(2);
-            }
-        },
-    };
-    let precond = precond::from_name(&pname).unwrap_or_else(|| {
-        eprintln!(
-            "unknown preconditioner '{pname}' (registered: {})",
-            precond::names().join(", ")
-        );
+    let precond = precond::resolve_optimizer(&name).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
         std::process::exit(2);
     });
     let defaults = KfacConfig::default();
-    Box::new(Kfac::new(
-        arch,
-        KfacConfig {
-            precond,
-            momentum: !args.get_flag("no-momentum"),
-            lambda0: args.get_f64("lambda0", 150.0),
-            // split refresh cadences: statistics accumulation vs
-            // inverse rebuild (KFAC_ASYNC=1 moves the rebuild to the
-            // background pool via KfacConfig::default)
-            t_cov: args.get_usize("t-cov", defaults.t_cov),
-            t_inv: args.get_usize("t-inv", defaults.t_inv),
-            // amortized EKFAC scale re-estimation cadence (ignored by
-            // structures without re-estimable scales)
-            t_scale: args.get_usize("t-scale", defaults.t_scale),
-            collective: coll,
-            ..defaults
-        },
-    ))
+    let cfg = KfacConfig {
+        precond,
+        momentum: !args.get_flag("no-momentum"),
+        lambda0: args.get_f64("lambda0", 150.0),
+        // split refresh cadences: statistics accumulation vs
+        // inverse rebuild (KFAC_ASYNC=1 moves the rebuild to the
+        // background pool via KfacConfig::default)
+        t_cov: args.get_usize("t-cov", defaults.t_cov),
+        t_inv: args.get_usize("t-inv", defaults.t_inv),
+        // amortized EKFAC scale re-estimation cadence (ignored by
+        // structures without re-estimable scales)
+        t_scale: args.get_usize("t-scale", defaults.t_scale),
+        collective: coll,
+        ..defaults
+    };
+    // structures whose factor semantics are undefined for this
+    // architecture (e.g. blktridiag/ekfac on conv) fail here, at
+    // construction, with the preconditioner's own explanation
+    match Kfac::try_new(arch, cfg) {
+        Ok(opt) => Box::new(opt),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

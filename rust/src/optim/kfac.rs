@@ -22,7 +22,7 @@
 
 use crate::backend::ModelBackend;
 use crate::fisher::precond;
-use crate::fisher::{FisherInverse, KfacStats, PrecondRef, RawStats};
+use crate::fisher::{FisherInverse, KfacStats, PrecondRef, RawStats, UpdateOutcome};
 use crate::linalg::Mat;
 use crate::nn::{Arch, Params};
 use crate::optim::optimizer::{check_dims, check_mat_shapes, OptState, Optimizer, StepInfo};
@@ -238,6 +238,13 @@ pub struct Kfac {
     /// The (stats, γ) snapshot the cached inverse was built from —
     /// checkpointed so resume can rebuild `inv` bit-exactly.
     refresh: Option<(RawStats, f64)>,
+    /// The latest incremental update absorbed by the cached inverse
+    /// (incremental preconditioners only): the `(stats, γ)` snapshot the
+    /// drift was measured at. Checkpointed so resume can rebuild the
+    /// base from `refresh` and replay this one delta — updates are
+    /// memoryless (always relative to the base), so one record suffices
+    /// for bit-exact resume no matter how many boundaries were absorbed.
+    upd: Option<(RawStats, f64)>,
     /// Re-estimated EKFAC scales applied on top of the cached inverse
     /// (checkpointed; re-applied after the rebuild on resume).
     scale: Option<ScaleState>,
@@ -246,10 +253,17 @@ pub struct Kfac {
 }
 
 impl Kfac {
-    pub fn new(arch: &Arch, cfg: KfacConfig) -> Kfac {
+    /// Construct, validating that the configured preconditioner's
+    /// factor semantics are defined for `arch`
+    /// ([`Preconditioner::check_arch`](crate::fisher::Preconditioner::check_arch)).
+    /// Structures like the block-tridiagonal or EKFAC reject conv
+    /// architectures here, at construction time, instead of silently
+    /// degrading during training.
+    pub fn try_new(arch: &Arch, cfg: KfacConfig) -> Result<Kfac, String> {
+        cfg.precond.check_arch(arch)?;
         let lambda = cfg.lambda0;
         let gamma = (lambda + cfg.eta).sqrt();
-        Kfac {
+        Ok(Kfac {
             cfg,
             stats: KfacStats::new(arch),
             lambda,
@@ -259,9 +273,19 @@ impl Kfac {
             pending: None,
             stalls: 0,
             refresh: None,
+            upd: None,
             scale: None,
             delta_prev: None,
             k: 0,
+        })
+    }
+
+    /// [`try_new`](Self::try_new), panicking on an architecture the
+    /// preconditioner rejects.
+    pub fn new(arch: &Arch, cfg: KfacConfig) -> Kfac {
+        match Self::try_new(arch, cfg) {
+            Ok(k) => k,
+            Err(e) => panic!("{e}"),
         }
     }
 
@@ -290,6 +314,19 @@ impl Kfac {
         self.inv = Some(inv);
         self.inv_epoch += 1;
         self.refresh = Some((snap, gamma));
+        self.upd = None;
+        self.scale = None;
+    }
+
+    /// Record that the cached inverse absorbed a stats delta in place
+    /// (incremental preconditioners): the epoch advances like any other
+    /// refresh, the base `refresh` record stays (updates are measured
+    /// against it), and the update snapshot is kept for checkpoint
+    /// replay. Re-estimated scales belong to the pre-update inverse, so
+    /// they reset like on a full rebuild.
+    fn install_update(&mut self, snap: RawStats, gamma: f64) {
+        self.inv_epoch += 1;
+        self.upd = Some((snap, gamma));
         self.scale = None;
     }
 
@@ -437,7 +474,30 @@ impl Optimizer for Kfac {
 
         // candidate γ set (Section 6.6)
         let adjust_gamma = !run_async && !dist_active && cfg.t2 > 0 && k % cfg.t2 == 0;
-        let refresh_inv = !run_async && !dist_active && (bootstrap || boundary);
+        let mut refresh_inv = !run_async && !dist_active && (bootstrap || boundary);
+
+        // (3b) incremental inverse maintenance: on a plain synchronous
+        // rebuild boundary (not bootstrap, not a T₂ γ-search boundary —
+        // the search needs per-candidate full rebuilds), an incremental
+        // preconditioner is offered the stats drift since its base
+        // refresh first. If the cached inverse absorbs it the expensive
+        // rebuild below is skipped; if it declines (drift trigger), the
+        // ordinary full rebuild runs unchanged.
+        if refresh_inv && !adjust_gamma && !bootstrap && cfg.precond.incremental() {
+            let absorbed = match (self.refresh.as_ref(), self.inv.as_mut()) {
+                (Some((base, _)), Some(inv)) => {
+                    let delta = self.stats.s.delta_from(base);
+                    matches!(inv.update(&delta, self.gamma), UpdateOutcome::Updated)
+                }
+                _ => false,
+            };
+            if absorbed {
+                let snap = self.stats.s.clone();
+                let gamma = self.gamma;
+                self.install_update(snap, gamma);
+                refresh_inv = false;
+            }
+        }
         let gammas: Vec<f64> = if adjust_gamma {
             vec![
                 self.gamma,
@@ -610,6 +670,15 @@ impl Optimizer for Kfac {
             st.set_mats("refresh_gg", snap.gg.clone());
             st.set_mats("refresh_gg_off", snap.gg_off.clone());
         }
+        if let Some((snap, g)) = &self.upd {
+            // Incremental-update record (checkpoint v4): resume rebuilds
+            // the base from the refresh keys and replays this one delta.
+            st.set_scalar("upd_gamma", *g);
+            st.set_mats("upd_aa", snap.aa.clone());
+            st.set_mats("upd_aa_off", snap.aa_off.clone());
+            st.set_mats("upd_gg", snap.gg.clone());
+            st.set_mats("upd_gg_off", snap.gg_off.clone());
+        }
         if let Some(sc) = &self.scale {
             st.set_scalar("scale_k", sc.k as f64);
             st.set_mats("scale_s", sc.s.clone());
@@ -701,6 +770,41 @@ impl Optimizer for Kfac {
                 self.inv = None;
                 self.refresh = None;
             }
+        }
+        // Replay the checkpointed incremental update (v4) on top of the
+        // freshly rebuilt base. Updates are memoryless (pure functions
+        // of base + delta + γ), so this single replay reproduces the
+        // running inverse bit-exactly.
+        self.upd = None;
+        if let (Some(ug), Some(uaa)) = (st.scalar("upd_gamma"), st.mats("upd_aa")) {
+            check_mat_shapes("upd_aa", uaa, &self.stats.s.aa)?;
+            let snap = RawStats {
+                aa: uaa.to_vec(),
+                aa_off: st.require_mats("upd_aa_off")?.to_vec(),
+                gg: st.require_mats("upd_gg")?.to_vec(),
+                gg_off: st.require_mats("upd_gg_off")?.to_vec(),
+            };
+            check_mat_shapes("upd_gg", &snap.gg, &self.stats.s.gg)?;
+            match (self.refresh.as_ref(), self.inv.as_mut()) {
+                (Some((base, _)), Some(inv)) => {
+                    let delta = snap.delta_from(base);
+                    if inv.update(&delta, ug) != UpdateOutcome::Updated {
+                        return Err(
+                            "kfac: cached inverse refused to replay the checkpointed \
+                             incremental update (preconditioner/env mismatch?)"
+                                .to_string(),
+                        );
+                    }
+                }
+                _ => {
+                    return Err(
+                        "kfac: checkpoint records an incremental update without the \
+                         refresh record it is relative to"
+                            .to_string(),
+                    )
+                }
+            }
+            self.upd = Some((snap, ug));
         }
         self.scale = match (st.scalar("scale_k"), st.mats("scale_s")) {
             (Some(sk), Some(ss)) => {
@@ -1130,5 +1234,95 @@ mod tests {
             Some(1.0),
             "swap resets the scale epoch; the k = 8 estimate re-seeds it"
         );
+    }
+
+    #[test]
+    fn ikfac_zero_drift_threshold_matches_blkdiag_bitwise() {
+        // With the drift trigger at 0 every incremental update declines,
+        // so every boundary falls through to the full rebuild — whose
+        // per-layer numerics (and apply formula) are identical to the
+        // block-diagonal structure. The trajectories must agree to the
+        // bit.
+        let run = |pre: PrecondRef| {
+            let (arch, mut params, x, y) = toy_problem(13);
+            let mut backend = RustBackend::new(arch.clone());
+            let cfg = KfacConfig {
+                precond: pre,
+                lambda0: 10.0,
+                t_inv: 3,
+                refresh_async: false,
+                ..Default::default()
+            };
+            let mut opt = Kfac::new(&arch, cfg);
+            let mut losses = Vec::new();
+            for _ in 0..10 {
+                losses.push(opt.step(&mut backend, &mut params, &x, &y).loss.to_bits());
+            }
+            (params, losses)
+        };
+        let (pa, la) = run(precond::block_diag());
+        let (pb, lb) = run(Arc::new(crate::fisher::ikfac::IkfacPrecond::new(4, 0.0)));
+        assert_eq!(la, lb, "loss trace must be bit-identical");
+        assert!(pa == pb, "params must be bit-identical");
+    }
+
+    #[test]
+    fn ikfac_incremental_update_state_roundtrip_is_bit_exact() {
+        // A snapshot taken after the cached inverse absorbed incremental
+        // updates must record them (checkpoint v4 keys) and restore to a
+        // bit-identical trajectory: resume rebuilds the base from the
+        // refresh record and replays the latest delta.
+        let pre: PrecondRef = Arc::new(crate::fisher::ikfac::IkfacPrecond::new(4, 1e300));
+        let (arch, mut params_a, x, y) = toy_problem(14);
+        let mut backend = RustBackend::new(arch.clone());
+        let cfg = KfacConfig {
+            precond: pre,
+            lambda0: 10.0,
+            t_inv: 4,
+            refresh_async: false,
+            ..Default::default()
+        };
+        let mut opt_a = Kfac::new(&arch, cfg.clone());
+        // boundaries at k = 4 and 8 engage the incremental hook (base
+        // refresh is the k = 3 bootstrap build); k = 9 snapshots with a
+        // live update record
+        for _ in 0..9 {
+            opt_a.step(&mut backend, &mut params_a, &x, &y);
+        }
+        assert!(opt_a.inverse_epoch() >= 5, "updates must advance the epoch tag");
+        let snapshot = opt_a.state();
+        assert!(snapshot.scalar("upd_gamma").is_some(), "update record must checkpoint");
+        assert!(snapshot.mats("upd_aa").is_some());
+        let mut params_b = params_a.clone();
+        let mut opt_b = Kfac::new(&arch, cfg);
+        opt_b.load_state(&snapshot).expect("state loads");
+        for s in 0..5 {
+            let ia = opt_a.step(&mut backend, &mut params_a, &x, &y);
+            let ib = opt_b.step(&mut backend, &mut params_b, &x, &y);
+            assert_eq!(ia.loss.to_bits(), ib.loss.to_bits(), "loss diverged at step {s}");
+            assert_eq!(ia.gamma, ib.gamma, "gamma diverged at step {s}");
+            assert!(params_a == params_b, "params diverged at step {s}");
+        }
+    }
+
+    #[test]
+    fn try_new_fences_unsupported_arch_at_construction() {
+        use crate::linalg::pack::ConvShape;
+        use crate::nn::Layer;
+        let shape = ConvShape { in_h: 8, in_w: 8, in_c: 1, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let conv_arch = Arch::from_layers(
+            vec![
+                Layer::Conv2d { shape, out_c: 4, act: Act::Tanh },
+                Layer::Dense { d_in: 64, d_out: 10, act: Act::Identity },
+            ],
+            LossKind::SoftmaxCe,
+        );
+        let err = Kfac::try_new(&conv_arch, KfacConfig::default())
+            .err()
+            .expect("default (blktridiag) config must be fenced on conv");
+        assert!(err.contains("unsupported on conv architectures"), "message changed: {err}");
+        assert!(Kfac::try_new(&conv_arch, KfacConfig::block_diag()).is_ok());
+        let (dense_arch, _, _, _) = toy_problem(1);
+        assert!(Kfac::try_new(&dense_arch, KfacConfig::default()).is_ok());
     }
 }

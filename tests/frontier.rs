@@ -1,0 +1,245 @@
+//! Curvature-structure frontier battery: the contracts that let the
+//! KPSVD and iterative-inverse newcomers share the Preconditioner
+//! registry with the original structures.
+//!
+//! - KPSVD at R=1 is *bitwise* the factored-Tikhonov block-diagonal
+//!   inverse; at R=2 its dense fit of the damped target is strictly
+//!   better (the target has exact Kronecker rank 2).
+//! - ikfac with drift threshold 0 rebuilds at every boundary, so its
+//!   whole training trajectory is bit-identical to `blkdiag`.
+//! - Both newcomers checkpoint/restore bit-exactly mid-run — ikfac
+//!   including a live incremental-update record (v4).
+//! - Both shard across ranks: `sharded_build` at any rank count
+//!   installs exactly the single-process inverse.
+
+use std::sync::Arc;
+
+use kfac::backend::{ModelBackend, RustBackend};
+use kfac::data::mnist_like;
+use kfac::dist::local::LocalGroup;
+use kfac::dist::sharded_build;
+use kfac::dist::trainer::{run_local_ranks, run_ranks_with};
+use kfac::fisher::ikfac::IkfacPrecond;
+use kfac::fisher::kpsvd::{fitted_dense, KpsvdPrecond};
+use kfac::fisher::{precond, PrecondRef, RawStats};
+use kfac::linalg::kron::kron;
+use kfac::nn::{Act, Arch, Params};
+use kfac::optim::{Kfac, KfacConfig, Optimizer};
+use kfac::rng::Rng;
+
+fn assert_params_bit_equal(a: &Params, b: &Params, what: &str) {
+    assert_eq!(a.0.len(), b.0.len(), "{what}: layer count");
+    for (i, (ma, mb)) in a.0.iter().zip(b.0.iter()).enumerate() {
+        assert_eq!(ma.data.len(), mb.data.len(), "{what}: layer {i} size");
+        for (j, (va, vb)) in ma.data.iter().zip(mb.data.iter()).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: layer {i} elem {j}: {va} != {vb}"
+            );
+        }
+    }
+}
+
+fn tiny_setup() -> (Arch, kfac::data::Dataset) {
+    let arch = Arch::autoencoder(&[16, 8, 4, 8, 16], Act::Tanh);
+    let ds = mnist_like::autoencoder_dataset(64, 4, 5);
+    (arch, ds)
+}
+
+fn tiny_stats(seed: u64) -> (Arch, Params, RawStats, Params) {
+    let (arch, ds) = tiny_setup();
+    let mut backend = RustBackend::new(arch.clone());
+    let params = arch.sparse_init(&mut Rng::new(seed));
+    let (_, grads, stats) = backend.grad_and_stats(&params, &ds.x, &ds.y, 32, 9);
+    (arch, params, stats, grads)
+}
+
+/// Run `iters` full-batch K-FAC steps with the given preconditioner and
+/// return (per-step loss bits, final params).
+fn run_trajectory(pre: PrecondRef, t_inv: usize, iters: usize) -> (Vec<u64>, Params) {
+    let (arch, ds) = tiny_setup();
+    let cfg = KfacConfig {
+        precond: pre,
+        lambda0: 5.0,
+        t_inv,
+        refresh_async: false,
+        ..Default::default()
+    };
+    let mut opt = Kfac::try_new(&arch, cfg).expect("dense arch accepted");
+    let mut backend = RustBackend::new(arch.clone());
+    let mut params = arch.sparse_init(&mut Rng::new(23));
+    let mut losses = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        losses.push(opt.step(&mut backend, &mut params, &ds.x, &ds.y).loss.to_bits());
+    }
+    (losses, params)
+}
+
+// ---------------------------------------------------------------------------
+// KPSVD rank contracts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kpsvd_r1_inverse_is_bitwise_blockdiag() {
+    let (_arch, _params, stats, grads) = tiny_stats(5);
+    for gamma in [0.1, 0.5, 2.0] {
+        let want = precond::block_diag().build(&stats, gamma).apply(&grads);
+        let got = KpsvdPrecond::new(1).build(&stats, gamma).apply(&grads);
+        assert_params_bit_equal(&want, &got, &format!("kpsvd R=1 apply, gamma={gamma}"));
+    }
+}
+
+#[test]
+fn kpsvd_r1_trajectory_is_bitwise_blockdiag() {
+    let (l_blk, p_blk) = run_trajectory(precond::block_diag(), 3, 8);
+    let (l_kp, p_kp) = run_trajectory(Arc::new(KpsvdPrecond::new(1)), 3, 8);
+    assert_eq!(l_blk, l_kp, "kpsvd R=1 loss trajectory diverged from blkdiag");
+    assert_params_bit_equal(&p_blk, &p_kp, "kpsvd R=1 final params");
+}
+
+#[test]
+fn kpsvd_r2_fit_is_strictly_better_than_r1() {
+    // The damped target Ā⊗G + γ²I⊗I has exact Kronecker rank 2, so the
+    // rank-2 rearrangement fit must beat the rank-1 fit on every layer
+    // with a nontrivial spectrum; aggregate strictly.
+    let (_arch, _params, stats, _grads) = tiny_stats(5);
+    let gamma = 0.7;
+    let (mut err1, mut err2) = (0.0f64, 0.0f64);
+    for i in 0..stats.num_layers() {
+        let target = kron(&stats.aa[i], &stats.gg[i]).add_diag(gamma * gamma);
+        for (r, err) in [(1usize, &mut err1), (2usize, &mut err2)] {
+            let fit = fitted_dense(&stats.aa[i], &stats.gg[i], gamma, r);
+            *err += target.sub(&fit).frob_norm().powi(2);
+        }
+    }
+    let (err1, err2) = (err1.sqrt(), err2.sqrt());
+    assert!(
+        err2 < err1 * 1e-6,
+        "R=2 must essentially nail the rank-2 target: R1 {err1:.3e} R2 {err2:.3e}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ikfac trajectory contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ikfac_zero_drift_threshold_trajectory_is_bitwise_blockdiag() {
+    // Threshold 0 declines every incremental update, so each t_inv
+    // boundary falls back to the full rebuild — which is numerically the
+    // block-diagonal factored-Tikhonov build.
+    let (l_blk, p_blk) = run_trajectory(precond::block_diag(), 4, 10);
+    let (l_ik, p_ik) = run_trajectory(Arc::new(IkfacPrecond::new(4, 0.0)), 4, 10);
+    assert_eq!(l_blk, l_ik, "ikfac drift=0 loss trajectory diverged from blkdiag");
+    assert_params_bit_equal(&p_blk, &p_ik, "ikfac drift=0 final params");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint roundtrips (bit-exact resume)
+// ---------------------------------------------------------------------------
+
+fn checkpoint_roundtrip_is_bit_exact(make_pre: impl Fn() -> PrecondRef, what: &str) {
+    let (arch, ds) = tiny_setup();
+    let cfg = || KfacConfig {
+        precond: make_pre(),
+        lambda0: 5.0,
+        t_inv: 4,
+        refresh_async: false,
+        ..Default::default()
+    };
+    let init = arch.sparse_init(&mut Rng::new(31));
+
+    let mut backend = RustBackend::new(arch.clone());
+    let mut opt = Kfac::try_new(&arch, cfg()).unwrap();
+    let mut params = init.clone();
+    for _ in 0..7 {
+        opt.step(&mut backend, &mut params, &ds.x, &ds.y);
+    }
+    let snap = opt.state();
+    let params_snap = params.clone();
+
+    // reference: keep stepping the original optimizer
+    let mut want_losses = Vec::new();
+    for _ in 0..5 {
+        want_losses.push(opt.step(&mut backend, &mut params, &ds.x, &ds.y).loss.to_bits());
+    }
+
+    // resume: fresh optimizer of the same configuration
+    let mut backend2 = RustBackend::new(arch.clone());
+    let mut opt2 = Kfac::try_new(&arch, cfg()).unwrap();
+    opt2.load_state(&snap).expect("restore");
+    let mut params2 = params_snap;
+    let mut got_losses = Vec::new();
+    for _ in 0..5 {
+        got_losses.push(opt2.step(&mut backend2, &mut params2, &ds.x, &ds.y).loss.to_bits());
+    }
+
+    assert_eq!(want_losses, got_losses, "{what}: post-restore loss trace diverged");
+    assert_params_bit_equal(&params, &params2, &format!("{what}: post-restore params"));
+}
+
+#[test]
+fn kpsvd_checkpoint_roundtrip_is_bit_exact() {
+    checkpoint_roundtrip_is_bit_exact(|| Arc::new(KpsvdPrecond::new(2)), "kpsvd R=2");
+}
+
+#[test]
+fn ikfac_checkpoint_roundtrip_is_bit_exact() {
+    // Huge drift threshold: every boundary past bootstrap takes the
+    // incremental Woodbury path, so the snapshot carries a live v4
+    // update record and restore exercises the replay.
+    checkpoint_roundtrip_is_bit_exact(|| Arc::new(IkfacPrecond::new(4, 1e300)), "ikfac");
+    let (arch, ds) = tiny_setup();
+    let cfg = KfacConfig {
+        precond: Arc::new(IkfacPrecond::new(4, 1e300)),
+        lambda0: 5.0,
+        t_inv: 4,
+        refresh_async: false,
+        ..Default::default()
+    };
+    let mut backend = RustBackend::new(arch.clone());
+    let mut opt = Kfac::try_new(&arch, cfg).unwrap();
+    let mut params = arch.sparse_init(&mut Rng::new(31));
+    for _ in 0..9 {
+        opt.step(&mut backend, &mut params, &ds.x, &ds.y);
+    }
+    let snap = opt.state();
+    assert!(snap.scalar("upd_gamma").is_some(), "expected a live incremental-update record");
+}
+
+// ---------------------------------------------------------------------------
+// Distributed sharding parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn newcomers_sharded_build_matches_plain_build_bitwise() {
+    let (_arch, _params, stats, grads) = tiny_stats(5);
+    let gamma = 0.3;
+    let cases: Vec<(&str, PrecondRef)> = vec![
+        ("kpsvd R=1", Arc::new(KpsvdPrecond::new(1))),
+        ("kpsvd R=2", Arc::new(KpsvdPrecond::new(2))),
+        ("ikfac", Arc::new(IkfacPrecond::new(4, 0.5))),
+    ];
+    for (what, p) in &cases {
+        let want = p.build(&stats, gamma).apply(&grads);
+        // ranks=1 must be the degenerate no-op path
+        let (p_ref, stats_ref, grads_ref) = (p, &stats, &grads);
+        let mut one = run_local_ranks(1, |_rank, coll| {
+            sharded_build(p_ref.as_ref(), stats_ref, gamma, coll.as_ref())
+                .expect("ranks=1 build")
+                .apply(grads_ref)
+        });
+        assert_params_bit_equal(&want, &one.remove(0), &format!("{what}, ranks=1"));
+        for n in [2usize, 3] {
+            let outs = run_ranks_with(LocalGroup::create(n), &|_rank, coll| {
+                sharded_build(p_ref.as_ref(), stats_ref, gamma, coll.as_ref())
+                    .expect("sharded build")
+                    .apply(grads_ref)
+            });
+            for (rank, got) in outs.iter().enumerate() {
+                assert_params_bit_equal(&want, got, &format!("{what}, {n}-rank, rank {rank}"));
+            }
+        }
+    }
+}
